@@ -1,0 +1,55 @@
+"""Paper Fig. 2 — kernel precision heatmap.
+
+Reproduces the three map configurations (80D:20S, 50D:50S, 20D:80S) for a
+102,400² matrix at tile 1,024 (the paper's exact setting), verifies the
+class ratios, and renders ASCII heatmaps of a 32×32 corner.  Also reports
+the storage bytes/elem and the static load-balance achieved by the
+balanced-map generator (the SPMD analogue of PaRSEC's dynamic balance).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import make_map, map_ratio_string, map_storage_bytes
+from repro.core import schedule
+from repro.core.precision import PAPER_RATIOS, PrecClass
+
+
+def run(matrix: int = 102_400, tile: int = 1_024):
+    rows = []
+    for name in ("80D:20S", "50D:50S", "20D:80S"):
+        pol = PAPER_RATIOS[name]
+        t0 = time.perf_counter()
+        m = make_map((matrix, matrix), tile, pol)
+        dt = time.perf_counter() - t0
+        bytes_per_elem = map_storage_bytes(m, tile) / (matrix * matrix)
+        imb_random = schedule.imbalance(m, 16, 16)
+        bal = schedule.balanced_ratio_map(m.shape[0], m.shape[1], pol,
+                                          16, 16)
+        imb_bal = schedule.imbalance(bal, 16, 16)
+        rows.append((name, map_ratio_string(m), bytes_per_elem,
+                     imb_random, imb_bal, dt))
+        print(f"\n=== {name} (tile grid {m.shape[0]}x{m.shape[1]}) ===")
+        for i in range(32):
+            print("".join("#" if m[i, j] == int(PrecClass.HIGH) else "."
+                          for j in range(32)))
+    print(f"\n{'config':10s} {'realized':10s} {'B/elem':>7s} "
+          f"{'imb(random)':>12s} {'imb(balanced)':>14s}")
+    for name, real, bpe, ir, ib, dt in rows:
+        print(f"{name:10s} {real:10s} {bpe:7.2f} {ir:12.3f} {ib:14.3f}")
+    return rows
+
+
+def bench():
+    """CSV row for benchmarks.run."""
+    t0 = time.perf_counter()
+    m = make_map((102_400, 102_400), 1_024, PAPER_RATIOS["50D:50S"])
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig2_map_102400_t1024", us,
+             f"bytes/elem={map_storage_bytes(m, 1024)/102_400**2:.2f}")]
+
+
+if __name__ == "__main__":
+    run()

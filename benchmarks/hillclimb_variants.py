@@ -1,0 +1,124 @@
+"""Hillclimb variant measurements (EXPERIMENTS.md §Perf cells A and C)
+without touching the registry configs.  Run:
+
+    PYTHONPATH=src python benchmarks/hillclimb_variants.py <variant>
+
+Variants: decode_base decode_kvdup 405b_mb8 405b_ratio25 405b_ratio25_mb8
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as CB
+from repro.configs import get, load_all
+from repro.core.precision import Policy
+from repro.data.pipeline import batch_spec
+from repro.launch import sharding as SH
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.shard_hints import hints_enabled
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+load_all()
+
+
+def measure_decode(cfg, name, gb=128, seq=32768):
+    mesh = make_production_mesh()
+    ps = jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    pspecs = SH.param_specs(ps, cfg, mesh)
+    cache_shapes = jax.eval_shape(lambda: T.init_cache(cfg, gb, seq))
+    cspecs = SH.cache_specs(cache_shapes, cfg, mesh, batch=gb)
+    tok = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+    tspec = SH.batch_specs({"t": tok}, mesh)["t"] if gb > 1 \
+        else jax.sharding.PartitionSpec()
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    with mesh, hints_enabled(mesh):
+        compiled = jax.jit(
+            lambda p, t, c, po: T.forward_decode(p, cfg, t, c, po),
+            in_shardings=(SH.to_named(pspecs, mesh),
+                          SH.to_named(tspec, mesh),
+                          SH.to_named(cspecs, mesh),
+                          SH.to_named(jax.sharding.PartitionSpec(), mesh)),
+            donate_argnums=(2,)).lower(
+                ps, tok, cache_shapes, pos).compile()
+    a = hlo_analysis.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    out = {
+        "name": name,
+        "mxu_flops": a["mxu_flops"], "flops": a["flops"],
+        "dot_bytes": a["dot_bytes"],
+        "coll_bytes": a["collectives"]["total_bytes"],
+        "coll": {k: v for k, v in a["collectives"].items()
+                 if isinstance(v, dict)},
+        "peak_gb": (mem.temp_size_in_bytes
+                    + mem.argument_size_in_bytes) / 2**30,
+    }
+    print(json.dumps(out, indent=1, default=float))
+    return out
+
+
+def measure_train(cfg, name, mb, gb=256, seq=4096, n_chips=256):
+    mesh = make_production_mesh()
+    ps = jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    pspecs = SH.param_specs(ps, cfg, mesh)
+    ocfg = adamw.AdamWConfig(master_weights=False, moment_dtype="bfloat16") \
+        if cfg.fsdp else adamw.AdamWConfig()
+    osh = jax.eval_shape(lambda p: adamw.init(p, ocfg), ps)
+    ospecs = SH.opt_state_specs(ps, pspecs, ocfg, mesh)
+    bt = batch_spec(cfg, seq, gb, "train")
+    bspecs = SH.batch_specs(bt, mesh)
+    step = make_train_step(cfg, ocfg, mb)
+    with mesh, hints_enabled(mesh):
+        compiled = jax.jit(step, in_shardings=(
+            SH.to_named(pspecs, mesh), SH.to_named(ospecs, mesh),
+            SH.to_named(bspecs, mesh)), donate_argnums=(0, 1)).lower(
+                ps, osh, bt).compile()
+    a = hlo_analysis.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    out = {
+        "name": name, "microbatches": mb,
+        "mxu_flops": a["mxu_flops"], "flops": a["flops"],
+        "dot_bytes": a["dot_bytes"],
+        "coll_bytes": a["collectives"]["total_bytes"],
+        "coll": {k: v for k, v in a["collectives"].items()
+                 if isinstance(v, dict)},
+        "peak_gb": (mem.temp_size_in_bytes
+                    + mem.argument_size_in_bytes) / 2**30,
+        "compute_s": a["mxu_flops"] / 197e12,
+        "memory_s": a["dot_bytes"] / 819e9,
+        "coll_s": a["collectives"]["total_bytes"] / 50e9,
+    }
+    print(json.dumps(out, indent=1, default=float))
+    return out
+
+
+variant = sys.argv[1]
+if variant == "decode_base":
+    measure_decode(get("internlm2-1.8b"), "internlm2 decode baseline")
+elif variant == "decode_kvdup":
+    cfg = dataclasses.replace(get("internlm2-1.8b"), kv_dup_to_tp=True)
+    measure_decode(cfg, "internlm2 decode kv_dup_to_tp")
+elif variant == "405b_mb8":
+    cfg = get("llama3-405b")
+    measure_train(cfg, "405b mb=8", 8)
+elif variant == "405b_ratio25":
+    cfg = dataclasses.replace(
+        get("llama3-405b"),
+        mp_policy=Policy(kind="ratio", ratio_high=0.25))
+    measure_train(cfg, "405b ratio 25D:75S mb=16", 16)
+elif variant == "405b_ratio25_mb8":
+    cfg = dataclasses.replace(
+        get("llama3-405b"),
+        mp_policy=Policy(kind="ratio", ratio_high=0.25))
+    measure_train(cfg, "405b ratio 25D:75S mb=8", 8)
+else:
+    raise SystemExit(f"unknown variant {variant}")

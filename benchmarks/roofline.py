@@ -1,0 +1,99 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, derives the three terms from the dry-run
+JSONs (trip-count-corrected per-device numbers, see launch/hlo_analysis):
+
+    compute    = mxu_flops / PEAK_FLOPS          (fp32 dots = 3 MXU passes)
+    memory     = hbm_bytes / HBM_BW
+    collective = collective_bytes / ICI_BW
+
+All terms are seconds-per-step per chip.  The dominant term is the
+bottleneck; roofline fraction = compute / max(terms) (the fraction of MXU
+peak achievable with perfect overlap).  MODEL_FLOPS/HLO_FLOPs catches
+remat/redundancy waste.
+
+Hardware model (TPU v5e): 197 Tflop/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (one-direction model)
+
+
+def roofline_terms(cell: dict) -> dict:
+    corr = cell["corrected"]
+    n = cell["n_chips"]
+    compute_raw = corr["flops"] / PEAK_FLOPS
+    compute_mxu = corr["mxu_flops"] / PEAK_FLOPS
+    # HBM traffic: dot operand/output bytes (matmul streams dominate) +
+    # raw XLA bytes_accessed as the secondary reference
+    memory = corr["dot_bytes"] / HBM_BW
+    coll_bytes = cell["collectives"].get("total_bytes", 0.0)
+    collective = coll_bytes / ICI_BW
+    terms = {"compute": compute_mxu, "memory": memory,
+             "collective": collective}
+    dominant = max(terms, key=terms.get)
+    model_per_chip = cell["model_flops"] / n
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "mesh": "2x16x16" if cell.get("multi_pod") else "16x16",
+        "compute_s": compute_mxu,
+        "compute_raw_s": compute_raw,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "step_s_lower_bound": max(terms.values()),
+        "roofline_fraction": (compute_mxu / max(terms.values())
+                              if max(terms.values()) > 0 else 0.0),
+        "model_flops_per_chip": model_per_chip,
+        "hlo_flops_per_chip": corr["flops"],
+        "useful_ratio": (model_per_chip / corr["flops"]
+                         if corr["flops"] else 0.0),
+        "peak_hbm_gb": (cell["memory"]["peak_bytes_per_device"] or 0) / 2**30,
+    }
+
+
+def load_cells(path: str = "results/dryrun") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def table(path: str = "results/dryrun", mesh: str | None = "16x16") -> str:
+    rows = [roofline_terms(c) for c in load_cells(path)]
+    if mesh:
+        rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'comp(s)':>9s} "
+           f"{'mem(s)':>9s} {'coll(s)':>9s} {'domin':>6s} {'roofl%':>7s} "
+           f"{'useful%':>8s} {'HBM GB':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+            f"{r['collective_s']:9.4f} {r['dominant'][:6]:>6s} "
+            f"{100*r['roofline_fraction']:6.1f}% "
+            f"{100*r['useful_ratio']:7.1f}% {r['peak_hbm_gb']:7.1f}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    print(table(args.path, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

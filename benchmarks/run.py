@@ -1,0 +1,88 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure scripts that need many
+host devices (fig4 weak scaling; the dry-run itself) run as subprocesses so
+this process keeps the default single device.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def _subprocess_rows(module: str, timeout: int = 1800) -> list[tuple]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    t = __import__("time").perf_counter
+    t0 = t()
+    r = subprocess.run([sys.executable, "-m", module], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    dt = (t() - t0) * 1e6
+    ok = r.returncode == 0
+    if not ok:
+        sys.stderr.write(r.stdout[-2000:] + r.stderr[-2000:])
+    return [(module, dt, "ok" if ok else "FAILED")], r.stdout
+
+
+def main() -> None:
+    rows: list[tuple] = []
+
+    from benchmarks import fig2_precision_map, fig3_shared_memory
+    rows += fig2_precision_map.bench()
+    rows += fig3_shared_memory.bench()
+
+    # fig4 weak scaling (subprocess: needs 256 host devices)
+    sub_rows, out = _subprocess_rows("benchmarks.fig4_scaling")
+    rows += sub_rows
+    ratio = "?"
+    for line in out.splitlines():
+        if line.startswith("ratio "):
+            ratio = line.split()[1]
+        parts = line.split()
+        if (len(parts) >= 9 and parts[0][0].isdigit() and "x" in parts[0]
+                and parts[6].endswith("%")):
+            rows.append((f"fig4_{ratio.replace(':', '_')}_grid_{parts[0]}",
+                         0.0, f"chips={parts[1]};eff_ovl={parts[6]};"
+                         f"eff_seq={parts[7]}"))
+
+    # kernel micro (interpret mode — semantic cost only, not TPU timing)
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.core import MPMatrix, make_map
+    from repro.core.precision import Policy
+    from repro.kernels import ops
+    t = 16
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    pol = Policy(kind="ratio", ratio_high=0.5)
+    A = MPMatrix.from_dense(a, make_map((64, 64), t, pol), t)
+    C = MPMatrix.from_dense(jnp.zeros((64, 64)),
+                            make_map((64, 64), t, pol), t)
+    t0 = time.perf_counter()
+    ops.mp_gemm(A, A, C)
+    rows.append(("kernel_mp_gemm_tile_interp_64", (time.perf_counter() - t0)
+                 * 1e6, "interpret-mode"))
+
+    # roofline table summary (from cached dry-run artifacts, if present)
+    try:
+        from benchmarks import roofline
+        cells = roofline.load_cells("results/dryrun")
+        for c in cells:
+            r = roofline.roofline_terms(c)
+            if r["mesh"] != "16x16":
+                continue
+            rows.append((f"roofline_{r['arch']}_{r['shape']}",
+                         r["step_s_lower_bound"] * 1e6,
+                         f"dom={r['dominant']};roofl="
+                         f"{100*r['roofline_fraction']:.0f}%"))
+    except Exception as e:  # dry-run not yet executed
+        rows.append(("roofline_table", 0.0, f"unavailable:{e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,41 @@
+"""Distributed SUMMA GEMM-MP demo on host devices (paper Algorithm 1 at
+cluster scale, shrunk to a 2×2 device grid).
+
+    PYTHONPATH=src python examples/gemm_mp_demo.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MPMatrix, mp_gemm_ref, schedule
+from repro.core.precision import PAPER_RATIOS
+from repro.core.summa import summa_collective_bytes, summa_mp_gemm
+
+P = Q = 2
+M = K = N = 128
+T = 16
+mesh = jax.make_mesh((P, Q), ("row", "col"))
+a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+
+for name in ("100D:0S", "50D:50S", "0D:100S"):
+    pol = PAPER_RATIOS[name]
+    pa = schedule.sorted_balanced_map(M // T, K // T, pol, axis=0, groups=P)
+    pb = schedule.sorted_balanced_map(K // T, N // T, pol, axis=1, groups=Q)
+    pc = schedule.balanced_ratio_map(M // T, N // T, pol, P, Q)
+    A = MPMatrix.from_dense(a, pa, T)
+    B = MPMatrix.from_dense(b, pb, T)
+    C = MPMatrix.from_dense(jnp.zeros((M, N)), pc, T)
+    out = summa_mp_gemm(A, B, C, mesh=mesh)
+    ref = mp_gemm_ref(A, B, C)
+    err = float(jnp.abs(out.to_dense() - ref.to_dense()).max())
+    hi = float((pa == 2).mean())
+    model = summa_collective_bytes(M, N, K, T, P, Q, hi)
+    print(f"{name:8s}: SUMMA vs reference max|Δ| = {err:.2e} | "
+          f"panels ship {model['bytes_per_elem_model']:.1f} B/elem "
+          f"(receiver-side conversion)")
+print("distributed GEMM-MP OK on", mesh)

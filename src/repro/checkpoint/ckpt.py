@@ -1,0 +1,173 @@
+"""Checkpointing: per-leaf npz + JSON manifest, atomic, async, re-meshable.
+
+Arrays are saved in *logical* (global, unsharded) coordinates, so a
+checkpoint written on one mesh restores onto any other mesh — elastic
+re-mesh / node-loss recovery is just "restore on the surviving mesh"
+(DESIGN.md §8).  Writes go to a temp dir that is atomically renamed, with a
+content hash in the manifest; a background thread makes saves non-blocking.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SENTINEL = "__none__"
+
+#: npz cannot store ml_dtypes (bf16/fp8) natively — round-trip through uints
+_VIEW_AS = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+_FROM_VIEW = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+    "float8_e5m2": ml_dtypes.float8_e5m2,
+}
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree, *, step: int, extra: dict | None = None) -> dict:
+    """Blocking save.  Returns the manifest."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    h = hashlib.sha256()
+    arrays = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        dt_name = str(arr.dtype)
+        if dt_name in _VIEW_AS:
+            arr = arr.view(_VIEW_AS[dt_name])
+        name = f"a{i}"
+        arrays[name] = arr
+        h.update(arr.tobytes())
+        manifest["leaves"][key] = {
+            "file": name, "shape": list(arr.shape), "dtype": dt_name}
+    np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+    manifest["hash"] = h.hexdigest()
+    manifest["time"] = time.time()
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return manifest
+
+
+def restore(path: str, like_tree, *, sharding_tree=None, verify: bool = True):
+    """Restore into the structure of ``like_tree``.  ``sharding_tree`` (same
+    structure or a single sharding) re-shards on load — the elastic re-mesh
+    entry point.  Returns (tree, manifest)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves_out = []
+    by_key = {}
+    for pth, like in flat_like[0]:
+        key = "/".join(_path_str(p) for p in pth)
+        meta = manifest["leaves"][key]
+        arr = data[meta["file"]]
+        by_key[key] = arr
+        if meta["dtype"] in _FROM_VIEW:
+            arr = arr.view(_FROM_VIEW[meta["dtype"]])
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs model {like.shape}")
+        if sharding_tree is not None:
+            sh = (sharding_tree if not isinstance(sharding_tree, dict)
+                  else sharding_tree)
+            leaves_out.append(jax.device_put(arr.astype(like.dtype), sh))
+        else:
+            leaves_out.append(jax.numpy.asarray(arr).astype(like.dtype))
+    if verify and manifest.get("hash") and len(manifest["leaves"]) == len(
+            flat_like[0]):
+        h = hashlib.sha256()
+        for key in sorted(by_key):  # same order as save()
+            h.update(by_key[key].tobytes())
+        if h.hexdigest() != manifest["hash"]:
+            raise IOError(f"checkpoint {path} hash mismatch (corrupt?)")
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves_out)
+    return tree, manifest
+
+
+class AsyncCheckpointer:
+    """Non-blocking saver: one background writer, newest-wins queueing."""
+
+    def __init__(self, base_dir: str, keep: int = 3):
+        self.base_dir = base_dir
+        self.keep = keep
+        os.makedirs(base_dir, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[tuple] = None
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved_step = -1
+
+    def submit(self, tree, step: int, extra: dict | None = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        with self._lock:
+            self._pending = (host_tree, step, extra)
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._drain,
+                                                daemon=True)
+                self._thread.start()
+
+    def _drain(self):
+        while True:
+            with self._lock:
+                if self._pending is None:
+                    return
+                tree, step, extra = self._pending
+                self._pending = None
+            save(os.path.join(self.base_dir, f"step_{step:08d}"), tree,
+                 step=step, extra=extra)
+            self.last_saved_step = step
+            self._gc()
+
+    def _gc(self):
+        ckpts = sorted(d for d in os.listdir(self.base_dir)
+                       if d.startswith("step_"))
+        for d in ckpts[:-self.keep]:
+            shutil.rmtree(os.path.join(self.base_dir, d))
+
+    def wait(self, timeout: float = 60.0):
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+
+    def latest(self) -> Optional[str]:
+        ckpts = sorted(d for d in os.listdir(self.base_dir)
+                       if d.startswith("step_"))
+        return os.path.join(self.base_dir, ckpts[-1]) if ckpts else None

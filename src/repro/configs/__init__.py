@@ -1,0 +1,2 @@
+from repro.configs.base import (REGISTRY, SHAPES, ArchConfig, cells, get,
+                                load_all, reduced, register)

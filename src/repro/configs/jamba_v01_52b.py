@@ -1,0 +1,27 @@
+"""Jamba-v0.1-52B [arXiv:2403.19887; hf] — hybrid Mamba+attention 1:7
+interleave, MoE every other layer (16 experts, top-2)."""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=65536,
+    block_type="mamba_hybrid",
+    attn_every=8,       # 1 attention : 7 mamba
+    attn_offset=4,
+    n_experts=16,
+    top_k=2,
+    moe_every=2,        # MoE on odd layers
+    moe_offset=1,
+    rope_theta=10000.0,
+    use_rope=False,     # Jamba uses no positional encoding in attn layers
+    fsdp=True,
+    remat_group=2,
+    notes="Mamba d_state=16, expand=2; EP over model axis (16 experts).",
+    kv_dup_to_tp=True,
+))

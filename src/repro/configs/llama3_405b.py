@@ -1,0 +1,17 @@
+"""Llama-3-405B [arXiv:2407.21783] — the scale stress test."""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab=128256,
+    rope_theta=500000.0,
+    fsdp=True,
+    remat_group=6,
+    kv_dup_to_tp=True,
+))

@@ -1,0 +1,21 @@
+"""LLaVA-NeXT-34B [hf:llava-hf/llava-v1.6-*] — VLM; anyres vision tiling
+is a STUB per spec (precomputed 1024-d patch embeddings, 2880 tokens)."""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    frontend="vision",
+    frontend_dim=1024,   # CLIP ViT-L hidden size
+    n_patches=2880,      # anyres 5 tiles x 576 patches
+    rope_theta=5000000.0,
+    fsdp=True,
+    remat_group=4,
+    notes="56 q-heads padded to 64 for TP=16 (kv 8 duplicated to 16).",
+))

@@ -1,0 +1,19 @@
+# The paper's primary contribution: tile-centric mixed-precision GEMM
+# (precision policies, tile-heterogeneous layouts, reference semantics,
+# distributed SUMMA, and the MPLinear layer used by the model stack).
+from repro.core.precision import (PAPER_RATIOS, PrecClass, Policy, make_map,
+                                  map_ratio_string, map_storage_bytes)
+from repro.core.layout import (CompactMPMatrix, KSplitWeight, MPMatrix,
+                               NSplitWeight, ksplit_matmul, nsplit_matmul)
+from repro.core.mp_gemm import (model_flops, mp_gemm_ref, mp_gemm_tilewise_ref,
+                                mxu_weighted_flops)
+from repro.core.linear import MPLinear, choose_tile, init_mp_linear, split_cls
+from repro.core import schedule
+
+__all__ = [
+    "PAPER_RATIOS", "PrecClass", "Policy", "make_map", "map_ratio_string",
+    "map_storage_bytes", "CompactMPMatrix", "KSplitWeight", "MPMatrix",
+    "NSplitWeight", "ksplit_matmul", "nsplit_matmul", "model_flops",
+    "mp_gemm_ref", "mp_gemm_tilewise_ref", "mxu_weighted_flops", "MPLinear",
+    "choose_tile", "init_mp_linear", "split_cls", "schedule",
+]

@@ -1,0 +1,418 @@
+"""Tile-heterogeneous matrix layouts.
+
+A JAX array has a single dtype, so the paper's "each tile has its own
+precision" needs an explicit representation.  Three layouts (see DESIGN.md §3):
+
+* ``MPMatrix``        — dense-dual: one fp32 buffer + one bf16 buffer (+ fp8),
+                        each tile valid in exactly one.  Semantic/reference
+                        layout: simple, differentiable, composable.
+* ``CompactMPMatrix`` — class-sorted compact tiles; storage bytes are exactly
+                        the paper's 4·a + 2·b (+ 1·c) per element.
+* ``KSplitWeight``    — production layout for LM matmuls: the class map is
+                        constant along N, the K-blocks are permuted so each
+                        class is contiguous, and matmul lowers to (up to)
+                        three dense dots with zero HLO-FLOP inflation.
+
+All are registered pytrees; static metadata (maps, tile size) lives in numpy
+on the host and is hashed into jit keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as P
+from repro.core.precision import PrecClass
+
+
+def _pad_to(x: jax.Array, m: int, n: int) -> jax.Array:
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+class _HashableMap:
+    """numpy array wrapped to be hashable/eq-comparable as jit static data."""
+
+    __slots__ = ("arr", "_key")
+
+    def __init__(self, arr: np.ndarray):
+        self.arr = np.ascontiguousarray(arr)
+        self.arr.setflags(write=False)
+        self._key = (self.arr.shape, self.arr.dtype.str, self.arr.tobytes())
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, _HashableMap) and self._key == other._key
+
+    def __repr__(self):
+        return f"_HashableMap{self.arr.shape}"
+
+
+# ---------------------------------------------------------------------------
+# MPMatrix — dense dual-buffer layout
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MPMatrix:
+    """Dense-dual tile-heterogeneous matrix.
+
+    ``hi``/``lo``/``lo8`` are full (padded) dense buffers; tile (i, j) is
+    valid in the buffer selected by ``cls[i, j]`` and zero elsewhere.
+    """
+
+    hi: jax.Array        # f32[M, N]
+    lo: jax.Array        # bf16[M, N]
+    lo8: jax.Array       # f8e4m3[M, N] (zeros unless LOW8 tiles exist)
+    cls: _HashableMap    # int8[mt, nt]  (static)
+    tile: int            # static
+    shape: tuple[int, int]  # logical (unpadded) shape, static
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.hi, self.lo, self.lo8), (self.cls, self.tile, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        hi, lo, lo8 = children
+        return cls(hi, lo, lo8, *aux)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_dense(cls, w: jax.Array, cls_map: np.ndarray, tile: int) -> "MPMatrix":
+        mt, nt = cls_map.shape
+        m, n = mt * tile, nt * tile
+        wp = _pad_to(w.astype(jnp.float32), m, n)
+        cmap = jnp.asarray(np.asarray(cls_map), jnp.int8)
+        sel = jnp.repeat(jnp.repeat(cmap, tile, 0), tile, 1)
+        hi = jnp.where(sel == int(PrecClass.HIGH), wp, 0.0)
+        lo = jnp.where(sel == int(PrecClass.LOW), wp, 0.0).astype(jnp.bfloat16)
+        lo8 = jnp.where(sel == int(PrecClass.LOW8), wp, 0.0).astype(
+            jnp.float8_e4m3fn)
+        return cls(hi, lo, lo8, _HashableMap(np.asarray(cls_map)), tile,
+                   (w.shape[0], w.shape[1]))
+
+    # -- views ----------------------------------------------------------------
+    def to_dense(self) -> jax.Array:
+        """Materialize at fp32 with storage-precision rounding applied
+        (this is the value every consumer sees after receiver-side convert)."""
+        d = (self.hi + self.lo.astype(jnp.float32)
+             + self.lo8.astype(jnp.float32))
+        return d[: self.shape[0], : self.shape[1]]
+
+    @property
+    def padded_shape(self) -> tuple[int, int]:
+        return self.hi.shape
+
+    def storage_bytes(self) -> int:
+        """Semantic storage bytes (what CompactMPMatrix would allocate)."""
+        return P.map_storage_bytes(self.cls.arr, self.tile)
+
+
+# ---------------------------------------------------------------------------
+# CompactMPMatrix — class-sorted compact tiles (the paper's memory model)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompactMPMatrix:
+    """Class-sorted tile storage: tiles_hi f32[n_hi,t,t], tiles_lo
+    bf16[n_lo,t,t], tiles_lo8 f8[n_lo8,t,t].  ``slot[i,j]`` is the index of
+    tile (i,j) inside its class array.  Allocated bytes == paper's storage."""
+
+    tiles_hi: jax.Array
+    tiles_lo: jax.Array
+    tiles_lo8: jax.Array
+    cls: _HashableMap      # int8[mt, nt] (static)
+    slot: _HashableMap     # int32[mt, nt] (static)
+    tile: int
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return ((self.tiles_hi, self.tiles_lo, self.tiles_lo8),
+                (self.cls, self.slot, self.tile, self.shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @staticmethod
+    def make_slots(cls_map: np.ndarray) -> np.ndarray:
+        slot = np.zeros_like(cls_map, dtype=np.int32)
+        for c in (int(PrecClass.HIGH), int(PrecClass.LOW), int(PrecClass.LOW8)):
+            mask = cls_map == c
+            slot[mask] = np.arange(mask.sum(), dtype=np.int32)
+        return slot
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, cls_map: np.ndarray, tile: int
+                   ) -> "CompactMPMatrix":
+        cls_map = np.asarray(cls_map)
+        mt, nt = cls_map.shape
+        m, n = mt * tile, nt * tile
+        wp = _pad_to(w.astype(jnp.float32), m, n)
+        tiles = wp.reshape(mt, tile, nt, tile).transpose(0, 2, 1, 3)
+        tiles = tiles.reshape(mt * nt, tile, tile)
+        slot = cls.make_slots(cls_map)
+        flat_cls = cls_map.reshape(-1)
+
+        def gather_class(c, dtype):
+            idx = np.nonzero(flat_cls == c)[0]
+            if len(idx) == 0:
+                return jnp.zeros((0, tile, tile), dtype)
+            return tiles[jnp.asarray(idx)].astype(dtype)
+
+        return cls(
+            gather_class(int(PrecClass.HIGH), jnp.float32),
+            gather_class(int(PrecClass.LOW), jnp.bfloat16),
+            gather_class(int(PrecClass.LOW8), jnp.float8_e4m3fn),
+            _HashableMap(cls_map), _HashableMap(slot), tile,
+            (w.shape[0], w.shape[1]))
+
+    def to_dense(self) -> jax.Array:
+        mt, nt = self.cls.arr.shape
+        t = self.tile
+        out = jnp.zeros((mt * nt, t, t), jnp.float32)
+        flat_cls = self.cls.arr.reshape(-1)
+        flat_slot = self.slot.arr.reshape(-1)
+        for c, buf in ((int(PrecClass.HIGH), self.tiles_hi),
+                       (int(PrecClass.LOW), self.tiles_lo),
+                       (int(PrecClass.LOW8), self.tiles_lo8)):
+            idx = np.nonzero(flat_cls == c)[0]
+            if len(idx) == 0:
+                continue
+            vals = buf[jnp.asarray(flat_slot[idx])].astype(jnp.float32)
+            out = out.at[jnp.asarray(idx)].set(vals)
+        dense = out.reshape(mt, nt, t, t).transpose(0, 2, 1, 3)
+        dense = dense.reshape(mt * t, nt * t)
+        return dense[: self.shape[0], : self.shape[1]]
+
+    def to_mpmatrix(self) -> MPMatrix:
+        dense = self.to_dense()
+        return MPMatrix.from_dense(dense, self.cls.arr, self.tile)
+
+    def storage_bytes(self) -> int:
+        return (self.tiles_hi.size * 4 + self.tiles_lo.size * 2
+                + self.tiles_lo8.size)
+
+
+# ---------------------------------------------------------------------------
+# KSplitWeight — structured-K production layout for LM matmuls
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KSplitWeight:
+    """Weight W[K, N] whose precision map is constant along N within each
+    K-block.  K-blocks are permuted so classes are contiguous:
+
+        y = x[:, perm_hi] @ w_hi  (fp32 dot, HIGHEST)
+          + x[:, perm_lo] @ w_lo  (bf16 dot)
+          + x[:, perm_lo8] @ w_lo8(bf16 dot after upcast)
+
+    Exact storage savings, exact HLO FLOPs (one dot per class, K split),
+    trivially shardable along N (TP) — see DESIGN.md §3(3).
+
+    ``k_cls`` int8[kt] is the per-K-block class (static).  ``perm`` is the
+    K-index permutation grouping classes (static).  Gradient flows through
+    all buffers (they are leaves).
+    """
+
+    w_hi: jax.Array    # f32[K_hi, N]
+    w_lo: jax.Array    # bf16[K_lo, N]
+    w_lo8: jax.Array   # f8[K_lo8, N]
+    k_cls: _HashableMap   # int8[kt]
+    tile: int
+    shape: tuple[int, int]    # logical (K, N)
+
+    def tree_flatten(self):
+        return ((self.w_hi, self.w_lo, self.w_lo8),
+                (self.k_cls, self.tile, self.shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # static helpers ---------------------------------------------------------
+    @staticmethod
+    def k_partition(k_cls: np.ndarray, tile: int):
+        """Return (idx_hi, idx_lo, idx_lo8): K-row indices per class."""
+        out = []
+        for c in (int(PrecClass.HIGH), int(PrecClass.LOW), int(PrecClass.LOW8)):
+            blocks = np.nonzero(k_cls == c)[0]
+            rows = (blocks[:, None] * tile + np.arange(tile)[None, :]).reshape(-1)
+            out.append(rows.astype(np.int32))
+        return tuple(out)
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, k_cls: np.ndarray, tile: int
+                   ) -> "KSplitWeight":
+        k_cls = np.asarray(k_cls, np.int8)
+        kt = k_cls.shape[0]
+        k, n = w.shape
+        if k != kt * tile:
+            raise ValueError(
+                f"K={k} must equal kt*tile={kt}*{tile} (choose a tile that "
+                "divides K; padding K would desync with activations)")
+        wp = w.astype(jnp.float32)
+        idx_hi, idx_lo, idx_lo8 = cls.k_partition(k_cls, tile)
+        return cls(
+            wp[jnp.asarray(idx_hi)] if len(idx_hi) else jnp.zeros((0, n), jnp.float32),
+            (wp[jnp.asarray(idx_lo)] if len(idx_lo) else jnp.zeros((0, n))
+             ).astype(jnp.bfloat16),
+            (wp[jnp.asarray(idx_lo8)] if len(idx_lo8) else jnp.zeros((0, n))
+             ).astype(jnp.float8_e4m3fn),
+            _HashableMap(k_cls), tile, (k, n))
+
+    def to_dense(self) -> jax.Array:
+        k, n = self.shape
+        kt = self.k_cls.arr.shape[0]
+        wp = jnp.zeros((kt * self.tile, n), jnp.float32)
+        idx_hi, idx_lo, idx_lo8 = self.k_partition(self.k_cls.arr, self.tile)
+        if len(idx_hi):
+            wp = wp.at[jnp.asarray(idx_hi)].set(self.w_hi.astype(jnp.float32))
+        if len(idx_lo):
+            wp = wp.at[jnp.asarray(idx_lo)].set(self.w_lo.astype(jnp.float32))
+        if len(idx_lo8):
+            wp = wp.at[jnp.asarray(idx_lo8)].set(self.w_lo8.astype(jnp.float32))
+        return wp[:k, :n]
+
+    def storage_bytes(self) -> int:
+        return (self.w_hi.size * 4 + self.w_lo.size * 2 + self.w_lo8.size)
+
+
+# ---------------------------------------------------------------------------
+# NSplitWeight — class map constant along K, split along N.  Used for
+# row-parallel (TP-sharded-K) matmuls where K must stay contiguous but N is
+# unsharded (DESIGN.md §5): y = concat([x32 @ w_hi, x16 @ w_lo], axis=-1).
+# Class blocks are stored contiguously (hi columns first); for data-driven
+# policies the logical→stored column permutation is folded into the *next*
+# layer's weights at init time (permutation folding — zero runtime cost).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NSplitWeight:
+    w_hi: jax.Array    # f32[K, N_hi]
+    w_lo: jax.Array    # bf16[K, N_lo]
+    w_lo8: jax.Array   # f8[K, N_lo8]
+    n_cls: _HashableMap   # int8[nt] — class per N-block, in STORED order
+    tile: int
+    shape: tuple[int, int]    # logical (K, N)
+
+    def tree_flatten(self):
+        return ((self.w_hi, self.w_lo, self.w_lo8),
+                (self.n_cls, self.tile, self.shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, n_cls: np.ndarray, tile: int
+                   ) -> "NSplitWeight":
+        """``n_cls`` must be class-sorted (HIGH, LOW, LOW8 contiguous); the
+        caller is responsible for any column permutation of ``w``."""
+        n_cls = np.asarray(n_cls, np.int8)
+        k, n = w.shape
+        if n != n_cls.shape[0] * tile:
+            raise ValueError(f"N={n} != nt*tile={n_cls.shape[0]}*{tile}")
+        order = np.argsort(-n_cls, kind="stable")  # HIGH(2), LOW(1), LOW8(0)
+        if not np.array_equal(order, np.arange(len(n_cls))):
+            raise ValueError("n_cls must be class-sorted (fold permutations "
+                             "into adjacent layers instead)")
+        wp = w.astype(jnp.float32)
+        n_hi = int((n_cls == int(PrecClass.HIGH)).sum()) * tile
+        n_lo = int((n_cls == int(PrecClass.LOW)).sum()) * tile
+        return cls(wp[:, :n_hi],
+                   wp[:, n_hi:n_hi + n_lo].astype(jnp.bfloat16),
+                   wp[:, n_hi + n_lo:].astype(jnp.float8_e4m3fn),
+                   _HashableMap(n_cls), tile, (k, n))
+
+    def to_dense(self) -> jax.Array:
+        return jnp.concatenate(
+            [self.w_hi, self.w_lo.astype(jnp.float32),
+             self.w_lo8.astype(jnp.float32)], axis=1)
+
+    def storage_bytes(self) -> int:
+        return self.w_hi.size * 4 + self.w_lo.size * 2 + self.w_lo8.size
+
+
+#: reduce LOW-class row-parallel partial sums in bf16 over the ICI — the
+#: class's reduction precision follows its storage precision (receiver-side
+#: conversion extended to the TP collective; EXPERIMENTS.md §Perf).  HIGH
+#: partials always reduce in fp32.
+REDUCE_LOW_IN_BF16 = True
+
+
+def nsplit_matmul(x: jax.Array, w: NSplitWeight) -> jax.Array:
+    """y = x @ W, per-N-block operational precision, fp32 accumulation
+    within a shard (the MXU accumulator); LOW-class cross-shard reduction
+    optionally in bf16 (see REDUCE_LOW_IN_BF16)."""
+    dims = (((x.ndim - 1,), (0,)), ((), ()))
+    low_dt = jnp.bfloat16 if REDUCE_LOW_IN_BF16 else jnp.float32
+    parts = []
+    if w.w_hi.shape[1]:
+        parts.append(jax.lax.dot_general(
+            x.astype(jnp.float32), w.w_hi, dims,
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32))
+    if w.w_lo.shape[1]:
+        parts.append(jax.lax.dot_general(
+            x.astype(jnp.bfloat16), w.w_lo, dims,
+            preferred_element_type=low_dt).astype(jnp.float32))
+    if w.w_lo8.shape[1]:
+        parts.append(jax.lax.dot_general(
+            x.astype(jnp.bfloat16), w.w_lo8.astype(jnp.bfloat16), dims,
+            preferred_element_type=low_dt).astype(jnp.float32))
+    return jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+
+
+def _take_k(x: jax.Array, idx: np.ndarray) -> jax.Array:
+    """x[..., idx] — lowered as a slice when idx is contiguous (the balanced
+    maps sort classes contiguously, so the common case is a free slice)."""
+    if len(idx) and np.all(np.diff(idx) == 1):
+        return jax.lax.slice_in_dim(x, int(idx[0]), int(idx[-1]) + 1, axis=-1)
+    return jnp.take(x, jnp.asarray(idx), axis=-1)
+
+
+def ksplit_matmul(x: jax.Array, w: KSplitWeight) -> jax.Array:
+    """y = x @ W with receiver-side conversion per class.
+
+    x: [..., K] (any float dtype).  Each class's slice of x is converted to
+    that class's operational precision right before the dot (the TPU-register
+    analogue of the paper's receiver-side conversion); accumulation fp32.
+    """
+    idx_hi, idx_lo, idx_lo8 = KSplitWeight.k_partition(w.k_cls.arr, w.tile)
+    k, n = w.shape
+    parts = []
+    if len(idx_hi):
+        x_hi = _take_k(x, idx_hi).astype(jnp.float32)
+        parts.append(jax.lax.dot_general(
+            x_hi, w.w_hi, (((x.ndim - 1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32))
+    if len(idx_lo):
+        x_lo = _take_k(x, idx_lo).astype(jnp.bfloat16)
+        parts.append(jax.lax.dot_general(
+            x_lo, w.w_lo, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))
+    if len(idx_lo8):
+        x_8 = _take_k(x, idx_lo8).astype(jnp.bfloat16)
+        parts.append(jax.lax.dot_general(
+            x_8, w.w_lo8.astype(jnp.bfloat16), (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))
+    if not parts:
+        return jnp.zeros(x.shape[:-1] + (n,), jnp.float32)
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out

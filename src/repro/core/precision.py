@@ -1,0 +1,218 @@
+"""Precision classes, tile maps, and precision-selection policies.
+
+The paper expresses mixed precision as per-tile FP64/FP32 ("aD:bS") maps.  On
+TPU the native pair is fp32 (HIGH) / bf16 (LOW); we additionally support an
+fp8 storage class (LOW8) as a beyond-paper extension (paper §6 future work:
+"incorporating additional precision formats").
+
+A *tile map* is an int8 array of shape (mt, nt) whose entries are members of
+``PrecClass``.  Policies generate maps; ``core.schedule`` re-balances them for
+static SPMD load balance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PrecClass(enum.IntEnum):
+    """Precision class of a tile.  Order = ascending storage cost."""
+
+    LOW8 = 0   # fp8 e4m3 storage, bf16 compute (beyond-paper extension)
+    LOW = 1    # bf16 storage + MXU-native compute      (paper's "S")
+    HIGH = 2   # fp32 storage + 3-pass MXU compute       (paper's "D")
+
+
+#: storage dtype per class
+CLASS_DTYPE: Mapping[int, jnp.dtype] = {
+    int(PrecClass.LOW8): jnp.float8_e4m3fn,
+    int(PrecClass.LOW): jnp.bfloat16,
+    int(PrecClass.HIGH): jnp.float32,
+}
+
+#: bytes per element per class
+CLASS_BYTES: Mapping[int, int] = {
+    int(PrecClass.LOW8): 1,
+    int(PrecClass.LOW): 2,
+    int(PrecClass.HIGH): 4,
+}
+
+#: relative MXU cost of a tile matmul task in this class (v5e pass counts).
+#: HIGH is fp32 = bf16x3 (3 passes); LOW8 upcasts to bf16 on v5e (1 pass).
+CLASS_MXU_COST: Mapping[int, float] = {
+    int(PrecClass.LOW8): 1.0,
+    int(PrecClass.LOW): 1.0,
+    int(PrecClass.HIGH): 3.0,
+}
+
+#: jax.lax dot precision used for the *operational* precision of a class.
+CLASS_DOT_PRECISION: Mapping[int, jax.lax.Precision] = {
+    int(PrecClass.LOW8): jax.lax.Precision.DEFAULT,
+    int(PrecClass.LOW): jax.lax.Precision.DEFAULT,
+    int(PrecClass.HIGH): jax.lax.Precision.HIGHEST,
+}
+
+
+def class_dtype(cls: int) -> jnp.dtype:
+    return CLASS_DTYPE[int(cls)]
+
+
+def tile_grid(shape: tuple[int, int], tile: int) -> tuple[int, int]:
+    """Number of tiles along each dim.  Dims must divide evenly (framework
+    pads at layout-construction time if not)."""
+    m, n = shape
+    return (-(-m // tile), -(-n // tile))
+
+
+def map_storage_bytes(cls_map: np.ndarray, tile: int) -> int:
+    """Exact storage bytes of a tile-heterogeneous matrix (paper's saving)."""
+    counts = {c: int((cls_map == c).sum()) for c in (0, 1, 2)}
+    return sum(counts[c] * CLASS_BYTES[c] * tile * tile for c in counts)
+
+
+def map_ratio_string(cls_map: np.ndarray) -> str:
+    """Paper notation 'aD:bS' (HIGH:LOW[+LOW8]) as percentages."""
+    total = cls_map.size
+    hi = int((cls_map == int(PrecClass.HIGH)).sum())
+    lo8 = int((cls_map == int(PrecClass.LOW8)).sum())
+    a = round(100.0 * hi / total)
+    c = round(100.0 * lo8 / total)
+    b = 100 - a - c
+    if c:
+        return f"{a}D:{b}S:{c}Q"
+    return f"{a}D:{b}S"
+
+
+# ---------------------------------------------------------------------------
+# Policies — map generators.  Each policy returns int8[mt, nt].
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """A named precision-selection policy.
+
+    ``kind``:
+      * ``ratio``        — paper's random aD:bS maps (Fig. 2).  ``ratio_high``
+                           is the HIGH fraction; optional ``ratio_low8``.
+      * ``uniform_high`` / ``uniform_low`` — 100D:0S / 0D:100S endpoints.
+      * ``norm_topk``    — data-driven: the fraction ``ratio_high`` of tiles
+                           with the largest Frobenius norm become HIGH
+                           (paper future-work "trustworthy precision
+                           selection", implemented here).
+      * ``outlier_aware`` — K-blocks whose max |w| exceeds
+                           ``outlier_sigma``·std become HIGH (LLM.int8-style).
+    """
+
+    kind: str = "ratio"
+    ratio_high: float = 0.5
+    ratio_low8: float = 0.0
+    outlier_sigma: float = 6.0
+    seed: int = 0
+
+    def name(self) -> str:
+        if self.kind == "ratio":
+            a = round(self.ratio_high * 100)
+            c = round(self.ratio_low8 * 100)
+            return f"ratio_{a}D{100 - a - c}S" + (f"{c}Q" if c else "")
+        return self.kind
+
+
+def _ratio_map(mt: int, nt: int, p: Policy) -> np.ndarray:
+    """Random map with an *exact* class ratio (paper randomizes per tile; we
+    draw a random permutation of an exact-count class vector so the global
+    ratio is exact — matters for reproducible storage accounting)."""
+    n = mt * nt
+    n_hi = int(round(p.ratio_high * n))
+    n_lo8 = int(round(p.ratio_low8 * n))
+    n_lo = n - n_hi - n_lo8
+    assert n_lo >= 0, f"ratio_high + ratio_low8 > 1 ({p})"
+    flat = np.concatenate([
+        np.full(n_hi, int(PrecClass.HIGH), np.int8),
+        np.full(n_lo, int(PrecClass.LOW), np.int8),
+        np.full(n_lo8, int(PrecClass.LOW8), np.int8),
+    ])
+    rng = np.random.default_rng(p.seed)
+    rng.shuffle(flat)
+    return flat.reshape(mt, nt)
+
+
+def _norm_topk_map(w: np.ndarray, tile: int, p: Policy) -> np.ndarray:
+    mt, nt = tile_grid(w.shape, tile)
+    m, n = mt * tile, nt * tile
+    wp = np.zeros((m, n), w.dtype)
+    wp[: w.shape[0], : w.shape[1]] = w
+    norms = np.linalg.norm(
+        wp.reshape(mt, tile, nt, tile).transpose(0, 2, 1, 3), axis=(2, 3)
+    )
+    k = int(round(p.ratio_high * mt * nt))
+    cls = np.full((mt, nt), int(PrecClass.LOW), np.int8)
+    if k > 0:
+        thresh_idx = np.argsort(norms, axis=None)[::-1][:k]
+        cls.flat[thresh_idx] = int(PrecClass.HIGH)
+    if p.ratio_low8 > 0:
+        k8 = int(round(p.ratio_low8 * mt * nt))
+        lo_idx = np.argsort(norms, axis=None)[:k8]
+        keep = cls.flat[lo_idx] == int(PrecClass.LOW)
+        cls.flat[lo_idx[keep]] = int(PrecClass.LOW8)
+    return cls
+
+
+def _outlier_map(w: np.ndarray, tile: int, p: Policy) -> np.ndarray:
+    mt, nt = tile_grid(w.shape, tile)
+    m, n = mt * tile, nt * tile
+    wp = np.zeros((m, n), np.float32)
+    wp[: w.shape[0], : w.shape[1]] = np.asarray(w, np.float32)
+    tiles = wp.reshape(mt, tile, nt, tile).transpose(0, 2, 1, 3)
+    amax = np.abs(tiles).max(axis=(2, 3))
+    sigma = wp.std() + 1e-12
+    cls = np.where(amax > p.outlier_sigma * sigma,
+                   int(PrecClass.HIGH), int(PrecClass.LOW)).astype(np.int8)
+    return cls
+
+
+def make_map(
+    shape: tuple[int, int],
+    tile: int,
+    policy: Policy,
+    weights: np.ndarray | None = None,
+) -> np.ndarray:
+    """Generate an int8[mt, nt] class map for a matrix of ``shape``."""
+    mt, nt = tile_grid(shape, tile)
+    if policy.kind == "uniform_high":
+        return np.full((mt, nt), int(PrecClass.HIGH), np.int8)
+    if policy.kind == "uniform_low":
+        return np.full((mt, nt), int(PrecClass.LOW), np.int8)
+    if policy.kind == "uniform_low8":
+        return np.full((mt, nt), int(PrecClass.LOW8), np.int8)
+    if policy.kind == "ratio":
+        return _ratio_map(mt, nt, policy)
+    if policy.kind == "norm_topk":
+        if weights is None:
+            raise ValueError("norm_topk policy needs weights")
+        return _norm_topk_map(np.asarray(weights), tile, policy)
+    if policy.kind == "outlier_aware":
+        if weights is None:
+            raise ValueError("outlier_aware policy needs weights")
+        return _outlier_map(np.asarray(weights), tile, policy)
+    raise ValueError(f"unknown policy kind {policy.kind!r}")
+
+
+def quantize_tile(x: jax.Array, cls: int) -> jax.Array:
+    """Round-trip a tile through its storage precision (receiver-side
+    conversion produces exactly this value at the consumer)."""
+    return x.astype(class_dtype(cls)).astype(jnp.float32)
+
+
+# Convenience named policies matching the paper's sweep (Figs. 2-4).
+PAPER_RATIOS: dict[str, Policy] = {
+    "100D:0S": Policy(kind="uniform_high"),
+    "80D:20S": Policy(kind="ratio", ratio_high=0.8),
+    "50D:50S": Policy(kind="ratio", ratio_high=0.5),
+    "20D:80S": Policy(kind="ratio", ratio_high=0.2),
+    "0D:100S": Policy(kind="uniform_low"),
+}

@@ -1,0 +1,115 @@
+"""Static load-balancing of precision maps — the SPMD analogue of PaRSEC.
+
+The paper relies on PaRSEC's dynamic scheduler to absorb the cost variance
+between FP64 and FP32 tile tasks scattered block-cyclically over the process
+grid.  Under XLA's static SPMD there is no work stealing, so we remove the
+variance *by construction*:
+
+* ``balanced_ratio_map``        — every (shard-) group of tiles receives the
+  exact same class counts; the max-shard cost equals the mean (imbalance 1.0),
+  which is the fixed point PaRSEC's scheduler converges toward.
+* ``sorted_balanced_map``       — additionally sorts classes within each
+  panel so compact per-class slices have static shapes (needed by the
+  storage-precision SUMMA collectives, see core/summa.py).
+* ``shard_costs`` / ``imbalance`` — the cost model (MXU passes per class)
+  used to quantify what dynamic scheduling would have had to absorb.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.precision import CLASS_MXU_COST, Policy, PrecClass
+
+
+def _policy_ratios(policy: Policy) -> tuple[float, float]:
+    """Effective (ratio_high, ratio_low8) honouring uniform_* kinds."""
+    if policy.kind == "uniform_high":
+        return 1.0, 0.0
+    if policy.kind == "uniform_low":
+        return 0.0, 0.0
+    if policy.kind == "uniform_low8":
+        return 0.0, 1.0
+    return policy.ratio_high, policy.ratio_low8
+
+
+def _exact_counts(n: int, ratio_high: float, ratio_low8: float = 0.0
+                  ) -> tuple[int, int, int]:
+    n_hi = int(round(ratio_high * n))
+    n_lo8 = int(round(ratio_low8 * n))
+    n_lo = n - n_hi - n_lo8
+    assert n_lo >= 0
+    return n_hi, n_lo, n_lo8
+
+
+def balanced_ratio_map(mt: int, nt: int, policy: Policy,
+                       row_groups: int = 1, col_groups: int = 1) -> np.ndarray:
+    """Random map whose class counts are identical in every
+    (mt/row_groups × nt/col_groups) group of tiles."""
+    assert mt % row_groups == 0 and nt % col_groups == 0, (
+        f"groups {row_groups}x{col_groups} must divide tile grid {mt}x{nt}")
+    rg, cg = mt // row_groups, nt // col_groups
+    n_hi, n_lo, n_lo8 = _exact_counts(rg * cg, *_policy_ratios(policy))
+    rng = np.random.default_rng(policy.seed)
+    out = np.empty((mt, nt), np.int8)
+    base = np.concatenate([
+        np.full(n_hi, int(PrecClass.HIGH), np.int8),
+        np.full(n_lo, int(PrecClass.LOW), np.int8),
+        np.full(n_lo8, int(PrecClass.LOW8), np.int8)])
+    for i in range(row_groups):
+        for j in range(col_groups):
+            blk = base.copy()
+            rng.shuffle(blk)
+            out[i * rg:(i + 1) * rg, j * cg:(j + 1) * cg] = blk.reshape(rg, cg)
+    return out
+
+
+def sorted_balanced_map(mt: int, nt: int, policy: Policy, axis: int,
+                        groups: int = 1) -> np.ndarray:
+    """Balanced map sorted within each panel.
+
+    ``axis=0``: within every tile-*column*, HIGH tiles occupy the lowest row
+    indices (A-matrix panels for SUMMA).  ``axis=1``: within every tile-*row*,
+    HIGH tiles occupy the lowest column indices (B-matrix panels).  ``groups``
+    splits the sorted axis into that many shard groups, each sorted
+    independently (so every shard's slice is class-contiguous)."""
+    panel_len = mt if axis == 0 else nt
+    n_panels = nt if axis == 0 else mt
+    assert panel_len % groups == 0
+    seg = panel_len // groups
+    n_hi, n_lo, n_lo8 = _exact_counts(seg, *_policy_ratios(policy))
+    col = np.concatenate([
+        np.full(n_hi, int(PrecClass.HIGH), np.int8),
+        np.full(n_lo, int(PrecClass.LOW), np.int8),
+        np.full(n_lo8, int(PrecClass.LOW8), np.int8)])
+    panel = np.tile(col, groups)
+    out = np.tile(panel[:, None], (1, n_panels))
+    return out if axis == 0 else out.T.copy()
+
+
+def class_counts_per_group(cls_map: np.ndarray, row_groups: int,
+                           col_groups: int) -> np.ndarray:
+    """int[row_groups, col_groups, 3] class histogram per shard group."""
+    mt, nt = cls_map.shape
+    rg, cg = mt // row_groups, nt // col_groups
+    out = np.zeros((row_groups, col_groups, 3), np.int64)
+    for i in range(row_groups):
+        for j in range(col_groups):
+            blk = cls_map[i * rg:(i + 1) * rg, j * cg:(j + 1) * cg]
+            for c in range(3):
+                out[i, j, c] = int((blk == c).sum())
+    return out
+
+
+def shard_costs(cls_map: np.ndarray, row_groups: int, col_groups: int
+                ) -> np.ndarray:
+    """Per-shard MXU-pass cost of the tile tasks it owns."""
+    counts = class_counts_per_group(cls_map, row_groups, col_groups)
+    w = np.array([CLASS_MXU_COST[c] for c in range(3)])
+    return (counts * w).sum(-1)
+
+
+def imbalance(cls_map: np.ndarray, row_groups: int, col_groups: int) -> float:
+    """max/mean shard cost — 1.0 is perfectly balanced (what PaRSEC's dynamic
+    scheduler achieves asymptotically; what our maps achieve statically)."""
+    c = shard_costs(cls_map, row_groups, col_groups)
+    return float(c.max() / max(c.mean(), 1e-12))

@@ -1,0 +1,203 @@
+"""Distributed tile-centric mixed-precision GEMM — SUMMA over shard_map.
+
+Implements the paper's Algorithm 1 dataflow on a P×Q device grid:
+
+  for each k-panel l:
+      owner column of A(:, l) broadcasts the panel along grid rows
+      owner row    of B(l, :) broadcasts the panel along grid columns
+      every shard rank-updates its C block at the C tiles' precision
+
+**Receiver-side conversion over the ICI** (the paper's key communication
+property): panels are communicated *in storage precision* — the HIGH tiles of
+a panel travel as an fp32 slab and the LOW tiles as a bf16 slab; the receiver
+upcasts after the collective.  For this to have static shapes under SPMD, the
+A/B class maps must be *sorted-balanced* (``schedule.sorted_balanced_map``):
+within every panel and every shard segment, HIGH tiles occupy the lowest
+indices and every panel has identical class counts.  This is the static-SPMD
+adaptation of PaRSEC's per-message datatypes (DESIGN.md §2).
+
+The C map may be any per-tile map; the update runs one dot per C class
+present and selects per tile (on a real TPU this local update is the Pallas
+grouped kernel, ``kernels/grouped_gemm.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as Pspec
+
+from repro.core.precision import PrecClass
+
+try:  # jax>=0.6
+    from jax import shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+def _panel_owner_steps(K: int, tile: int, P: int, Q: int):
+    """Static per-step metadata: owner col of A panel, local panel index in
+    the owner, owner row of B panel, local panel index."""
+    kt = K // tile
+    kloc_a, kloc_b = K // Q, K // P
+    q_a = (np.arange(kt) * tile) // kloc_a
+    la = np.arange(kt) - q_a * (kloc_a // tile)
+    p_b = (np.arange(kt) * tile) // kloc_b
+    lb = np.arange(kt) - p_b * (kloc_b // tile)
+    return (q_a.astype(np.int32), la.astype(np.int32),
+            p_b.astype(np.int32), lb.astype(np.int32))
+
+
+def _check_sorted_balanced(cls_map: np.ndarray, axis: int, groups: int) -> int:
+    """Verify the map is sorted-balanced along ``axis`` with ``groups`` shard
+    segments; return the HIGH count per segment-panel."""
+    m = cls_map if axis == 0 else cls_map.T
+    seg = m.shape[0] // groups
+    h = None
+    for g in range(groups):
+        blk = m[g * seg:(g + 1) * seg]
+        for j in range(m.shape[1]):
+            col = blk[:, j]
+            hi = int((col == int(PrecClass.HIGH)).sum())
+            if not np.all(col[:hi] == int(PrecClass.HIGH)):
+                raise ValueError("map not class-sorted within panel segment")
+            if h is None:
+                h = hi
+            elif h != hi:
+                raise ValueError("map not balanced across panels/segments")
+    return int(h or 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cls_a", "cls_b", "cls_c", "tile", "mesh", "axes",
+                     "alpha", "beta"))
+def _summa_impl(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, *, cls_a, cls_b, cls_c,
+                tile, mesh, axes, alpha, beta):
+    row_ax, col_ax = axes
+    P = mesh.shape[row_ax]
+    Q = mesh.shape[col_ax]
+    M, K = a_hi.shape
+    N = b_hi.shape[1]
+    T = tile
+    mloc, nloc = M // P, N // Q
+
+    amap, bmap, cmap = cls_a.arr, cls_b.arr, cls_c.arr
+    h_a = _check_sorted_balanced(amap, axis=0, groups=P)   # HIGH tiles/panel/shard
+    h_b = _check_sorted_balanced(bmap, axis=1, groups=Q)
+    ha_rows = h_a * T                     # fp32 rows of each local A panel
+    hb_cols = h_b * T                     # fp32 cols of each local B panel
+    c_classes = sorted(int(v) for v in np.unique(cmap))
+    if int(PrecClass.LOW8) in c_classes:
+        raise NotImplementedError("SUMMA path supports HIGH/LOW C tiles")
+
+    steps = _panel_owner_steps(K, T, P, Q)
+    sel_c = np.repeat(np.repeat(cmap, T, 0), T, 1)  # int8[M, N]
+
+    def local_fn(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, sel_c, qa, la, pb, lb):
+        col = jax.lax.axis_index(col_ax)
+        row = jax.lax.axis_index(row_ax)
+
+        def bcast(x, owner, axis_name):
+            if x.size == 0:
+                return x
+            x = jnp.where(owner == (col if axis_name == col_ax else row), x,
+                          jnp.zeros_like(x))
+            return jax.lax.psum(x, axis_name)
+
+        def step(acc, s):
+            qa, la, pb, lb = s
+            # --- A panel: ship storage precision, convert at receiver -----
+            pa_hi = jax.lax.dynamic_slice(a_hi, (0, la * T), (ha_rows, T))
+            pa_lo = jax.lax.dynamic_slice(a_lo, (ha_rows, la * T),
+                                          (mloc - ha_rows, T))
+            pa_hi = bcast(pa_hi, qa, col_ax)
+            pa_lo = bcast(pa_lo, qa, col_ax)
+            a_panel = jnp.concatenate(
+                [pa_hi, pa_lo.astype(jnp.float32)], axis=0)
+            # --- B panel ---------------------------------------------------
+            pb_hi = jax.lax.dynamic_slice(b_hi, (lb * T, 0), (T, hb_cols))
+            pb_lo = jax.lax.dynamic_slice(b_lo, (lb * T, hb_cols),
+                                          (T, nloc - hb_cols))
+            pb_hi = bcast(pb_hi, pb, row_ax)
+            pb_lo = bcast(pb_lo, pb, row_ax)
+            b_panel = jnp.concatenate(
+                [pb_hi, pb_lo.astype(jnp.float32)], axis=1)
+            # --- local rank-T update at each C tile's precision ------------
+            upd = None
+            if int(PrecClass.HIGH) in c_classes:
+                upd_hi = jax.lax.dot_general(
+                    a_panel, b_panel, (((1,), (0,)), ((), ())),
+                    precision=jax.lax.Precision.HIGHEST,
+                    preferred_element_type=jnp.float32)
+                upd = upd_hi
+            if int(PrecClass.LOW) in c_classes:
+                upd_lo = jax.lax.dot_general(
+                    a_panel.astype(jnp.bfloat16), b_panel.astype(jnp.bfloat16),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                if upd is None:
+                    upd = upd_lo
+                else:
+                    upd = jnp.where(sel_c == int(PrecClass.HIGH), upd, upd_lo)
+            return acc + upd, None
+
+        acc0 = jnp.zeros((mloc, nloc), jnp.float32)
+        # mark the carry as device-varying (it becomes varying after psum)
+        acc0 = jax.lax.pcast(acc0, (row_ax, col_ax), to="varying")
+        acc, _ = jax.lax.scan(step, acc0, (qa, la, pb, lb))
+        out = alpha * acc + beta * (c_hi + c_lo.astype(jnp.float32))
+        hi_mask = sel_c == int(PrecClass.HIGH)
+        out_hi = jnp.where(hi_mask, out, 0.0)
+        out_lo = jnp.where(hi_mask, 0.0, out).astype(jnp.bfloat16)
+        return out_hi, out_lo
+
+    spec2 = Pspec(row_ax, col_ax)
+    rep = Pspec()
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(spec2, spec2, spec2, spec2, spec2, spec2, spec2,
+                  rep, rep, rep, rep),
+        out_specs=(spec2, spec2),
+    )(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, jnp.asarray(sel_c), *map(
+        jnp.asarray, steps))
+
+
+def summa_mp_gemm(a, b, c, *, mesh, axes: Sequence[str] = ("row", "col"),
+                  alpha: float = 1.0, beta: float = 0.0):
+    """Distributed C ← αAB + βC over ``mesh`` with MPMatrix operands.
+
+    Returns a new MPMatrix with C's class map.  A/B maps must be
+    sorted-balanced (see module docstring).
+    """
+    from repro.core.layout import MPMatrix
+    if a.lo8.dtype == jnp.float8_e4m3fn and bool((a.cls.arr == 0).any()):
+        raise NotImplementedError("SUMMA path supports HIGH/LOW tiles")
+    out_hi, out_lo = _summa_impl(
+        a.hi, a.lo, b.hi, b.lo, c.hi, c.lo,
+        cls_a=a.cls, cls_b=b.cls, cls_c=c.cls, tile=a.tile, mesh=mesh,
+        axes=tuple(axes), alpha=alpha, beta=beta)
+    lo8 = jnp.zeros_like(out_hi, jnp.float8_e4m3fn)
+    return MPMatrix(out_hi, out_lo, lo8, c.cls, c.tile, c.shape)
+
+
+def summa_collective_bytes(M: int, N: int, K: int, tile: int, P: int, Q: int,
+                           ratio_high: float) -> dict:
+    """Analytic communication model (per full GEMM, all shards summed):
+    each of K/tile steps broadcasts an A panel (M/P rows) to Q columns and a
+    B panel (N/Q cols) to P rows, in storage precision."""
+    kt = K // tile
+    bytes_per_elem = 4 * ratio_high + 2 * (1 - ratio_high)
+    a_panel = (M // P) * tile * bytes_per_elem
+    b_panel = (N // Q) * tile * bytes_per_elem
+    per_step = a_panel * P * Q + b_panel * P * Q   # every shard receives one
+    return {
+        "steps": kt,
+        "a_panel_bytes": a_panel,
+        "b_panel_bytes": b_panel,
+        "total_bytes": per_step * kt,
+        "bytes_per_elem_model": bytes_per_elem,
+    }

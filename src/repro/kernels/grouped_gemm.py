@@ -1,0 +1,165 @@
+"""Grouped GEMM over the compact class-sorted layout (CompactMPMatrix).
+
+The paper's runtime schedules two task pools (dgemm / sgemm).  The compact
+layout stores each class's tiles contiguously (`tiles_hi f32[n_hi,t,t]`,
+`tiles_lo bf16[n_lo,t,t]`), so the TPU analogue is one ``pallas_call`` per
+class whose BlockSpec ``index_map`` *gathers* tiles by slot id from scalar-
+prefetched dispatch tables — HBM traffic equals storage bytes for the class
+being computed (MegaBlocks-style grouped GEMM).
+
+For output tile C(i,j) of class c, the kernel walks k = 0..kt-1 and needs
+A(i,k)·B(k,j) where A/B tiles live in *either* class buffer.  A BlockSpec
+fetch cannot be skipped per-step, so each input class buffer carries one
+trailing **zero tile**; the dispatch table routes a mismatched-class fetch
+to the zero tile and the kernel reconstructs the storage value branch-free
+as ``hi_tile + upcast(lo_tile)`` (one of the two is the zero tile).  Real
+traffic is storage bytes + one redundant zero-tile stream — the honest
+overhead is documented in DESIGN.md §4.
+
+Dispatch tables (host-side, from the static maps):
+    a_hi_slot[i,k] = slot of A(i,k) in tiles_hi (or n_hi → zero tile)
+    a_lo_slot[i,k] = slot in tiles_lo (or n_lo → zero tile)
+    (same for B); c tables list the (i,j) pairs of *this class's* output
+    tiles so the grid runs only over tiles the class owns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.layout import CompactMPMatrix
+from repro.core.precision import PrecClass
+
+HIGH = int(PrecClass.HIGH)
+LOW = int(PrecClass.LOW)
+
+
+def _kernel(ci_ref, cj_ref, a_hi_s, a_lo_s, b_hi_s, b_lo_s,   # prefetch
+            a_hi, a_lo, b_hi, b_lo,                            # inputs
+            o_ref, acc_ref, *, kt: int, high: bool):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # reconstruct storage values: exactly one of the two fetched candidate
+    # tiles is real, the other is the zero tile (blocks are [1, t, t])
+    a32 = a_hi[0] + a_lo[0].astype(jnp.float32)
+    b32 = b_hi[0] + b_lo[0].astype(jnp.float32)
+    if high:
+        acc_ref[0] += jax.lax.dot_general(
+            a32, b32, (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[0] += jax.lax.dot_general(
+            a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == kt - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _class_tables(cls_map: np.ndarray, slot_map: np.ndarray, want: int,
+                  n_in_class: int) -> np.ndarray:
+    """slot table routing mismatched classes to the zero tile."""
+    return np.where(cls_map == want, slot_map, n_in_class).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret",
+                                             "meta"))
+def _grouped_class_call(a_hi, a_lo, b_hi, b_lo, ci, cj,
+                        a_hi_s, a_lo_s, b_hi_s, b_lo_s, *,
+                        tile: int, interpret: bool, meta):
+    n_out, kt, high = meta
+    t = tile
+    out_dtype = jnp.float32 if high else jnp.bfloat16
+
+    def a_map(g, k, ci_r, cj_r, ah, al, bh, bl):
+        return (ah[ci_r[g], k], 0, 0)
+
+    def al_map(g, k, ci_r, cj_r, ah, al, bh, bl):
+        return (al[ci_r[g], k], 0, 0)
+
+    def b_map(g, k, ci_r, cj_r, ah, al, bh, bl):
+        return (bh[k, cj_r[g]], 0, 0)
+
+    def bl_map(g, k, ci_r, cj_r, ah, al, bh, bl):
+        return (bl[k, cj_r[g]], 0, 0)
+
+    def o_map(g, k, *_):
+        return (g, 0, 0)
+
+    kernel = functools.partial(_kernel, kt=kt, high=high)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,
+            grid=(n_out, kt),
+            in_specs=[
+                pl.BlockSpec((1, t, t), a_map),
+                pl.BlockSpec((1, t, t), al_map),
+                pl.BlockSpec((1, t, t), b_map),
+                pl.BlockSpec((1, t, t), bl_map),
+            ],
+            out_specs=pl.BlockSpec((1, t, t), o_map),
+            scratch_shapes=[pltpu.VMEM((1, t, t), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_out, t, t), out_dtype),
+        interpret=interpret,
+    )(ci, cj, a_hi_s, a_lo_s, b_hi_s, b_lo_s, a_hi, a_lo, b_hi, b_lo)
+
+
+def grouped_mp_gemm(a: CompactMPMatrix, b: CompactMPMatrix,
+                    c_cls: np.ndarray, *, interpret: bool = False
+                    ) -> CompactMPMatrix:
+    """C = A·B with compact class-sorted operands and a per-tile output
+    class map ``c_cls`` int8[mt, nt].  Returns a CompactMPMatrix."""
+    t = a.tile
+    mt, kt = a.cls.arr.shape
+    kt2, nt = b.cls.arr.shape
+    assert kt == kt2
+    # zero tiles appended per class buffer
+    z32 = jnp.zeros((1, t, t), jnp.float32)
+    z16 = jnp.zeros((1, t, t), jnp.bfloat16)
+    a_hi = jnp.concatenate([a.tiles_hi, z32], 0)
+    a_lo = jnp.concatenate([a.tiles_lo, z16], 0)
+    b_hi = jnp.concatenate([b.tiles_hi, z32], 0)
+    b_lo = jnp.concatenate([b.tiles_lo, z16], 0)
+
+    a_hi_s = _class_tables(a.cls.arr, a.slot.arr, HIGH, a.tiles_hi.shape[0])
+    a_lo_s = _class_tables(a.cls.arr, a.slot.arr, LOW, a.tiles_lo.shape[0])
+    b_hi_s = _class_tables(b.cls.arr, b.slot.arr, HIGH, b.tiles_hi.shape[0])
+    b_lo_s = _class_tables(b.cls.arr, b.slot.arr, LOW, b.tiles_lo.shape[0])
+
+    c_cls = np.asarray(c_cls, np.int8)
+    out_buffers = {}
+    for want, high in ((HIGH, True), (LOW, False)):
+        idx = np.argwhere(c_cls == want)
+        if len(idx) == 0:
+            out_buffers[want] = jnp.zeros(
+                (0, t, t), jnp.float32 if high else jnp.bfloat16)
+            continue
+        ci = jnp.asarray(idx[:, 0].astype(np.int32))
+        cj = jnp.asarray(idx[:, 1].astype(np.int32))
+        out_buffers[want] = _grouped_class_call(
+            a_hi, a_lo, b_hi, b_lo, ci, cj,
+            jnp.asarray(a_hi_s), jnp.asarray(a_lo_s),
+            jnp.asarray(b_hi_s), jnp.asarray(b_lo_s),
+            tile=t, interpret=interpret,
+            meta=(len(idx), kt, high))
+
+    from repro.core.layout import _HashableMap
+    slot = CompactMPMatrix.make_slots(c_cls)
+    return CompactMPMatrix(
+        out_buffers[HIGH], out_buffers[LOW],
+        jnp.zeros((0, t, t), jnp.float8_e4m3fn),
+        _HashableMap(c_cls), _HashableMap(slot), t,
+        (mt * t, nt * t))

@@ -1,0 +1,107 @@
+"""Class-split blocked GEMM — the production kernel behind MPLinear.
+
+A KSplit weight stores its HIGH K-rows as fp32 and LOW K-rows as bf16 in two
+contiguous buffers (DESIGN.md §3(3)).  The matmul is two standard blocked
+GEMMs that share the output accumulator:
+
+    y  = x[:, :K_hi] · w_hi     (fp32 operands, Precision.HIGHEST)
+    y += x[:, K_hi:] · w_lo     (bf16 operands)
+
+Each class runs as its own ``pallas_call`` (PaRSEC would schedule these as a
+dgemm pool and an sgemm pool); the second call aliases the first call's
+output (``input_output_aliases``) so the accumulation never round-trips an
+extra HBM buffer.  HBM traffic is exactly storage bytes: fp32 blocks of w_hi,
+bf16 blocks of w_lo, x in its storage dtype — receiver-side conversion to the
+operational precision happens in VMEM after the DMA.
+
+Block shapes: (bm × bk)·x + (bk × bn)·w + (bm × bn)·acc.  Defaults
+bm=bn=bk=128 → 128²·(4+4+4)·2(double-buffer) ≈ 400 KB VMEM; bump bm/bn to
+256/512 for large M on real hardware.  MXU wants every dim % 128 == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, y_in_ref, y_ref, acc_ref, *,
+                 kt: int, high: bool, accumulate: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        if accumulate:
+            acc_ref[...] = y_in_ref[...]
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if high:
+        # receiver-side conversion: operands to fp32, 3-pass MXU dot
+        upd = jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)
+    else:
+        upd = jax.lax.dot_general(
+            x_ref[...].astype(jnp.bfloat16), w_ref[...].astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    acc_ref[...] += upd
+
+    @pl.when(k == kt - 1)
+    def _store():
+        y_ref[...] = acc_ref[...]
+
+
+def _one_class(x, w, y_in, *, high: bool, bm: int, bn: int, bk: int,
+               interpret: bool):
+    """y = y_in + x·w for one precision class."""
+    M, K = x.shape
+    N = w.shape[1]
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bn, bk)
+    grid = (M // bm, N // bn, K // bk)
+    accumulate = y_in is not None
+    if y_in is None:
+        y_in = jnp.zeros((M, N), jnp.float32)
+    kernel = functools.partial(_gemm_kernel, kt=K // bk, high=high,
+                               accumulate=accumulate)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        input_output_aliases={2: 0} if accumulate else {},
+        interpret=interpret,
+    )(x, w, y_in)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ksplit_gemm(x, w_hi, w_lo, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool = False):
+    """y = x[:, :K_hi]·w_hi + x[:, K_hi:]·w_lo, fp32 out.
+
+    x: [M, K_hi + K_lo] (fp32 or bf16 storage); w_hi: f32[K_hi, N];
+    w_lo: bf16[K_lo, N].
+    """
+    k_hi = w_hi.shape[0]
+    k_lo = w_lo.shape[0]
+    y = None
+    if k_hi:
+        y = _one_class(x[:, :k_hi], w_hi, None, high=True,
+                       bm=bm, bn=bn, bk=min(bk, k_hi), interpret=interpret)
+    if k_lo:
+        y = _one_class(x[:, k_hi:], w_lo, y, high=False,
+                       bm=bm, bn=bn, bk=min(bk, k_lo), interpret=interpret)
+    assert y is not None, "empty weight"
+    return y

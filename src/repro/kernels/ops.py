@@ -1,0 +1,55 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the CPU host (this container, and unit tests) kernels run in
+``interpret=True`` mode — the kernel body executes in Python for exact
+semantic validation.  On a TPU backend they compile through Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import KSplitWeight, MPMatrix
+from repro.kernels import convert as _convert
+from repro.kernels import ksplit_gemm as _ksplit
+from repro.kernels import mp_gemm_tile as _mp_tile
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mp_gemm(a: MPMatrix, b: MPMatrix, c: MPMatrix,
+            alpha: float = 1.0, beta: float = 0.0) -> MPMatrix:
+    """Tile-centric mixed-precision GEMM (paper Algorithm 1) via the Pallas
+    kernel.  Dual-buffer layout in/out."""
+    o_hi, o_lo = _mp_tile.mp_gemm_tile(
+        a.hi, a.lo, b.hi, b.lo, c.hi, c.lo,
+        jnp.asarray(a.cls.arr), jnp.asarray(b.cls.arr), jnp.asarray(c.cls.arr),
+        tile=a.tile, alpha=alpha, beta=beta, interpret=_interpret())
+    lo8 = jnp.zeros_like(o_hi, jnp.float8_e4m3fn)
+    return MPMatrix(o_hi, o_lo, lo8, c.cls, c.tile, c.shape)
+
+
+def ksplit_matmul_kernel(x: jax.Array, w: KSplitWeight,
+                         bm: int = 128, bn: int = 128, bk: int = 128
+                         ) -> jax.Array:
+    """MPLinear's matmul through the class-split Pallas kernel.  x: [M, K]
+    with K-classes stored contiguously (sorted maps)."""
+    if w.w_lo8.size:
+        raise NotImplementedError("kernel path covers HIGH/LOW classes")
+    return _ksplit.ksplit_gemm(x, w.w_hi, w.w_lo, bm=bm, bn=bn, bk=bk,
+                               interpret=_interpret())
+
+
+def convert_tiles(x: jax.Array, out_dtype, bm: int = 256, bn: int = 256
+                  ) -> jax.Array:
+    """Streaming dtype conversion kernel."""
+    return _convert.convert(x, out_dtype=out_dtype, bm=bm, bn=bn,
+                            interpret=_interpret())
+
+
+def grouped_mp_gemm(a, b, c_cls):
+    """Compact class-sorted grouped GEMM (one pallas_call per C class)."""
+    from repro.kernels.grouped_gemm import grouped_mp_gemm as _g
+    return _g(a, b, c_cls, interpret=_interpret())

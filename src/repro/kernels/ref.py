@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Standalone plain-array formulations of the tile semantics in
+``core/mp_gemm.py`` so kernel sweeps don't need the layout containers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import PrecClass
+
+HIGH = int(PrecClass.HIGH)
+LOW = int(PrecClass.LOW)
+
+
+def _expand(m: np.ndarray, t: int) -> np.ndarray:
+    return np.repeat(np.repeat(m, t, 0), t, 1)
+
+
+def storage_dense(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Dual-buffer → dense fp32 storage value (each tile valid in one)."""
+    return hi + lo.astype(jnp.float32)
+
+
+def mp_gemm_tile_ref(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo,
+                     pa: np.ndarray, pb: np.ndarray, pc: np.ndarray,
+                     tile: int, alpha: float = 1.0, beta: float = 0.0):
+    """Oracle for kernels/mp_gemm_tile: per-C-tile operational precision with
+    receiver-side conversion, fp32 accumulation, C stored per-tile.
+    Returns (c_hi_out f32, c_lo_out bf16)."""
+    del pa, pb  # storage precision is already encoded in the dual buffers
+    ad = storage_dense(a_hi, a_lo)
+    bd = storage_dense(b_hi, b_lo)
+    cd = storage_dense(c_hi, c_lo)
+    acc_hi = jax.lax.dot_general(
+        ad, bd, (((1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)
+    acc_lo = jax.lax.dot_general(
+        ad.astype(jnp.bfloat16), bd.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    sel = jnp.asarray(_expand(pc, tile))
+    out = alpha * jnp.where(sel == HIGH, acc_hi, acc_lo) + beta * cd
+    out_hi = jnp.where(sel == HIGH, out, 0.0)
+    out_lo = jnp.where(sel == HIGH, 0.0, out).astype(jnp.bfloat16)
+    return out_hi, out_lo
+
+
+def ksplit_gemm_ref(x: jax.Array, w_hi: jax.Array, w_lo: jax.Array):
+    """Oracle for kernels/ksplit_gemm: y = x[:, :K_hi]·w_hi (fp32, HIGHEST)
+    + x[:, K_hi:]·w_lo (bf16), fp32 accumulation.  x is fp32 or bf16; the
+    receiver-side conversion casts each slice to the class's op precision."""
+    k_hi = w_hi.shape[0]
+    y = jnp.zeros((x.shape[0], w_hi.shape[1] if k_hi else w_lo.shape[1]),
+                  jnp.float32)
+    if k_hi:
+        y = y + jax.lax.dot_general(
+            x[:, :k_hi].astype(jnp.float32), w_hi, (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)
+    if w_lo.shape[0]:
+        y = y + jax.lax.dot_general(
+            x[:, k_hi:].astype(jnp.bfloat16), w_lo, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return y
+
+
+def convert_ref(x: jax.Array, out_dtype) -> jax.Array:
+    """Oracle for kernels/convert."""
+    return x.astype(out_dtype)

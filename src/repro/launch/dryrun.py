@@ -1,0 +1,274 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh, record memory/cost analysis and the collective schedule.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--out results/]
+
+``--all`` sweeps every registered cell (32 cells after documented skips),
+caching one JSON per cell so interrupted sweeps resume.
+
+The XLA_FLAGS lines below MUST run before any other import that initializes
+jax — 512 placeholder host devices stand in for the 2×16×16 chip grid.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as config_base
+from repro.configs.base import SHAPES, cells, get, load_all
+from repro.data.pipeline import batch_spec
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+# per-(arch, shape) microbatch overrides: keep per-microbatch activations
+# inside ~16 GB/chip (tokens/shard per microbatch ≲ 16k for the giants)
+MICROBATCHES = {
+    ("llama3-405b", "train_4k"): 8,
+    ("llava-next-34b", "train_4k"): 4,
+    ("jamba-v0.1-52b", "train_4k"): 4,
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): 4,
+    ("llama3-8b", "train_4k"): 2,
+    ("gemma3-4b", "train_4k"): 2,
+    ("qwen2-moe-a2.7b", "train_4k"): 2,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'f32[16,128]' or tuple '(f32[..], bf16[..])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the compiled HLO."""
+    out: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        b = _shape_bytes(m.group(2))
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def model_flops_estimate(cfg, seq_len: int, global_batch: int,
+                         kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D train (N = active params), 2·N·D forward."""
+    n_active = cfg.param_count()
+    if cfg.n_experts:
+        # active experts only
+        dense = cfg.param_count() - (
+            len([1 for _, f in cfg.layer_kinds() if f == "moe"])
+            * (cfg.n_experts - cfg.top_k) * 3 * cfg.d_model * cfg.d_ff)
+        n_active = dense
+    tokens = global_batch * (seq_len if kind != "decode" else 1)
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               microbatches: int | None = None, compile_opts=None) -> dict:
+    import dataclasses
+    cfg = get(arch)
+    shp = SHAPES[shape_name]
+    seq_len, global_batch, kind = (shp["seq_len"], shp["global_batch"],
+                                   shp["kind"])
+    if kind != "train" and cfg.fsdp:
+        # FSDP exists to shard optimizer/training state; at inference the
+        # params stay fully TP-sharded — re-gathering them per decode step
+        # cost ~27 GB/token on jamba (EXPERIMENTS §Perf iteration A2)
+        cfg = dataclasses.replace(cfg, fsdp=False)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    params_shapes = jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    pspecs = SH.param_specs(params_shapes, cfg, mesh)
+    result = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "multi_pod": multi_pod, "mesh": dict(mesh.shape),
+        "seq_len": seq_len, "global_batch": global_batch,
+    }
+
+    from repro.models.shard_hints import hints_enabled
+    if kind == "train":
+        cfg_arch = get(arch)
+        if cfg_arch.fsdp:
+            # giants: no fp32 master (the HIGH-class tiles are already fp32
+            # storage), bf16 moments — halves ZeRO state (DESIGN.md §8)
+            ocfg = adamw.AdamWConfig(master_weights=False,
+                                     moment_dtype="bfloat16")
+        else:
+            ocfg = adamw.AdamWConfig()
+        opt_shapes = jax.eval_shape(lambda p: adamw.init(p, ocfg),
+                                    params_shapes)
+        ospecs = SH.opt_state_specs(params_shapes, pspecs, ocfg, mesh)
+        bspec_tree = batch_spec(cfg, seq_len, global_batch, "train")
+        bspecs = SH.batch_specs(bspec_tree, mesh)
+        mb = microbatches or MICROBATCHES.get((arch, shape_name), 1)
+        result["microbatches"] = mb
+        step = make_train_step(cfg, ocfg, microbatches=mb)
+        with mesh, hints_enabled(mesh):
+            jitted = jax.jit(
+                step,
+                in_shardings=(SH.to_named(pspecs, mesh),
+                              SH.to_named(ospecs, mesh),
+                              SH.to_named(bspecs, mesh)),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shapes, opt_shapes, bspec_tree)
+            compiled = lowered.compile()
+    elif kind == "prefill":
+        bspec_tree = batch_spec(cfg, seq_len, global_batch, "prefill")
+        bspecs = SH.batch_specs(bspec_tree, mesh)
+        with mesh, hints_enabled(mesh):
+            jitted = jax.jit(
+                lambda p, b: T.forward_prefill(p, cfg, b),
+                in_shardings=(SH.to_named(pspecs, mesh),
+                              SH.to_named(bspecs, mesh)))
+            lowered = jitted.lower(params_shapes, bspec_tree)
+            compiled = lowered.compile()
+    elif kind == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: T.init_cache(cfg, global_batch, seq_len))
+        cspecs = SH.cache_specs(cache_shapes, cfg, mesh, batch=global_batch)
+        tok = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+        tspec = SH.batch_specs({"t": tok}, mesh)["t"] \
+            if global_batch > 1 else jax.sharding.PartitionSpec()
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh, hints_enabled(mesh):
+            jitted = jax.jit(
+                lambda p, t, c, pos: T.forward_decode(p, cfg, t, c, pos),
+                in_shardings=(SH.to_named(pspecs, mesh),
+                              SH.to_named(tspec, mesh),
+                              SH.to_named(cspecs, mesh),
+                              SH.to_named(jax.sharding.PartitionSpec(),
+                                          mesh)),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_shapes, tok, cache_shapes, pos)
+            compiled = lowered.compile()
+    else:
+        raise ValueError(kind)
+
+    result["lower_compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    result["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes_per_device": (
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)),
+    }
+    result["cost"] = {
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "transcendentals": cost.get("transcendentals"),
+    }
+    hlo = compiled.as_text()
+    result["collectives_raw"] = parse_collectives(hlo)
+    from repro.launch import hlo_analysis
+    corr = hlo_analysis.analyze(hlo)
+    result["corrected"] = {
+        "flops": corr["flops"],
+        "mxu_flops": corr["mxu_flops"],
+        "dot_bytes": corr["dot_bytes"],
+    }
+    result["collectives"] = corr["collectives"]
+    result["hlo_bytes"] = len(hlo)
+    result["model_flops"] = model_flops_estimate(cfg, seq_len, global_batch,
+                                                 kind)
+    result["n_chips"] = n_chips
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    load_all()
+    os.makedirs(args.out, exist_ok=True)
+
+    todo = []
+    if args.all:
+        for arch in config_base.REGISTRY:
+            for shape in cells(arch):
+                todo.append((arch, shape, False))
+                if args.both_meshes:
+                    todo.append((arch, shape, True))
+    else:
+        todo.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in todo:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip cached] {tag}")
+            continue
+        print(f"[lower+compile] {tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape, multi_pod=mp,
+                             microbatches=args.microbatches)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"  ok in {res['lower_compile_s']}s  "
+                  f"flops={res['cost']['flops']:.3e}  "
+                  f"coll={res['collectives'].get('total_bytes', 0):.3e}B",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"  FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Trip-count-corrected HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any scanned
+program (layer stacks, microbatches, flash-attention chunks) is massively
+under-counted.  This module parses ``compiled.as_text()``, builds the
+computation call graph, multiplies while bodies by their
+``known_trip_count`` (XLA annotates scan-derived loops), and accumulates:
+
+  * dot FLOPs            (2 · prod(out) · contracted_dim)
+  * dot operand/output bytes  (upper bound of matmul HBM traffic)
+  * collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), output-shape bytes
+
+All numbers are per-device (the partitioned module is the per-device
+program under SPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s64": 8, "u64": 8, "c64": 8, "c128": 16, "s4": 1,
+    "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_NAME_EQ_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
+
+
+def _split_instr(line: str):
+    """'(ROOT) %name = TYPE opcode(...)' → (name, type_str, opcode) or None.
+    Handles tuple types containing parens and /*index=N*/ comments."""
+    if line.startswith("ROOT "):
+        line = line[5:]
+    m = _NAME_EQ_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        type_str = rest[:end + 1]
+        rest2 = rest[end + 1:].lstrip()
+    else:
+        m2 = re.match(r"\S+", rest)
+        if not m2:
+            return None
+        type_str = m2.group(0)
+        rest2 = rest[m2.end():].lstrip()
+    m3 = _OPCODE_RE.match(rest2)
+    if not m3:
+        return None
+    return name, type_str, m3.group(1)
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[\'"]?\s*:\s*\{\s*[\'"]n[\'"]\s*:'
+                      r'\s*[\'"]?(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    """All (dtype, dims) found in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+#: MXU passes per dot by operand dtype (v5e: fp32 = bf16x3)
+_MXU_PASSES = {"f32": 3.0, "bf16": 1.0, "f16": 1.0, "f8e4m3fn": 1.0,
+               "f8e5m2": 1.0, "f64": 6.0}
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    mxu_flops: float = 0.0       # pass-weighted (fp32 dot = 3× bf16)
+    dot_bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: [0, 0.0]))
+    edges: list = dataclasses.field(default_factory=list)  # (callee, mult)
+
+
+def _parse_computations(text: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    cur: CompCost | None = None
+    shapes: dict[str, str] = {}
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = CompCost()
+                comps[m.group(1)] = cur
+                shapes = {}
+                # parameters: "name: type" pairs inside parens
+                for pm in re.finditer(r"%?([\w.\-]+)\s*:\s*([^,)]+)",
+                                      m.group(2)):
+                    shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None or line.startswith("}"):
+            continue
+        im = _split_instr(line)
+        if not im:
+            continue
+        name, out_type, opcode = im
+        shapes[name] = out_type
+        if opcode == "dot":
+            ops = re.search(r"dot\(([^)]*)\)", line)
+            operands = [o.strip().lstrip("%") for o in
+                        ops.group(1).split(",")] if ops else []
+            lhs_shape = shapes.get(operands[0], "") if operands else ""
+            lhs_dims = _shape_dims(lhs_shape)
+            cm = _CONTRACT_RE.search(line)
+            contracted = 1
+            if cm and lhs_dims:
+                dims = lhs_dims[0][1]
+                for idx in (int(i) for i in cm.group(1).split(",") if i):
+                    contracted *= dims[idx] if idx < len(dims) else 1
+            out_elems = 0
+            for dt, dims in _shape_dims(out_type):
+                n = 1
+                for d in dims:
+                    n *= d
+                out_elems += n
+            f = 2.0 * out_elems * contracted
+            cur.flops += f
+            lhs_dt = lhs_dims[0][0] if lhs_dims else "f32"
+            cur.mxu_flops += f * _MXU_PASSES.get(lhs_dt, 1.0)
+            rhs_shape = shapes.get(operands[1], "") if len(operands) > 1 \
+                else ""
+            cur.dot_bytes += (_bytes_of(out_type) + _bytes_of(lhs_shape)
+                              + _bytes_of(rhs_shape))
+        elif opcode in COLLECTIVES:
+            b = _bytes_of(out_type)
+            cur.coll[opcode][0] += 1
+            cur.coll[opcode][1] += b
+        elif opcode in ("exponential", "tanh", "log", "rsqrt", "power"):
+            cur.transcendentals += _bytes_of(out_type) / 4.0
+        # call edges
+        if opcode == "while":
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+            for cm2 in _CALL_RE.finditer(line):
+                cur.edges.append((cm2.group(1), trip))
+        else:
+            for cm2 in _CALL_RE.finditer(line):
+                cur.edges.append((cm2.group(1), 1))
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.edges.append((b.strip().lstrip("%"), 1))
+    return comps
+
+
+def analyze(text: str, entry: str | None = None) -> dict:
+    comps = _parse_computations(text)
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry = m.group(1) if m else next(iter(comps))
+
+    totals = {"flops": 0.0, "mxu_flops": 0.0, "dot_bytes": 0.0,
+              "transcendentals": 0.0}
+    coll: dict[str, list] = defaultdict(lambda: [0, 0.0])
+
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in seen_stack:
+            return
+        c = comps[name]
+        totals["flops"] += mult * c.flops
+        totals["mxu_flops"] += mult * c.mxu_flops
+        totals["dot_bytes"] += mult * c.dot_bytes
+        totals["transcendentals"] += mult * c.transcendentals
+        for kind, (cnt, b) in c.coll.items():
+            coll[kind][0] += mult * cnt
+            coll[kind][1] += mult * b
+        seen_stack.add(name)
+        for callee, m2 in c.edges:
+            visit(callee, mult * m2)
+        seen_stack.discard(name)
+
+    visit(entry, 1.0)
+    coll_out = {k: {"count": int(v[0]), "bytes": v[1]}
+                for k, v in coll.items()}
+    coll_out["total_bytes"] = sum(v[1] for v in coll.values())
+    return {
+        "flops": totals["flops"],
+        "mxu_flops": totals["mxu_flops"],
+        "dot_bytes": totals["dot_bytes"],
+        "transcendentals": totals["transcendentals"],
+        "collectives": coll_out,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,223 @@
+"""Path-based sharding rules: params, optimizer state, batches, caches.
+
+TP plan (DESIGN.md §5/§6):
+  column-parallel (N→"model"): wq wk wv gate up in_proj up_proj ff_up lm_head
+  row-parallel   (K→"model"): wo down out_proj down_proj ff_down
+  MoE: E→"model" when expert-parallel, else d_ff→"model"
+  embed/vocab → "model" when divisible; small/norm params replicated
+  ZeRO-1: optimizer moments/master additionally sharded over "data"
+  batches: leading dim over ("pod","data"); decode caches: batch over "data"
+  unless batch==1, then sequence over "data" (sequence-parallel long decode).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+COLUMN_PARALLEL = {"wq", "wk", "wv", "gate", "up", "in_proj", "up_proj",
+                   "ff_up", "lm_head"}
+ROW_PARALLEL = {"wo", "down", "out_proj", "down_proj", "ff_down"}
+REPLICATED_MODULES = {"router", "r", "b_if", "frontend_proj", "pos_embed"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def _spec_last(leaf_ndim: int, axis_from_end: int, name: str) -> P:
+    spec = [None] * leaf_ndim
+    spec[leaf_ndim - axis_from_end] = name
+    return P(*spec)
+
+
+def _divisible(n: int, tp: int) -> bool:
+    return n % tp == 0
+
+
+def _add_fsdp(spec: P, shape, dp: int, min_elems: int = 1 << 20) -> P:
+    """FSDP/ZeRO-3: add "data" on the first free dim divisible by the data
+    axis (large leaves only — small params stay replicated)."""
+    n = 1
+    for d in shape:
+        n *= d
+    if n < min_elems:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if "data" in entries:
+        return spec
+    # prefer the largest free divisible dim
+    best, best_dim = -1, -1
+    for i, (d, s) in enumerate(zip(shape, entries)):
+        if s is None and d % dp == 0 and d >= dp and d > best_dim:
+            best, best_dim = i, d
+    if best >= 0:
+        entries[best] = "data"
+        return P(*entries)
+    return spec
+
+
+def param_spec_fn(cfg: ArchConfig, tp: int, dp: int = 0):
+    """Returns f(path, leaf_shape_dtype) -> PartitionSpec."""
+
+    def fn(path, leaf) -> P:
+        spec = _base_fn(path, leaf)
+        if cfg.fsdp and dp > 1:
+            spec = _add_fsdp(spec, leaf.shape, dp)
+        return spec
+
+    def _base_fn(path, leaf) -> P:
+        names = _path_names(path)
+        shape = leaf.shape
+        nd = len(shape)
+        joined = "/".join(names)
+        # module name = last dict key before pytree-index suffixes
+        mod = next((n for n in reversed(names) if not n.startswith("#")),
+                   "")
+        # which child of a split weight is this leaf (w_hi=0, w_lo=1, ...)
+        if "embed" == mod:
+            return (P("model", None) if _divisible(cfg.vocab, tp) else P())
+        if mod in REPLICATED_MODULES or "norm" in mod or mod in (
+                "b_in", "dt_bias", "conv_b", "b_if"):
+            # exceptions handled below for sharded vectors
+            if mod in ("conv_b",):
+                din = shape[-1]
+                return (_spec_last(nd, 1, "model")
+                        if _divisible(din, tp) else P())
+            return P()
+        if "moe" in names:
+            # MoE*Split leaves: [.., E, K, N]
+            if mod in ("gate", "up", "down") and nd >= 3:
+                if cfg.moe_ep:
+                    return _spec_last(nd, 3, "model")
+                if mod == "down":      # MoENSplit [E, K=d_ff, N_cls]
+                    return _spec_last(nd, 2, "model")
+                return _spec_last(nd, 1, "model")   # column d_ff
+            # shared expert MLP falls through to generic rules
+        if mod == "lm_head" or "lm_head" in names:
+            return (_spec_last(nd, 1, "model")
+                    if _divisible(cfg.vocab, tp) else P())
+        for col in COLUMN_PARALLEL:
+            if col in names:
+                if nd >= 2 and _divisible(shape[-1], tp):
+                    return _spec_last(nd, 1, "model")
+                return P()
+        for row in ROW_PARALLEL:
+            if row in names:
+                if nd >= 2 and _divisible(shape[-2], tp):
+                    return _spec_last(nd, 2, "model")
+                return P()
+        # mamba / mlstm internals sharded on d_in
+        if mod in ("conv_w",):
+            return (_spec_last(nd, 1, "model")
+                    if _divisible(shape[-1], tp) else P())
+        if mod in ("x_proj", "w_if", "A_log"):
+            return (_spec_last(nd, 2, "model")
+                    if _divisible(shape[-2], tp) else P())
+        if mod in ("dt_proj",):
+            return (_spec_last(nd, 1, "model")
+                    if _divisible(shape[-1], tp) else P())
+        if mod in ("D", "skip", "dt_bias"):
+            return (_spec_last(nd, 1, "model")
+                    if _divisible(shape[-1], tp) else P())
+        return P()
+
+    return fn
+
+
+def param_specs(params_shapes, cfg: ArchConfig, mesh):
+    tp = mesh.shape["model"]
+    dp = mesh.shape.get("data", 1)
+    fn = param_spec_fn(cfg, tp, dp)
+    return jax.tree_util.tree_map_with_path(fn, params_shapes)
+
+
+def zero1_specs(pspecs, params_shapes, mesh):
+    """Optimizer state sharding: param spec + "data" on the first free,
+    divisible dim (ZeRO-1)."""
+    dp = mesh.shape["data"]
+
+    def add_data(spec: P, leaf):
+        shape = leaf.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        if "data" in entries:     # FSDP params already carry "data"
+            return P(*entries)
+        for i, (dim, s) in enumerate(zip(shape, entries)):
+            if s is None and dim % dp == 0 and dim >= dp:
+                entries[i] = "data"
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(add_data, pspecs, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(params_shapes, pspecs, ocfg, mesh):
+    """AdamWState(mu, nu, master, count) specs."""
+    z = zero1_specs(pspecs, params_shapes, mesh)
+    from repro.optim.adamw import AdamWState
+    master = z if ocfg.master_weights else None
+    return AdamWState(z, z, master, P())
+
+
+def batch_specs(spec_tree, mesh, *, batch_axes=None):
+    """Leading dim over all data axes present in the mesh."""
+    from repro.launch.mesh import data_axes
+    axes = batch_axes or data_axes(mesh)
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def fn(leaf):
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(fn, spec_tree)
+
+
+def cache_specs(cache_shapes, cfg: ArchConfig, mesh, *, batch: int):
+    """Decode caches.  Leaves are stacked [L(, ...), B, ...]:
+    attention k/v [L, B, S, n_kv, dh]; recurrent states [L, B, ...].
+    batch > 1 → shard B over "data" (and kv-heads over "model");
+    batch == 1 → sequence-parallel: shard S of attention caches over
+    "data" (GSPMD inserts the two-pass softmax combine)."""
+    dp = mesh.shape["data"]
+    tp = mesh.shape["model"]
+
+    def fn(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        names = _path_names(path)
+        is_kv = names[-1] in ("k", "v")
+        entries: list = [None] * nd
+        if is_kv and nd == 5:
+            L, B, S, H, dh = shape
+            if B % dp == 0 and B >= dp:
+                entries[1] = "data"
+            elif S % dp == 0 and S > 1:
+                entries[2] = "data"          # sequence-parallel cache
+            if H % tp == 0:
+                entries[3] = "model"
+            return P(*entries)
+        # recurrent state [L, B, ...]: shard B when divisible; the states
+        # themselves are small (O(d·n) per layer) so otherwise replicate
+        if nd >= 2 and shape[1] % dp == 0 and shape[1] >= dp:
+            entries[1] = "data"
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(fn, cache_shapes)
+
+
+def to_named(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,137 @@
+"""Mamba (selective SSM) block — chunked associative scan, TPU-adapted.
+
+The CUDA reference fuses the selective scan into one kernel with SRAM-resident
+state; the TPU adaptation chunks time so the per-chunk state tensor
+[B, Tc, d_in, d_state] stays VMEM/HBM-friendly, runs an associative scan
+inside each chunk, and carries the SSM state across chunks with lax.scan
+(DESIGN.md §2: hardware adaptation).  d_in is TP-sharded over "model" so the
+chunk working set divides by the axis size.
+
+Projections route through MPLinear (the paper's mixed-precision GEMM);
+the tiny Δ/B/C projections stay dense bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear import init_mp_linear
+from repro.core.precision import Policy
+from repro.models.common import ACT_DTYPE
+
+
+def init_mamba(key, d_model: int, policy: Policy | None, *,
+               expand: int = 2, d_state: int = 16, d_conv: int = 4,
+               tile: int | None = None) -> dict:
+    d_in = expand * d_model
+    dt_rank = max(1, int(np.ceil(d_model / 16)))
+    keys = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": init_mp_linear(keys[0], d_model, 2 * d_in, policy,
+                                  split="ksplit", tile=tile),
+        "conv_w": (jax.random.normal(keys[1], (d_conv, d_in), jnp.float32)
+                   * (1.0 / np.sqrt(d_conv))),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": (jax.random.normal(keys[2], (d_in, dt_rank + 2 * d_state),
+                                     jnp.float32) / np.sqrt(d_in)
+                   ).astype(jnp.bfloat16),
+        "dt_proj": (jax.random.normal(keys[3], (dt_rank, d_in), jnp.float32)
+                    / np.sqrt(dt_rank)),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus ≈ 0.01
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_mp_linear(keys[4], d_in, d_model, policy,
+                                   split="nsplit", tile=tile),
+    }
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                   state: jax.Array | None = None):
+    """Depthwise causal conv.  x: [B, S, d]; w: [K, d].  Returns (y, new
+    state [B, K-1, d]) for decode continuation."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    new_state = xp[:, -(K - 1):, :]
+    return y + b[None, None, :], new_state
+
+
+def _ssm_chunked(u, dt, B_t, C_t, A, D, h0, chunk: int):
+    """Selective scan.  u/dt: [B, S, d]; B_t/C_t: [B, S, n]; A: [d, n];
+    h0: [B, d, n].  Returns (y [B, S, d], h_final)."""
+    Bsz, S, d = u.shape
+    n = A.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    # the [B, S, d, n] decay/input tensors are built PER CHUNK inside the
+    # scan body (materializing them for the full sequence cost ~1 TB temp
+    # on the jamba train cell — EXPERIMENTS §Perf)
+    uc = u.reshape(Bsz, nc, chunk, d).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(Bsz, nc, chunk, d).transpose(1, 0, 2, 3)
+    Bc = B_t.reshape(Bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    Cc = C_t.reshape(Bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, xs):
+        ub, dtb, bb, cc = xs                              # [B, chunk, ...]
+        ac = jnp.exp(dtb[..., None] * A[None, None])      # [B, chunk, d, n]
+        bc = (dtb * ub)[..., None] * bb[:, :, None, :]
+        a_cum, h_in = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = h_in + a_cum * h[:, None]                 # [B, chunk, d, n]
+        y = jnp.einsum("btdn,btn->btd", h_all, cc)
+        return h_all[:, -1], y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, S, d)
+    return y + u * D[None, None], h_fin
+
+
+def mamba_block(params, x, *, chunk: int = 128, state=None):
+    """x: [B, S, d] → [B, S, d].  ``state`` (decode): dict with 'h' and
+    'conv'; pass None for training/prefill.  Returns y or (y, new_state)."""
+    B, S, d = x.shape
+    d_in = params["A_log"].shape[0]
+    dt_rank = params["dt_proj"].shape[0]
+    n = params["A_log"].shape[1]
+
+    xz = params["in_proj"](x)                              # [B, S, 2*d_in]
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _conv1d_causal(xs.astype(jnp.float32), params["conv_w"],
+                                  params["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = (xs.astype(ACT_DTYPE) @ params["x_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ params["dt_proj"]
+                         + params["dt_bias"])
+    B_t = proj[..., dt_rank:dt_rank + n]
+    C_t = proj[..., dt_rank + n:]
+    A = -jnp.exp(params["A_log"])
+
+    h0 = (jnp.zeros((B, d_in, n), jnp.float32) if state is None
+          else state["h"])
+    y, h_fin = _ssm_chunked(xs, dt, B_t, C_t, A, params["D"], h0,
+                            chunk=chunk if state is None else 1)
+    out = params["out_proj"]((y * jax.nn.silu(z.astype(jnp.float32))
+                              ).astype(ACT_DTYPE)).astype(ACT_DTYPE)
+    if state is None:
+        return out
+    return out, {"h": h_fin, "conv": new_conv}
+
+
+def init_mamba_state(B: int, d_model: int, *, expand: int = 2,
+                     d_state: int = 16, d_conv: int = 4) -> dict:
+    d_in = expand * d_model
+    return {"h": jnp.zeros((B, d_in, d_state), jnp.float32),
+            "conv": jnp.zeros((B, d_conv - 1, d_in), jnp.float32)}

@@ -1,0 +1,111 @@
+"""Sharding hints for activations.
+
+GSPMD propagates most shardings from parameters, but scan carries (flash
+attention's online-softmax state, chunked SSM states) break the chain and
+can silently replicate the attention compute over the model axis (observed:
+16× FLOP inflation on the 405B dry-run).  ``hint`` applies a
+with_sharding_constraint when a mesh is active and silently no-ops
+otherwise, so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def hints_enabled(mesh):
+    """Enable activation sharding hints for code traced inside this scope
+    (the legacy ``with mesh:`` context doesn't expose an abstract mesh to
+    tracing code in jax 0.8, so the dry-run/trainer set this explicitly)."""
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = {"axes": tuple(mesh.axis_names),
+                   "sizes": dict(mesh.shape),
+                   "mesh": mesh}
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def active_mesh():
+    """The mesh enabled via hints_enabled, or None."""
+    st = getattr(_STATE, "mesh", None)
+    return st["mesh"] if st else None
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """Constrain ``x`` to PartitionSpec(*spec); axes not present in the
+    active mesh are dropped; no-op when hints are disabled."""
+    st = getattr(_STATE, "mesh", None)
+    if not st:
+        return x
+    axes, sizes = st["axes"], st["sizes"]
+    cleaned = []
+    for s in spec:
+        if s is None:
+            cleaned.append(None)
+        elif isinstance(s, tuple):
+            kept = tuple(a for a in s if a in axes)
+            cleaned.append(kept if kept else None)
+        else:
+            cleaned.append(s if s in axes else None)
+    # dims whose size doesn't divide the axis stay unconstrained
+    final = []
+    for dim, s in zip(x.shape, cleaned):
+        if s is None:
+            final.append(None)
+            continue
+        n = 1
+        for a in (s if isinstance(s, tuple) else (s,)):
+            n *= sizes.get(a, 1)
+        final.append(s if dim % n == 0 and dim >= n else None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*final))
+    except Exception:
+        return x
+
+
+def constrain_layer_params(layer_params, cfg, zero: bool = False):
+    """Re-apply parameter sharding to the per-layer slice inside a scan
+    body.  Without this the SPMD partitioner may all-gather the whole
+    stacked FSDP parameter before the loop (observed: full-model params in
+    temp on the 405B cell); constraining the slice keeps the gather
+    per-layer inside the loop.
+
+    ``zero=True`` additionally shards over "data" (ZeRO-2: used on the
+    gradient accumulator so per-microbatch reductions become
+    reduce-scatters)."""
+    st = getattr(_STATE, "mesh", None)
+    if not st:
+        return layer_params
+    from repro.launch.sharding import _add_fsdp, param_spec_fn
+    tp = st["sizes"].get("model", 1)
+    dp = st["sizes"].get("data", 1)
+    fn = param_spec_fn(cfg, tp, dp)
+
+    def apply(path, leaf):
+        try:
+            spec = fn(path, leaf)
+            if zero and dp > 1:
+                spec = _add_fsdp(spec, leaf.shape, dp)
+            return jax.lax.with_sharding_constraint(leaf, spec)
+        except Exception:
+            return leaf
+
+    return jax.tree_util.tree_map_with_path(apply, layer_params)
+
+
+def batch_hint(x: jax.Array) -> jax.Array:
+    """Shard the leading (batch) dim over the data axes."""
+    return hint(x, ("pod", "data"), *([None] * (x.ndim - 1)))
+
+
+def heads_hint(x: jax.Array) -> jax.Array:
+    """[B, H, S, dh] → heads over 'model', batch over data axes."""
+    return hint(x, ("pod", "data"), "model", None, None)

@@ -1,0 +1,258 @@
+"""xLSTM blocks (sLSTM + mLSTM) — chunked TPU formulation.
+
+mLSTM: matrix-memory cell with exponential gating.  The parallel quadratic
+form is chunked (intra-chunk quadratic, inter-chunk recurrent state
+C [B, nh, dh, dh]) with log-space stabilization — the chunked linear-
+attention scheme adapted to the MXU (DESIGN.md §2).
+
+sLSTM: scalar-memory cell with block-diagonal recurrence — inherently
+sequential, runs as lax.scan over time (kept exact; the paper's GPU kernel
+parallelizes over batch/heads only, which the TPU VPU also does here).
+
+Projections route through MPLinear (tile-centric mixed precision).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear import init_mp_linear
+from repro.core.precision import Policy
+from repro.models.common import ACT_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, policy: Policy | None, *,
+               expand: int = 2, d_conv: int = 4, tile: int | None = None
+               ) -> dict:
+    d_in = expand * d_model
+    keys = jax.random.split(key, 8)
+    return {
+        "up_proj": init_mp_linear(keys[0], d_model, 2 * d_in, policy,
+                                  split="ksplit", tile=tile),
+        "conv_w": (jax.random.normal(keys[1], (d_conv, d_in), jnp.float32)
+                   * (1.0 / np.sqrt(d_conv))),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        # headwise block-diagonal projections (xLSTM official): [nh, dh, dh]
+        "wq": (jax.random.normal(keys[2], (n_heads, d_in // n_heads,
+                                           d_in // n_heads), jnp.float32)
+               / np.sqrt(d_in // n_heads)).astype(jnp.bfloat16),
+        "wk": (jax.random.normal(keys[3], (n_heads, d_in // n_heads,
+                                           d_in // n_heads), jnp.float32)
+               / np.sqrt(d_in // n_heads)).astype(jnp.bfloat16),
+        "wv": (jax.random.normal(keys[4], (n_heads, d_in // n_heads,
+                                           d_in // n_heads), jnp.float32)
+               / np.sqrt(d_in // n_heads)).astype(jnp.bfloat16),
+        "w_if": (jax.random.normal(keys[5], (d_in, 2 * n_heads), jnp.float32)
+                 * 0.01),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)),
+                                 jnp.full((n_heads,), 3.0)]).astype(
+                                     jnp.float32),
+        "skip": jnp.ones((d_in,), jnp.float32),
+        "down_proj": init_mp_linear(keys[6], d_in, d_model, policy,
+                                    split="nsplit", tile=tile),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state, *, chunk: int):
+    """Chunked stabilized mLSTM scan.
+
+    q/k/v: [B, S, nh, dh]; li/lf: [B, S, nh] (log input/forget gates);
+    state: (C [B,nh,dh,dh], n [B,nh,dh], m [B,nh]).
+    Returns (h [B, S, nh, dh], state').
+    """
+    B, S, nh, dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    rs = lambda x: x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, lic, lfc = map(rs, (q, k, v, li, lf))
+    scale = 1.0 / np.sqrt(dh)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qb, kb, vb, lib, lfb = xs           # [B, chunk, nh, ...]
+        lf_cum = jnp.cumsum(lfb, axis=1)    # Σ_{s≤t} log f_s
+        lf_tot = lf_cum[:, -1]
+        # stabilizer per step
+        intra_max = jnp.max(
+            jnp.where(jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :,
+                                                               None],
+                      lf_cum[:, :, None] - lf_cum[:, None, :]
+                      + lib[:, None, :], -jnp.inf),
+            axis=2)                          # [B, chunk, nh]
+        m_in_c = m[:, None] + lf_cum        # inter-chunk contribution
+        m_t = jnp.maximum(m_in_c, intra_max)
+        # intra-chunk decay matrix
+        D = jnp.exp(lf_cum[:, :, None] - lf_cum[:, None, :]
+                    + lib[:, None, :] - m_t[:, :, None])
+        D = jnp.where(jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :,
+                                                               None], D, 0.0)
+        s = jnp.einsum("bthd,bshd->btsh", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        sD = s * D
+        h_intra = jnp.einsum("btsh,bshd->bthd", sD, vb.astype(jnp.float32))
+        n_intra = jnp.einsum("btsh,bshd->bthd", D, kb.astype(jnp.float32))
+        # inter-chunk
+        w_in = jnp.exp(m_in_c - m_t)        # [B, chunk, nh]
+        h_inter = jnp.einsum("bthd,bhde->bthe", qb.astype(jnp.float32) * scale,
+                             C) * w_in[..., None]
+        n_inter = n[:, None] * w_in[..., None]
+        h_num = h_intra + h_inter
+        n_t = n_intra + n_inter
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", qb.astype(jnp.float32)
+                               * scale, n_t)),
+            jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+        # carry update
+        m_next = jnp.maximum(m + lf_tot,
+                             jnp.max(lib + lf_tot[:, None] - lf_cum, axis=1))
+        w_keep = jnp.exp(m + lf_tot - m_next)            # [B, nh]
+        w_new = jnp.exp(lib + lf_tot[:, None] - lf_cum - m_next[:, None])
+        C_next = (C * w_keep[..., None, None]
+                  + jnp.einsum("bshd,bshe,bsh->bhde", kb.astype(jnp.float32),
+                               vb.astype(jnp.float32), w_new))
+        n_next = (n * w_keep[..., None]
+                  + jnp.einsum("bshd,bsh->bhd", kb.astype(jnp.float32),
+                               w_new))
+        return (C_next, n_next, m_next), h
+
+    state, hs = jax.lax.scan(step, state, (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(0, 1).reshape(B, S, nh, dh)
+    return h, state
+
+
+def mlstm_block(params, x, *, n_heads: int, chunk: int = 256, state=None):
+    """x: [B, S, d].  state (decode): dict(C, n, m, conv)."""
+    from repro.models.mamba import _conv1d_causal
+    B, S, d = x.shape
+    d_in = params["conv_w"].shape[1]
+    dh = d_in // n_heads
+
+    xz = params["up_proj"](x)
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _conv1d_causal(xs.astype(jnp.float32), params["conv_w"],
+                                  params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc).astype(ACT_DTYPE)
+
+    # f32 operands: CPU's DotThunk rejects batched bf16×bf16→f32 einsums
+    # (on TPU these stay bf16; the heads projections are LOW-class anyway)
+    xch = xc.reshape(B, S, n_heads, dh).astype(jnp.float32)
+    q = jnp.einsum("bsnd,nde->bsne", xch,
+                   params["wq"].astype(jnp.float32)).astype(ACT_DTYPE)
+    k = jnp.einsum("bsnd,nde->bsne", xch,
+                   params["wk"].astype(jnp.float32)).astype(ACT_DTYPE)
+    v = jnp.einsum("bsnd,nde->bsne",
+                   xs.astype(jnp.float32).reshape(B, S, n_heads, dh),
+                   params["wv"].astype(jnp.float32)).astype(ACT_DTYPE)
+    gates = xc.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    li = gates[..., :n_heads]                       # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gates[..., n_heads:])   # log forget gate
+
+    if state is None:
+        st = (jnp.zeros((B, n_heads, dh, dh), jnp.float32),
+              jnp.zeros((B, n_heads, dh), jnp.float32),
+              jnp.zeros((B, n_heads), jnp.float32))
+        h, _ = _mlstm_chunk(q, k, v, li, lf, st, chunk=chunk)
+    else:
+        st = (state["C"], state["n"], state["m"])
+        h, st = _mlstm_chunk(q, k, v, li, lf, st, chunk=1)
+    h = h.reshape(B, S, d_in)
+    h = h + params["skip"][None, None] * xc.astype(jnp.float32)
+    out = params["down_proj"]((h * jax.nn.silu(z.astype(jnp.float32))
+                               ).astype(ACT_DTYPE))
+    if state is None:
+        return out.astype(ACT_DTYPE)
+    return out.astype(ACT_DTYPE), {"C": st[0], "n": st[1], "m": st[2],
+                                   "conv": new_conv}
+
+
+def init_mlstm_state(B: int, d_model: int, n_heads: int, *, expand: int = 2,
+                     d_conv: int = 4) -> dict:
+    d_in = expand * d_model
+    dh = d_in // n_heads
+    return {"C": jnp.zeros((B, n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, n_heads, dh), jnp.float32),
+            "m": jnp.zeros((B, n_heads), jnp.float32),
+            "conv": jnp.zeros((B, d_conv - 1, d_in), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int, policy: Policy | None,
+               *, ff_factor: float = 4.0 / 3.0, tile: int | None = None
+               ) -> dict:
+    dh = d_model // n_heads
+    keys = jax.random.split(key, 4)
+    w_in = (jax.random.normal(keys[0], (d_model, 4 * d_model), jnp.float32)
+            / np.sqrt(d_model))
+    r = (jax.random.normal(keys[1], (n_heads, 4, dh, dh), jnp.float32)
+         / np.sqrt(dh) * 0.5)
+    d_ff = int(ff_factor * d_model)
+    d_ff = max(64, (d_ff // 64) * 64)
+    return {
+        "w_in": w_in.astype(jnp.bfloat16),
+        "b_in": jnp.concatenate([
+            jnp.zeros((2 * d_model,)), jnp.full((d_model,), 3.0),
+            jnp.zeros((d_model,))]).astype(jnp.float32),
+        "r": r,
+        "ff_up": init_mp_linear(keys[2], d_model, d_ff, policy,
+                                split="ksplit", tile=tile),
+        "ff_down": init_mp_linear(keys[3], d_ff, d_model, policy,
+                                  split="nsplit", tile=tile),
+    }
+
+
+def slstm_block(params, x, *, n_heads: int, state=None):
+    """Sequential sLSTM + gelu FFN.  x: [B, S, d]."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    pre = (x @ params["w_in"]).astype(jnp.float32) + params["b_in"]
+    pre = pre.reshape(B, S, 4, n_heads, dh)
+
+    if state is None:
+        c0 = jnp.zeros((B, n_heads, dh), jnp.float32)
+        st = (c0, c0, jnp.zeros((B, n_heads, dh), jnp.float32) - 10.0, c0)
+    else:
+        st = (state["c"], state["n"], state["m"], state["h"])
+
+    r = params["r"]
+
+    def step(carry, pre_t):
+        c, n, m, h = carry                     # [B, nh, dh]
+        rec = jnp.einsum("bhd,hgde->bghe", h, r)   # [B, 4, nh, dh]
+        zifo = pre_t + rec
+        z_t = jnp.tanh(zifo[:, 0])
+        i_log = zifo[:, 1]
+        f_log = jax.nn.log_sigmoid(zifo[:, 2])
+        o_t = jax.nn.sigmoid(zifo[:, 3])
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_p = jnp.exp(i_log - m_new)
+        f_p = jnp.exp(f_log + m - m_new)
+        c_new = f_p * c + i_p * z_t
+        n_new = f_p * n + i_p
+        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    st, hs = jax.lax.scan(step, st, pre.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(ACT_DTYPE)
+    ff = params["ff_down"](jax.nn.gelu(
+        params["ff_up"](h).astype(ACT_DTYPE))).astype(ACT_DTYPE)
+    out = h + ff
+    if state is None:
+        return out
+    return out, {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+
+
+def init_slstm_state(B: int, d_model: int, n_heads: int) -> dict:
+    dh = d_model // n_heads
+    z = jnp.zeros((B, n_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "m": z - 10.0, "h": z}

@@ -1,0 +1,149 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KSplitWeight, MPMatrix, make_map, split_cls
+from repro.core.precision import Policy
+from repro.kernels import ops
+from repro.kernels import ref as KR
+from repro.kernels.mp_gemm_tile import mp_gemm_tile
+
+
+def _mp_operands(M, K, N, t, ratios, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.normal(ks[0], (M, K))
+    b = jax.random.normal(ks[1], (K, N))
+    c = jax.random.normal(ks[2], (M, N))
+    pa = make_map((M, K), t, Policy(kind="ratio", ratio_high=ratios[0],
+                                    seed=seed))
+    pb = make_map((K, N), t, Policy(kind="ratio", ratio_high=ratios[1],
+                                    seed=seed + 1))
+    pc = make_map((M, N), t, Policy(kind="ratio", ratio_high=ratios[2],
+                                    seed=seed + 2))
+    return (MPMatrix.from_dense(a, pa, t), MPMatrix.from_dense(b, pb, t),
+            MPMatrix.from_dense(c, pc, t), pa, pb, pc)
+
+
+@pytest.mark.parametrize("shape", [(16, 16, 16), (32, 48, 16),
+                                   (48, 32, 64), (8, 24, 40)])
+@pytest.mark.parametrize("tile", [8, 16])
+def test_mp_gemm_tile_shapes(shape, tile):
+    M, K, N = shape
+    A, B, C, pa, pb, pc = _mp_operands(M, K, N, tile, (0.5, 0.4, 0.5))
+    o_hi, o_lo = mp_gemm_tile(
+        A.hi, A.lo, B.hi, B.lo, C.hi, C.lo, jnp.asarray(pa),
+        jnp.asarray(pb), jnp.asarray(pc), tile=tile, interpret=True)
+    r_hi, r_lo = KR.mp_gemm_tile_ref(A.hi, A.lo, B.hi, B.lo, C.hi, C.lo,
+                                     pa, pb, pc, tile)
+    np.testing.assert_allclose(np.asarray(o_hi), np.asarray(r_hi),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(o_lo.astype(jnp.float32)),
+        np.asarray(r_lo.astype(jnp.float32)), rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("ratios", [(1.0, 1.0, 1.0), (0.0, 0.0, 0.0),
+                                    (1.0, 0.0, 0.5), (0.3, 0.7, 0.2)])
+def test_mp_gemm_tile_ratio_sweep(ratios):
+    A, B, C, pa, pb, pc = _mp_operands(32, 32, 32, 16, ratios, seed=7)
+    o_hi, o_lo = mp_gemm_tile(
+        A.hi, A.lo, B.hi, B.lo, C.hi, C.lo, jnp.asarray(pa),
+        jnp.asarray(pb), jnp.asarray(pc), tile=16,
+        alpha=2.0, beta=0.5, interpret=True)
+    r_hi, r_lo = KR.mp_gemm_tile_ref(A.hi, A.lo, B.hi, B.lo, C.hi, C.lo,
+                                     pa, pb, pc, 16, alpha=2.0, beta=0.5)
+    np.testing.assert_allclose(np.asarray(o_hi), np.asarray(r_hi),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mp_gemm_ops_wrapper_matches_core_ref():
+    from repro.core import mp_gemm_ref
+    A, B, C, *_ = _mp_operands(32, 32, 32, 8, (0.5, 0.5, 0.5), seed=3)
+    out = ops.mp_gemm(A, B, C, alpha=1.0, beta=0.0)
+    ref = mp_gemm_ref(A, B, C, alpha=1.0, beta=0.0)
+    np.testing.assert_allclose(np.asarray(out.to_dense()),
+                               np.asarray(ref.to_dense()),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (32, 128, 64, 32, 64, 32), (64, 256, 128, 32, 128, 64),
+    (16, 64, 32, 16, 32, 32)])
+@pytest.mark.parametrize("ratio", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_ksplit_gemm_sweep(M, K, N, bm, bn, bk, ratio, xdtype):
+    t = 32
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    kcls = split_cls(K // t, Policy(kind="ratio", ratio_high=ratio))
+    W = KSplitWeight.from_dense(w, kcls, t)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K)).astype(xdtype)
+    y = ops.ksplit_matmul_kernel(x, W, bm=bm, bn=bn, bk=bk)
+    r = KR.ksplit_gemm_ref(x, W.w_hi, W.w_lo)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("dtype_out", [jnp.bfloat16, jnp.float32,
+                                       jnp.float8_e4m3fn])
+@pytest.mark.parametrize("shape", [(32, 64), (64, 32), (256, 512)])
+def test_convert_kernel(dtype_out, shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    y = ops.convert_tiles(x, dtype_out, bm=32, bn=32)
+    np.testing.assert_array_equal(
+        np.asarray(y.astype(jnp.float32)),
+        np.asarray(KR.convert_ref(x, dtype_out).astype(jnp.float32)))
+
+
+def test_kernel_receiver_side_conversion_semantics():
+    """HIGH C tile must see bf16-rounded values of LOW A/B tiles (receiver-
+    side conversion), not the original fp32 values."""
+    t = 16
+    M = K = N = 16
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    pa = np.full((1, 1), 1, np.int8)   # A stored LOW
+    pb = np.full((1, 1), 2, np.int8)   # B stored HIGH
+    pc = np.full((1, 1), 2, np.int8)   # C computes HIGH
+    A = MPMatrix.from_dense(a, pa, t)
+    B = MPMatrix.from_dense(b, pb, t)
+    C = MPMatrix.from_dense(jnp.zeros((M, N)), pc, t)
+    o_hi, _ = mp_gemm_tile(A.hi, A.lo, B.hi, B.lo, C.hi, C.lo,
+                           jnp.asarray(pa), jnp.asarray(pb),
+                           jnp.asarray(pc), tile=t, interpret=True)
+    expect = np.asarray(a.astype(jnp.bfloat16).astype(jnp.float32)) @ \
+        np.asarray(b)
+    np.testing.assert_allclose(np.asarray(o_hi), expect, rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape,tile", [((48, 64, 32), 16), ((32, 32, 64), 8),
+                                        ((64, 48, 48), 16)])
+@pytest.mark.parametrize("ratios", [(0.5, 0.3, 0.6), (1.0, 1.0, 1.0),
+                                    (0.0, 0.0, 0.0), (0.7, 0.2, 0.4)])
+def test_grouped_gemm_sweep(shape, tile, ratios):
+    """Compact class-sorted grouped GEMM vs Algorithm-1 reference."""
+    from repro.core import CompactMPMatrix, mp_gemm_ref
+    from repro.kernels.grouped_gemm import grouped_mp_gemm
+    M, K, N = shape
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    pa = make_map((M, K), tile, Policy(kind="ratio", ratio_high=ratios[0],
+                                       seed=1))
+    pb = make_map((K, N), tile, Policy(kind="ratio", ratio_high=ratios[1],
+                                       seed=2))
+    pc = make_map((M, N), tile, Policy(kind="ratio", ratio_high=ratios[2],
+                                       seed=3))
+    A = CompactMPMatrix.from_dense(a, pa, tile)
+    B = CompactMPMatrix.from_dense(b, pb, tile)
+    out = grouped_mp_gemm(A, B, pc, interpret=True)
+    ref = mp_gemm_ref(MPMatrix.from_dense(a, pa, tile),
+                      MPMatrix.from_dense(b, pb, tile),
+                      MPMatrix.from_dense(jnp.zeros((M, N)), pc, tile))
+    np.testing.assert_allclose(
+        np.asarray(out.to_dense(), np.float32),
+        np.asarray(ref.to_dense(), np.float32), rtol=5e-2, atol=5e-2)
+    # compact storage of the result is exact per the C map
+    assert out.storage_bytes() == sum(
+        tile * tile * (4 if c == 2 else 2) for c in pc.reshape(-1))

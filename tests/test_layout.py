@@ -1,0 +1,121 @@
+"""Tile-heterogeneous layouts: round trips, storage accounting, matmuls."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CompactMPMatrix, KSplitWeight, MPMatrix,
+                        NSplitWeight, ksplit_matmul, make_map,
+                        nsplit_matmul, split_cls)
+from repro.core.precision import Policy, PrecClass
+
+
+def _mk(m, n, t, ratio=0.5, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    cls = make_map((m, n), t, Policy(kind="ratio", ratio_high=ratio,
+                                     seed=seed))
+    return w, cls
+
+
+@settings(max_examples=20, deadline=None)
+@given(mt=st.integers(1, 6), nt=st.integers(1, 6),
+       ratio=st.sampled_from([0.0, 0.2, 0.5, 1.0]), seed=st.integers(0, 99))
+def test_mpmatrix_roundtrip_is_storage_rounding(mt, nt, ratio, seed):
+    t = 8
+    w, cls = _mk(mt * t, nt * t, t, ratio, seed)
+    m = MPMatrix.from_dense(w, cls, t)
+    dense = np.asarray(m.to_dense())
+    # every LOW tile equals bf16 rounding, every HIGH tile is exact
+    for i in range(mt):
+        for j in range(nt):
+            blk = np.asarray(w)[i*t:(i+1)*t, j*t:(j+1)*t]
+            got = dense[i*t:(i+1)*t, j*t:(j+1)*t]
+            if cls[i, j] == int(PrecClass.HIGH):
+                np.testing.assert_array_equal(got, blk)
+            else:
+                exp = np.asarray(jnp.asarray(blk).astype(jnp.bfloat16)
+                                 .astype(jnp.float32))
+                np.testing.assert_array_equal(got, exp)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mt=st.integers(1, 5), nt=st.integers(1, 5),
+       ratio=st.floats(0, 1), seed=st.integers(0, 99))
+def test_compact_equals_dual_and_saves_memory(mt, nt, ratio, seed):
+    t = 8
+    w, cls = _mk(mt * t, nt * t, t, ratio, seed)
+    dual = MPMatrix.from_dense(w, cls, t)
+    comp = CompactMPMatrix.from_dense(w, cls, t)
+    np.testing.assert_array_equal(np.asarray(comp.to_dense()),
+                                  np.asarray(dual.to_dense()))
+    n_hi = int((cls == int(PrecClass.HIGH)).sum())
+    n_lo = mt * nt - n_hi
+    assert comp.storage_bytes() == t * t * (4 * n_hi + 2 * n_lo)
+    # paper's claim: storage strictly below uniform fp32 when any LOW tile
+    if n_lo:
+        assert comp.storage_bytes() < mt * nt * t * t * 4
+
+
+def test_ksplit_matches_manual_split():
+    K, N, t = 128, 64, 16
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    kcls = split_cls(K // t, Policy(kind="ratio", ratio_high=0.5))
+    ks = KSplitWeight.from_dense(w, kcls, t)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, K))
+    y = ksplit_matmul(x, ks)
+    k_hi = ks.w_hi.shape[0]
+    manual = (np.asarray(x[:, :k_hi]) @ np.asarray(w[:k_hi])
+              + np.asarray(x[:, k_hi:].astype(jnp.bfloat16)
+                           .astype(jnp.float32))
+              @ np.asarray(w[k_hi:].astype(jnp.bfloat16).astype(jnp.float32)))
+    np.testing.assert_allclose(np.asarray(y), manual, rtol=2e-2, atol=2e-2)
+
+
+def test_ksplit_rejects_bad_tile():
+    w = jnp.zeros((100, 64))
+    with pytest.raises(ValueError):
+        KSplitWeight.from_dense(w, np.zeros(7, np.int8), 16)
+
+
+def test_nsplit_matches_dense():
+    K, N, t = 64, 128, 16
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    ncls = split_cls(N // t, Policy(kind="ratio", ratio_high=0.25))
+    ns = NSplitWeight.from_dense(w, ncls, t)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, K))
+    y = nsplit_matmul(x, ns)
+    n_hi = ns.w_hi.shape[1]
+    manual = np.concatenate([
+        np.asarray(x) @ np.asarray(w[:, :n_hi]),
+        np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32))
+        @ np.asarray(w[:, n_hi:].astype(jnp.bfloat16).astype(jnp.float32)),
+    ], axis=1)
+    np.testing.assert_allclose(np.asarray(y), manual, rtol=2e-2, atol=2e-2)
+
+
+def test_nsplit_requires_sorted():
+    w = jnp.zeros((32, 64))
+    bad = np.array([1, 2, 1, 2], np.int8)  # unsorted
+    with pytest.raises(ValueError):
+        NSplitWeight.from_dense(w, bad, 16)
+
+
+def test_uniform_endpoints_storage():
+    w, _ = _mk(64, 64, 16)
+    hi = CompactMPMatrix.from_dense(
+        w, make_map((64, 64), 16, Policy(kind="uniform_high")), 16)
+    lo = CompactMPMatrix.from_dense(
+        w, make_map((64, 64), 16, Policy(kind="uniform_low")), 16)
+    assert hi.storage_bytes() == 64 * 64 * 4
+    assert lo.storage_bytes() == 64 * 64 * 2
+
+
+def test_pytree_roundtrip():
+    w, cls = _mk(32, 32, 8)
+    m = MPMatrix.from_dense(w, cls, 8)
+    leaves, treedef = jax.tree.flatten(m)
+    m2 = jax.tree.unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(m.to_dense()),
+                                  np.asarray(m2.to_dense()))

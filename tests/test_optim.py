@@ -1,0 +1,89 @@
+"""Optimizer + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import adamw
+from repro.optim import grad_compress as GC
+
+
+def test_adamw_converges_quadratic():
+    ocfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                             weight_decay=0.0, grad_clip=10.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, ocfg)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(params, g, state, ocfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_adamw_master_weights_keep_bf16_params_training():
+    """With bf16 params, tiny updates vanish without master weights."""
+    for master, expect_moves in ((True, True),):
+        ocfg = adamw.AdamWConfig(lr_peak=1e-4, warmup_steps=0,
+                                 total_steps=1000, weight_decay=0.0,
+                                 master_weights=master)
+        params = {"w": jnp.ones(8, jnp.bfloat16) * 100.0}
+        state = adamw.init(params, ocfg)
+        for _ in range(50):
+            g = {"w": jnp.ones(8, jnp.float32)}
+            params, state, _ = adamw.update(params, g, state, ocfg)
+        moved = float(jnp.abs(
+            state.master["w"] - 100.0).max()) > 1e-4
+        assert moved == expect_moves
+
+
+def test_lr_schedule_shape():
+    ocfg = adamw.AdamWConfig(lr_peak=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.lr_schedule(ocfg, jnp.asarray(s)))
+           for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(1.0, rel=1e-3)
+    assert lrs[-1] == pytest.approx(0.1, rel=0.15)
+    assert all(a >= b - 1e-6 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+def test_moment_dtype_bf16():
+    ocfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros(4)}
+    st_ = adamw.init(params, ocfg)
+    assert st_.mu["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(4)}
+    p2, st2, _ = adamw.update(params, g, st_, ocfg)
+    assert st2.mu["w"].dtype == jnp.bfloat16
+    assert bool(jnp.isfinite(p2["w"]).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(2, 32))
+def test_error_feedback_unbiased_accumulation(seed, n):
+    """bf16 accumulator + error feedback ≈ fp32 accumulation (error bounded
+    by one final rounding, not O(n) roundings)."""
+    rng = np.random.default_rng(seed)
+    gs = rng.normal(size=(n, 64)).astype(np.float32) * 1e-3
+    acc = {"g": jnp.zeros(64, jnp.bfloat16)}
+    err = GC.ef_init(acc)
+    for i in range(n):
+        acc, err = GC.accumulate(acc, {"g": jnp.asarray(gs[i])}, err)
+    total = np.asarray(acc["g"], np.float32) + np.asarray(err["g"])
+    np.testing.assert_allclose(total, gs.sum(0), rtol=1e-5, atol=1e-6)
+    # the bf16 view alone is within one rounding of the true sum
+    np.testing.assert_allclose(np.asarray(acc["g"], np.float32), gs.sum(0),
+                               rtol=1e-2, atol=1e-4)
+
+
+def test_compress_roundtrip_error_feedback():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=128),
+                          jnp.float32)}
+    err = GC.ef_init(g)
+    gc, err2 = GC.compress(g, err)
+    assert gc["w"].dtype == jnp.bfloat16
+    recon = np.asarray(gc["w"], np.float32) + np.asarray(err2["w"])
+    np.testing.assert_allclose(recon, np.asarray(g["w"]), rtol=1e-6)

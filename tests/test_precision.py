@@ -1,0 +1,75 @@
+"""Precision policies + tile maps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import precision as P
+from repro.core.precision import PAPER_RATIOS, Policy, PrecClass
+
+
+def test_paper_ratio_endpoints():
+    m_hi = P.make_map((64, 64), 16, PAPER_RATIOS["100D:0S"])
+    assert (m_hi == int(PrecClass.HIGH)).all()
+    m_lo = P.make_map((64, 64), 16, PAPER_RATIOS["0D:100S"])
+    assert (m_lo == int(PrecClass.LOW)).all()
+
+
+@pytest.mark.parametrize("name,frac", [("80D:20S", 0.8), ("50D:50S", 0.5),
+                                       ("20D:80S", 0.2)])
+def test_ratio_exact(name, frac):
+    m = P.make_map((320, 320), 16, PAPER_RATIOS[name])
+    got = (m == int(PrecClass.HIGH)).mean()
+    assert got == pytest.approx(frac, abs=1e-6)
+    assert P.map_ratio_string(m) == f"{round(frac*100)}D:{round((1-frac)*100)}S"
+
+
+@settings(max_examples=25, deadline=None)
+@given(mt=st.integers(1, 12), nt=st.integers(1, 12),
+       ratio=st.floats(0.0, 1.0), seed=st.integers(0, 1000))
+def test_storage_bytes_exact(mt, nt, ratio, seed):
+    pol = Policy(kind="ratio", ratio_high=ratio, seed=seed)
+    t = 8
+    m = P.make_map((mt * t, nt * t), t, pol)
+    n_hi = int((m == int(PrecClass.HIGH)).sum())
+    n_lo = mt * nt - n_hi
+    assert P.map_storage_bytes(m, t) == t * t * (4 * n_hi + 2 * n_lo)
+    # counts are exact (paper's a+b=100 invariant)
+    assert n_hi == round(ratio * mt * nt)
+
+
+def test_norm_topk_picks_largest():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    w[:16, :16] *= 100.0  # one loud tile
+    m = P.make_map((64, 64), 16, Policy(kind="norm_topk", ratio_high=1 / 16),
+                   weights=w)
+    assert m[0, 0] == int(PrecClass.HIGH)
+    assert (m == int(PrecClass.HIGH)).sum() == 1
+
+
+def test_outlier_aware():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    w[20, 20] = 1000.0
+    m = P.make_map((64, 64), 16, Policy(kind="outlier_aware"), weights=w)
+    assert m[1, 1] == int(PrecClass.HIGH)
+    assert (m == int(PrecClass.HIGH)).sum() == 1
+
+
+def test_low8_maps():
+    pol = Policy(kind="ratio", ratio_high=0.25, ratio_low8=0.25, seed=3)
+    m = P.make_map((128, 128), 16, pol)
+    assert (m == int(PrecClass.LOW8)).mean() == pytest.approx(0.25)
+    s = P.map_ratio_string(m)
+    assert s == "25D:50S:25Q"
+
+
+def test_quantize_tile_roundtrip():
+    import jax.numpy as jnp
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(8, 8)),
+                    jnp.float32)
+    hi = P.quantize_tile(x, int(PrecClass.HIGH))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(x))
+    lo = P.quantize_tile(x, int(PrecClass.LOW))
+    assert np.abs(np.asarray(lo - x)).max() < 0.01

@@ -1,0 +1,58 @@
+"""Static load-balance (the SPMD analogue of PaRSEC scheduling)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import schedule
+from repro.core.precision import Policy, PrecClass
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.integers(1, 4), q=st.integers(1, 4),
+       reps=st.integers(1, 4), ratio=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+       seed=st.integers(0, 100))
+def test_balanced_map_imbalance_is_one(p, q, reps, ratio, seed):
+    mt, nt = p * reps * 4, q * reps * 4
+    pol = Policy(kind="ratio", ratio_high=ratio, seed=seed)
+    m = schedule.balanced_ratio_map(mt, nt, pol, p, q)
+    assert schedule.imbalance(m, p, q) == pytest.approx(1.0)
+
+
+def test_random_map_is_imbalanced_balanced_map_fixes_it():
+    from repro.core import make_map
+    pol = Policy(kind="ratio", ratio_high=0.5, seed=3)
+    rand = make_map((32, 32), 1, pol)
+    bal = schedule.balanced_ratio_map(32, 32, pol, 4, 4)
+    assert schedule.imbalance(rand, 4, 4) > 1.01
+    assert schedule.imbalance(bal, 4, 4) == pytest.approx(1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(axis=st.sampled_from([0, 1]), groups=st.sampled_from([1, 2, 4]),
+       ratio=st.sampled_from([0.0, 0.25, 0.5, 0.75, 1.0]))
+def test_sorted_balanced_map_properties(axis, groups, ratio):
+    pol = Policy(kind="ratio", ratio_high=ratio)
+    m = schedule.sorted_balanced_map(16, 8, pol, axis=axis, groups=groups)
+    mm = m if axis == 0 else m.T
+    seg = mm.shape[0] // groups
+    counts = set()
+    for g in range(groups):
+        blk = mm[g * seg:(g + 1) * seg]
+        for j in range(mm.shape[1]):
+            col = blk[:, j]
+            hi = int((col == int(PrecClass.HIGH)).sum())
+            counts.add(hi)
+            # sortedness: HIGH at the top of every segment-panel
+            assert (col[:hi] == int(PrecClass.HIGH)).all()
+    assert len(counts) == 1  # identical per panel per segment
+
+
+def test_shard_costs_reflect_mxu_model():
+    pol = Policy(kind="uniform_high")
+    m = schedule.balanced_ratio_map(8, 8, pol, 2, 2)
+    costs = schedule.shard_costs(m, 2, 2)
+    assert (costs == 16 * 3.0).all()   # 16 tiles × HIGH cost 3
+    pol_lo = Policy(kind="uniform_low")
+    m2 = schedule.balanced_ratio_map(8, 8, pol_lo, 2, 2)
+    assert (schedule.shard_costs(m2, 2, 2) == 16 * 1.0).all()

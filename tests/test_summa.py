@@ -1,0 +1,54 @@
+"""Distributed SUMMA vs the reference GEMM — runs in a subprocess with 4
+host devices (tests in this process keep the default 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import MPMatrix, mp_gemm_ref
+    from repro.core.precision import Policy
+    from repro.core import schedule
+    from repro.core.summa import summa_mp_gemm, summa_collective_bytes
+
+    mesh = jax.make_mesh((2, 2), ("row", "col"))
+    M = K = N = 64
+    T = 8
+    P = Q = 2
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    c0 = jax.random.normal(jax.random.PRNGKey(2), (M, N))
+    for ratio, beta in ((0.5, 0.5), (1.0, 0.0), (0.0, 1.0), (0.25, 0.0)):
+        pol = Policy(kind="ratio", ratio_high=ratio)
+        pa = schedule.sorted_balanced_map(M//T, K//T, pol, axis=0, groups=P)
+        pb = schedule.sorted_balanced_map(K//T, N//T, pol, axis=1, groups=Q)
+        pc = schedule.balanced_ratio_map(M//T, N//T, pol, P, Q)
+        A = MPMatrix.from_dense(a, pa, T)
+        B = MPMatrix.from_dense(b, pb, T)
+        C = MPMatrix.from_dense(c0, pc, T)
+        out = summa_mp_gemm(A, B, C, mesh=mesh, alpha=1.0, beta=beta)
+        ref = mp_gemm_ref(A, B, C, alpha=1.0, beta=beta)
+        err = np.abs(np.asarray(out.to_dense())
+                     - np.asarray(ref.to_dense())).max()
+        scale = np.abs(np.asarray(ref.to_dense())).max()
+        assert err / scale < 2e-2, (ratio, beta, err, scale)
+    # analytic byte model sanity: 50% HIGH = 3 B/elem panels
+    model = summa_collective_bytes(M, N, K, T, P, Q, 0.5)
+    assert model["bytes_per_elem_model"] == 3.0
+    print("SUMMA_SUBPROCESS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_summa_distributed_matches_reference():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "SUMMA_SUBPROCESS_OK" in out.stdout, (out.stdout, out.stderr)

@@ -1,0 +1,103 @@
+"""Training loop: loss goes down, microbatch equivalence, fault/restart."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load_all, reduced
+from repro.data.pipeline import make_batch
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.runtime.fault import RestartSignal
+from repro.train.train_step import make_train_step
+from repro.train.trainer import TrainerConfig, train
+
+
+def _cfg():
+    return reduced(load_all()["internlm2-1.8b"], tp=2)
+
+
+def test_loss_decreases():
+    cfg = _cfg()
+    ocfg = adamw.AdamWConfig(lr_peak=3e-3, warmup_steps=5, total_steps=40,
+                             weight_decay=0.0)
+    tcfg = TrainerConfig(steps=25, seq_len=16, global_batch=4,
+                         ckpt_dir="/tmp/repro_test_ck1", ckpt_every=100,
+                         log_every=100)
+    _, _, hist = train(cfg, ocfg, tcfg, log=lambda s: None)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first, (first, last)
+
+
+def test_microbatch_equivalence():
+    """4 microbatches must match the single-batch gradient step within
+    accumulation noise."""
+    cfg = _cfg()
+    ocfg = adamw.AdamWConfig(warmup_steps=0, total_steps=10)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params, ocfg)
+    batch = make_batch(cfg, 16, 4, kind="train")
+    s1 = jax.jit(make_train_step(cfg, ocfg, 1))
+    s4 = jax.jit(make_train_step(cfg, ocfg, 4, compress_accum=False))
+    p1, _, m1 = s1(params, opt, batch)
+    p4, _, m4 = s4(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=2e-2)
+    l1 = jax.tree.leaves(p1)
+    l4 = jax.tree.leaves(p4)
+    worst = max(float(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)).max())
+                for a, b in zip(l1, l4) if a.size)
+    assert worst < 5e-2, worst
+
+
+def test_fault_restart_resumes_deterministically(tmp_path):
+    """Inject a straggler fault at step 7 → trainer restores the step-5
+    checkpoint and finishes; the loss history after recovery must continue
+    (deterministic pipeline replay)."""
+    cfg = _cfg()
+    ocfg = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=2, total_steps=20)
+    fired = {"n": 0}
+
+    def injector(step):
+        if step == 7 and fired["n"] == 0:
+            fired["n"] += 1
+            raise RestartSignal("injected straggler", shrink=False)
+
+    tcfg = TrainerConfig(steps=12, seq_len=16, global_batch=4,
+                         ckpt_dir=str(tmp_path / "ck"), ckpt_every=5,
+                         log_every=100, fault_injector=injector)
+    params, opt, hist = train(cfg, ocfg, tcfg, log=lambda s: None)
+    assert fired["n"] == 1
+    steps = [h["step"] for h in hist]
+    assert steps[-1] == 11  # completed all steps after recovery
+    # baseline run without fault
+    tcfg2 = TrainerConfig(steps=12, seq_len=16, global_batch=4,
+                          ckpt_dir=str(tmp_path / "ck2"), ckpt_every=5,
+                          log_every=100)
+    _, _, hist2 = train(cfg, ocfg, tcfg2, log=lambda s: None)
+    # identical data stream → identical losses step-for-step
+    by_step = {h["step"]: h["loss"] for h in hist}
+    by_step2 = {h["step"]: h["loss"] for h in hist2}
+    for s in range(5):   # before the fault everything identical
+        np.testing.assert_allclose(by_step[s], by_step2[s], rtol=1e-5)
+
+
+def test_watchdog_detects_straggler():
+    from repro.runtime.fault import Watchdog
+    wd = Watchdog(straggler_factor=2.0, min_samples=3)
+    for _ in range(5):
+        wd.record(1.0)
+    assert wd.check() is None
+    wd.record(5.0)
+    assert "straggler" in (wd.check() or "")
+
+
+def test_shrink_mesh_shape():
+    from repro.runtime.fault import shrink_mesh_shape
+    assert shrink_mesh_shape((16, 16)) == (8, 16)
+    with pytest.raises(ValueError):
+        shrink_mesh_shape((3, 4))
