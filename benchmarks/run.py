@@ -64,6 +64,11 @@ def main() -> None:
     rows.append(("kernel_mp_gemm_tile_interp_64", (time.perf_counter() - t0)
                  * 1e6, "interpret-mode"))
 
+    # tune table: cost-model vs measured plan ranking + cache-routed
+    # dispatch vs reference (the autotuner acceptance gate)
+    from benchmarks import tune_table
+    rows += tune_table.bench()
+
     # roofline table summary (from cached dry-run artifacts, if present)
     try:
         from benchmarks import roofline

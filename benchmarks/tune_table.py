@@ -1,0 +1,114 @@
+"""`tune` benchmark table — the autotuner's report card.
+
+Two parts, mirroring the paper's per-architecture tuning story:
+
+* **ranking** — for one mixed-precision GEMM, every valid candidate plan is
+  scored by the analytical cost model *and* measured; the table reports both
+  and the pairwise rank concordance between them (how well the model prunes).
+* **routed** — three (path × shape × ratio) combinations are autotuned into
+  the persistent plan cache and then dispatched through ``mp_matmul``; each
+  row reports the winning plan and the max error against ``mp_gemm_ref``
+  (the acceptance gate: within storage-precision tolerance).
+
+Run via ``benchmarks/run.py``; the cache persists to
+``results/tune_cache.json`` unless ``REPRO_TUNE_CACHE`` says otherwise.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _mk_problem(M, K, N, T, ratio, *, b_kconst=False, c_uniform=False,
+                seed=0):
+    from repro.core import MPMatrix, Policy, make_map
+    from repro.core.precision import PrecClass
+    pol = Policy(kind="ratio", ratio_high=ratio, seed=seed)
+    a = jax.random.normal(jax.random.PRNGKey(seed), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (K, N))
+    pa = make_map((M, K), T, pol)
+    if b_kconst:
+        pb = np.repeat(make_map((K, T), T, pol), N // T, axis=1)
+    else:
+        pb = make_map((K, N), T, pol)
+    if c_uniform:
+        pc = np.full((M // T, N // T), int(PrecClass.LOW), np.int8)
+    else:
+        pc = make_map((M, N), T, pol)
+    A = MPMatrix.from_dense(a, pa, T)
+    B = MPMatrix.from_dense(b, pb, T)
+    C = MPMatrix.from_dense(jnp.zeros((M, N)), pc, T)
+    return A, B, C
+
+
+def bench() -> list[tuple]:
+    os.environ.setdefault("REPRO_TUNE_CACHE", os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "results", "tune_cache.json"))
+    from repro.core import mp_gemm_ref
+    from repro.tune import (autotune, candidate_plans, detect_device,
+                            measure, mp_matmul, predict_time)
+    from repro.tune import dispatch as TD
+    from repro.tune import search as TS
+
+    rows: list[tuple] = []
+    dev = detect_device()
+    M = K = N = 64
+    T = 16
+
+    # -- part 1: cost-model-predicted vs measured plan ranking --------------
+    A, B, C = _mk_problem(M, K, N, T, 0.5, b_kconst=True, c_uniform=True)
+    prob = TD.problem_of(A, B, C)
+    ranked = TS.rank_plans(candidate_plans(prob, dev), prob, dev)[:8]
+    scored = []
+    for plan, pred_d in ranked:
+        pred = pred_d["total_s"]
+        meas = measure(
+            lambda p=plan: TD.execute_plan(p, A, B, C).hi, warmup=1, iters=3)
+        scored.append((plan, pred, meas))
+        rows.append((f"tune_rank_{plan.key()}", meas * 1e6,
+                     f"pred_us={pred * 1e6:.1f}"))
+    agree = total = 0
+    for (_, p1, m1), (_, p2, m2) in itertools.combinations(scored, 2):
+        if p1 == p2 or m1 == m2:
+            continue
+        total += 1
+        agree += int((p1 < p2) == (m1 < m2))
+    rows.append(("tune_rank_concordance", 0.0,
+                 f"agree={agree}/{total};device={dev.kind}"))
+
+    # -- part 2: autotuned + cache-routed dispatch vs reference -------------
+    combos = [
+        ("tile", dict(M=64, K=64, N=64, T=16, ratio=0.5)),
+        ("grouped", dict(M=64, K=64, N=96, T=16, ratio=0.25)),
+        ("ksplit_xla", dict(M=64, K=96, N=64, T=16, ratio=0.5,
+                            b_kconst=True, c_uniform=True)),
+    ]
+    for path, kw in combos:
+        kw = dict(kw)
+        M_, K_, N_, T_ = kw.pop("M"), kw.pop("K"), kw.pop("N"), kw.pop("T")
+        ratio = kw.pop("ratio")
+        A, B, C = _mk_problem(M_, K_, N_, T_, ratio, **kw)
+        plan = autotune(A, B, C, paths=(path,), warmup=1, iters=3)
+        TD.clear_registry()          # prove the *persisted* cache routes it
+        out = mp_matmul(A, B, C)
+        ref = mp_gemm_ref(A, B, C)
+        scale = float(jnp.abs(ref.to_dense()).max()) or 1.0
+        err = float(jnp.abs(out.to_dense() - ref.to_dense()).max()) / scale
+        us = measure(lambda: mp_matmul(A, B, C).hi, warmup=1, iters=3) * 1e6
+        rows.append((f"tune_routed_{path}_{M_}x{K_}x{N_}_r{ratio}", us,
+                     f"plan={plan.key()};rel_err={err:.1e};"
+                     f"cache={TS.cache_path()}"))
+    rows.append(("tune_cache_entries", 0.0,
+                 f"n={len(TS.default_cache())}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")

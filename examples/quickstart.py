@@ -45,3 +45,14 @@ for ratio in (0.0, 0.5, 1.0):
     print(f"ratio_high={ratio:.1f}:  max err vs fp64 = "
           f"{np.abs(got - exact).max():.2e}   storage "
           f"{Ar.storage_bytes() / (M*K):.1f} B/elem")
+
+# --- 4. hardware-aware autotuning (the two-line repro.tune API) -----------
+# autotune() measures the viable execution paths for this (device, shape,
+# precision-map) signature once and persists the winner; mp_matmul() then
+# routes every matching call through the cached plan.
+from repro.tune import autotune, mp_matmul                     # noqa: E402
+
+plan = autotune(A, B, C)                     # line 1: tune once
+out2 = mp_matmul(A, B, C)                    # line 2: dispatch via the plan
+err2 = float(jnp.abs(out2.to_dense() - ref.to_dense()).max())
+print(f"autotuned plan {plan.key()}: max |Δ| vs reference = {err2:.2e}")

@@ -89,7 +89,11 @@ class MPLinear:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         if isinstance(self.w, KSplitWeight):
-            y = ksplit_matmul(x, self.w)
+            # kernel/block choice comes from the tune dispatcher (registry/
+            # cache resolved at trace time; falls back to the XLA ksplit
+            # path on a miss).  Import lazily: tune sits above core.
+            from repro.tune.dispatch import linear_matmul
+            y = linear_matmul(x, self.w)
         elif isinstance(self.w, NSplitWeight):
             y = nsplit_matmul(x, self.w)
         else:

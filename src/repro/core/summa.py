@@ -146,8 +146,11 @@ def _summa_impl(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, *, cls_a, cls_b, cls_c,
             return acc + upd, None
 
         acc0 = jnp.zeros((mloc, nloc), jnp.float32)
-        # mark the carry as device-varying (it becomes varying after psum)
-        acc0 = jax.lax.pcast(acc0, (row_ax, col_ax), to="varying")
+        # mark the carry as device-varying (it becomes varying after psum).
+        # jax.lax.pcast only exists on newer jax; older releases track
+        # varying-ness implicitly, so a missing pcast is a no-op.
+        if hasattr(jax.lax, "pcast"):
+            acc0 = jax.lax.pcast(acc0, (row_ax, col_ax), to="varying")
         acc, _ = jax.lax.scan(step, acc0, (qa, la, pb, lb))
         out = alpha * acc + beta * (c_hi + c_lo.astype(jnp.float32))
         hi_mask = sel_c == int(PrecClass.HIGH)

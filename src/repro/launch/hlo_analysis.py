@@ -66,6 +66,43 @@ def _split_instr(line: str):
     if not m3:
         return None
     return name, type_str, m3.group(1)
+def _paren_args(line: str, opener: str) -> str:
+    """The argument list of ``opener`` up to its *matching* close paren —
+    tiled layouts like ``{1,0:T(8,128)}`` contain nested parens, so a
+    non-greedy regex truncates early."""
+    start = line.find(opener)
+    if start < 0:
+        return ""
+    i = start + len(opener)
+    depth = 1
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[i:j]
+    return line[i:]
+
+
+def _split_operands(arglist: str) -> list[str]:
+    """Split an HLO operand list on top-level commas only (shape dims and
+    layouts contain commas: 'f32[8,64]{1,0} %lhs, f32[64,64]{1,0} %rhs')."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(arglist):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(arglist[start:i])
+            start = i + 1
+    tail = arglist[start:].strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
 _CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _TRIP_RE = re.compile(r'known_trip_count[\'"]?\s*:\s*\{\s*[\'"]n[\'"]\s*:'
@@ -140,10 +177,18 @@ def _parse_computations(text: str) -> dict[str, CompCost]:
         name, out_type, opcode = im
         shapes[name] = out_type
         if opcode == "dot":
-            ops = re.search(r"dot\(([^)]*)\)", line)
-            operands = [o.strip().lstrip("%") for o in
-                        ops.group(1).split(",")] if ops else []
-            lhs_shape = shapes.get(operands[0], "") if operands else ""
+            arglist = _paren_args(line, "dot(")
+            # newer HLO text inlines operand types: "dot(f32[8,64]{1,0}
+            # %lhs, f32[64,64]{1,0} %rhs)"; older text has bare names.
+            # Prefer the inline type, fall back to the name table.
+            operands, op_types = [], []
+            for o in _split_operands(arglist):
+                o = o.strip()
+                name_m = re.search(r"%?([\w.\-]+)\s*$", o)
+                operands.append(name_m.group(1) if name_m else o)
+                op_types.append(o if _SHAPE_RE.search(o) else "")
+            lhs_shape = (op_types[0] or shapes.get(operands[0], "")
+                         ) if operands else ""
             lhs_dims = _shape_dims(lhs_shape)
             cm = _CONTRACT_RE.search(line)
             contracted = 1
@@ -161,8 +206,8 @@ def _parse_computations(text: str) -> dict[str, CompCost]:
             cur.flops += f
             lhs_dt = lhs_dims[0][0] if lhs_dims else "f32"
             cur.mxu_flops += f * _MXU_PASSES.get(lhs_dt, 1.0)
-            rhs_shape = shapes.get(operands[1], "") if len(operands) > 1 \
-                else ""
+            rhs_shape = (op_types[1] or shapes.get(operands[1], "")
+                         ) if len(operands) > 1 else ""
             cur.dot_bytes += (_bytes_of(out_type) + _bytes_of(lhs_shape)
                               + _bytes_of(rhs_shape))
         elif opcode in COLLECTIVES:

@@ -52,6 +52,12 @@ class Engine:
                  max_seq: int = 256, rng_seed: int = 0):
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
+        # tune-once at setup: resolve a GEMM plan for every mixed-precision
+        # layer at the decode batch size, so the jitted decode/prefill
+        # traces route through fixed, cached dispatch decisions.
+        from repro.tune import dispatch as _tune
+        _tune.warm_registry()
+        self.gemm_plans = _tune.tune_linear_params(params, m_hint=max_batch)
         self._decode = jax.jit(
             lambda p, t, c, pos: T.forward_decode(p, cfg, t, c, pos))
         self._prefill = jax.jit(

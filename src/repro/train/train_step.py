@@ -25,7 +25,16 @@ def loss_fn(params, cfg: ArchConfig, batch):
 
 
 def make_train_step(cfg: ArchConfig, ocfg: adamw.AdamWConfig,
-                    microbatches: int = 1, compress_accum: bool = True):
+                    microbatches: int = 1, compress_accum: bool = True,
+                    tune_params=None, tune_tokens: int | None = None):
+    """``tune_params``: pass the (or a same-shaped) parameter tree to
+    tune-once at setup — every MPLinear's GEMM plan is resolved against the
+    per-microbatch token count *before* the step is jitted, so dispatch
+    decisions are fixed and identical across recompilations."""
+    if tune_params is not None:
+        from repro.tune import dispatch as _tune
+        _tune.warm_registry()
+        _tune.tune_linear_params(tune_params, m_hint=tune_tokens or 4096)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(params, opt_state, batch):

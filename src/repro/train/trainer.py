@@ -46,7 +46,9 @@ def train(cfg: ArchConfig, ocfg: adamw.AdamWConfig, tcfg: TrainerConfig,
     if opt_state is None:
         opt_state = adamw.init(params, ocfg)
 
-    step_fn = jax.jit(make_train_step(cfg, ocfg, tcfg.microbatches))
+    step_fn = jax.jit(make_train_step(
+        cfg, ocfg, tcfg.microbatches, tune_params=params,
+        tune_tokens=tcfg.seq_len * tcfg.global_batch // tcfg.microbatches))
     saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
     hb = Heartbeat(tcfg.heartbeat_path) if tcfg.heartbeat_path else None
     wd = Watchdog()

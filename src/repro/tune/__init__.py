@@ -1,0 +1,31 @@
+"""repro.tune — hardware-aware autotuner + unified GEMM dispatch.
+
+The SPMD analogue of PaRSEC's hardware-aware scheduler: the paper tunes
+tile tasking per architecture (Fugaku / A100 / Frontier); here a device
+capability table (``device``), an analytical roofline cost model
+(``costmodel``), an empirical measured search with a persistent plan cache
+(``search``), and a unified dispatch entry point (``dispatch``) pick the
+execution path and block shapes for every mixed-precision GEMM.
+
+Two-line API::
+
+    from repro.tune import autotune, mp_matmul
+    autotune(A, B, C)          # measure candidates once, persist the winner
+    out = mp_matmul(A, B, C)   # routed through the cached plan
+"""
+from repro.tune.device import DeviceSpec, detect_device, device_table
+from repro.tune.costmodel import (GemmPlan, GemmProblem, predict_time,
+                                  validate_plan, plan_vmem_bytes)
+from repro.tune.search import PlanCache, autotune, measure, candidate_plans
+from repro.tune.dispatch import (mp_matmul, resolve_plan, clear_registry,
+                                 register_plan, tune_linear_params,
+                                 warm_registry)
+
+__all__ = [
+    "DeviceSpec", "detect_device", "device_table",
+    "GemmPlan", "GemmProblem", "predict_time", "validate_plan",
+    "plan_vmem_bytes",
+    "PlanCache", "autotune", "measure", "candidate_plans",
+    "mp_matmul", "resolve_plan", "clear_registry", "register_plan",
+    "tune_linear_params", "warm_registry",
+]

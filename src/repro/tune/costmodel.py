@@ -1,0 +1,256 @@
+"""Analytical roofline cost model over (path × block shape × precision map).
+
+``GemmProblem`` captures the static facts of one mixed-precision GEMM (shape,
+precision-map tile, per-operand class fractions, structural flags);
+``GemmPlan`` is one way to execute it (a kernel path plus block shape).
+``predict_time`` scores a plan as
+
+    max(compute seconds, HBM seconds) + per-task overhead
+
+where compute is pass-weighted by ``DeviceSpec.class_cost`` (the paper's
+dgemm/sgemm cost asymmetry), HBM bytes are *storage* bytes from the class
+fractions (the paper's bandwidth saving) with the classic blocked-GEMM
+re-fetch factors (A travels N/bn times, B travels M/bm times), and overhead
+charges each kernel grid step (dominant in CPU interpret mode).
+
+``validate_plan`` rejects plans that violate MXU alignment (% 128 on real
+TPUs), shape divisibility, path applicability, or the VMEM working-set
+budget — the VMEM formulas previously lived only in kernel docstrings
+(kernels/mp_gemm_tile.py, kernels/ksplit_gemm.py, kernels/grouped_gemm.py)
+and are centralized here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.precision import PrecClass
+from repro.tune.device import DeviceSpec
+
+#: every execution path the dispatcher can route to
+PATHS = ("ref", "tile", "grouped", "ksplit_xla", "ksplit_pallas")
+
+_HI = int(PrecClass.HIGH)
+_LO8 = int(PrecClass.LOW8)
+
+
+def _fracs(cls_map: np.ndarray) -> tuple[float, float]:
+    """(frac_high, frac_low8) of a class map."""
+    total = cls_map.size
+    return (float((cls_map == _HI).sum()) / total,
+            float((cls_map == _LO8).sum()) / total)
+
+
+def _bytes_per_elem(frac_high: float, frac_low8: float) -> float:
+    return 4.0 * frac_high + 1.0 * frac_low8 \
+        + 2.0 * (1.0 - frac_high - frac_low8)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmProblem:
+    """Static description of one C ← α·A·B + β·C instance."""
+
+    m: int
+    n: int
+    k: int
+    tile: int
+    op: str = "mp_gemm"
+    # per-operand class fractions
+    a_high: float = 0.0
+    a_low8: float = 0.0
+    b_high: float = 0.0
+    b_low8: float = 0.0
+    c_high: float = 0.0
+    c_low8: float = 0.0
+    # structural applicability flags
+    b_k_constant: bool = False   # B map constant along N (ksplit layouts)
+    c_classes: tuple = (int(PrecClass.LOW),)  # distinct classes in C map
+    has_low8: bool = False
+    alpha_one: bool = True
+    beta_zero: bool = True
+    pad_free: bool = True        # logical shapes equal padded tile grid
+
+    @classmethod
+    def from_maps(cls, pa: np.ndarray, pb: np.ndarray, pc: np.ndarray,
+                  tile: int, *, alpha: float = 1.0, beta: float = 0.0,
+                  op: str = "mp_gemm", pad_free: bool = True
+                  ) -> "GemmProblem":
+        pa, pb, pc = (np.asarray(p) for p in (pa, pb, pc))
+        ah, a8 = _fracs(pa)
+        bh, b8 = _fracs(pb)
+        ch, c8 = _fracs(pc)
+        return cls(
+            m=pa.shape[0] * tile, n=pb.shape[1] * tile,
+            k=pa.shape[1] * tile, tile=tile, op=op,
+            a_high=ah, a_low8=a8, b_high=bh, b_low8=b8,
+            c_high=ch, c_low8=c8,
+            b_k_constant=bool(np.all(pb == pb[:, :1])),
+            c_classes=tuple(sorted(int(v) for v in np.unique(pc))),
+            has_low8=bool(a8 or b8 or c8),
+            alpha_one=(alpha == 1.0), beta_zero=(beta == 0.0),
+            pad_free=pad_free)
+
+    def ratio_key(self) -> str:
+        """Compact class-fraction signature used in plan-cache keys."""
+        def one(h, l8):
+            a, c = round(100 * h), round(100 * l8)
+            return f"{a}D{100 - a - c}S" + (f"{c}Q" if c else "")
+        return "|".join((one(self.a_high, self.a_low8),
+                         one(self.b_high, self.b_low8),
+                         one(self.c_high, self.c_low8)))
+
+    def struct_key(self) -> str:
+        """Structural signature: everything path applicability depends on
+        beyond shape/ratios.  Two problems with different struct keys must
+        never share a cached plan (e.g. beta=0 vs beta!=0 decides whether
+        the grouped path is legal at all)."""
+        return ("a{}b{}k{}p{}c{}".format(
+            int(self.alpha_one), int(self.beta_zero),
+            int(self.b_k_constant), int(self.pad_free),
+            "".join(str(c) for c in self.c_classes)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """One executable choice: path plus Pallas block shape (bm/bn/bk are
+    ignored by the XLA paths; the tile path requires bm=bn=bk=tile)."""
+
+    path: str
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+    def key(self) -> str:
+        return f"{self.path}:{self.bm}x{self.bn}x{self.bk}"
+
+
+def plan_vmem_bytes(plan: GemmPlan, prob: GemmProblem) -> int:
+    """Peak fast-memory working set of one kernel instance (double-buffered
+    streams; formulas match the kernel docstrings)."""
+    t, bm, bn, bk = prob.tile, plan.bm, plan.bn, plan.bk
+    if plan.path == "tile":
+        # dual-buffer a/b/c inputs (4+2 B/elem, double-buffered), fp32
+        # scratch, dual-buffer output
+        return t * t * ((4 + 2) * 2 * 3 + 4 + (4 + 2))
+    if plan.path == "grouped":
+        # per class call: 4 candidate input tiles (f32+bf16 for A and B),
+        # fp32 scratch, one output tile; double-buffered inputs
+        return t * t * ((4 + 2 + 4 + 2) * 2 + 4 + 4)
+    if plan.path == "ksplit_pallas":
+        # x block + w block + y alias + fp32 scratch, double-buffered
+        return (bm * bk + bk * bn + 2 * bm * bn) * 4 * 2
+    return 0  # XLA paths: no explicit VMEM contract
+
+
+def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
+                  vmem_fraction: float = 0.9) -> list[str]:
+    """Reasons this plan cannot run (empty list = valid)."""
+    bad: list[str] = []
+    if plan.path not in PATHS:
+        return [f"unknown path {plan.path!r}"]
+    m, n, k, t = prob.m, prob.n, prob.k, prob.tile
+    if plan.path == "ref":
+        return bad  # always executable (it is the semantic oracle)
+
+    if plan.path == "tile":
+        if (plan.bm, plan.bn, plan.bk) != (t, t, t):
+            bad.append(f"tile path requires bm=bn=bk=tile={t}")
+    elif plan.path in ("ksplit_xla", "ksplit_pallas"):
+        if not prob.b_k_constant:
+            bad.append("ksplit paths need B map constant along N")
+        if len(prob.c_classes) != 1:
+            bad.append("ksplit paths need a uniform C map")
+        if not prob.pad_free:
+            bad.append("ksplit paths need unpadded operands")
+        if k % t:
+            bad.append(f"K={k} not a multiple of tile={t}")
+    if plan.path == "grouped":
+        if prob.has_low8:
+            bad.append("grouped path covers HIGH/LOW classes only")
+        if not (prob.alpha_one and prob.beta_zero):
+            bad.append("grouped path computes C=A·B (alpha=1, beta=0)")
+    if plan.path == "ksplit_pallas":
+        if prob.has_low8:
+            bad.append("ksplit kernel covers HIGH/LOW classes only")
+        if not prob.beta_zero:
+            bad.append("ksplit kernel computes y=x·W (beta=0)")
+        if m % plan.bm or n % plan.bn:
+            bad.append(f"M×N={m}x{n} not divisible by bm×bn="
+                       f"{plan.bm}x{plan.bn}")
+        # the kernel clamps bk per class and every class's K-extent is a
+        # multiple of tile, so bk must divide tile
+        if t % plan.bk:
+            bad.append(f"bk={plan.bk} must divide tile={t}")
+
+    if plan.path in ("tile", "grouped", "ksplit_pallas") \
+            and not dev.interpret:
+        for name, b in (("bm", plan.bm), ("bn", plan.bn), ("bk", plan.bk)):
+            if b % dev.alignment:
+                bad.append(f"{name}={b} violates MXU alignment "
+                           f"% {dev.alignment}")
+    vmem = plan_vmem_bytes(plan, prob)
+    budget = int(dev.vmem_bytes * vmem_fraction)
+    if vmem > budget:
+        bad.append(f"VMEM working set {vmem} B exceeds budget {budget} B")
+    return bad
+
+
+def _grid_steps(plan: GemmPlan, prob: GemmProblem) -> int:
+    m, n, k, t = prob.m, prob.n, prob.k, prob.tile
+    if plan.path == "tile":
+        return (m // t) * (n // t) * (k // t)
+    if plan.path == "grouped":
+        # one grid per C class over that class's output tiles × kt
+        return (m // t) * (n // t) * (k // t)
+    if plan.path == "ksplit_pallas":
+        return -(-m // plan.bm) * -(-n // plan.bn) * -(-k // plan.bk)
+    return 1  # XLA dispatches
+
+
+def predict_time(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec) -> dict:
+    """Roofline score.  Returns the breakdown; ``total_s`` is the rank key."""
+    m, n, k = prob.m, prob.n, prob.k
+    flops = 2.0 * m * n * k
+    a_bytes = m * k * _bytes_per_elem(prob.a_high, prob.a_low8)
+    b_bytes = k * n * _bytes_per_elem(prob.b_high, prob.b_low8)
+    c_bytes = m * n * _bytes_per_elem(prob.c_high, prob.c_low8)
+
+    if plan.path == "ref":
+        # one dense fp32 dot per distinct C class over the full MNK
+        w = sum(dev.class_cost[c] for c in prob.c_classes)
+        compute = flops * w
+        hbm = len(prob.c_classes) * (m * k + k * n) * 4.0 + 2 * m * n * 4.0
+    elif plan.path == "tile":
+        # operational precision = C tile class (paper Algorithm 1)
+        w = dev.class_weight(prob.c_high, prob.c_low8)
+        compute = flops * w
+        # dual-buffer layout streams BOTH class buffers (4+2 B/elem);
+        # blocked re-fetch: A read n/bn times, B read m/bm times
+        hbm = (m * k * 6.0 * (n // plan.bn)
+               + k * n * 6.0 * (m // plan.bm) + 2 * m * n * 6.0)
+    elif plan.path == "grouped":
+        w = dev.class_weight(prob.c_high, prob.c_low8)
+        compute = flops * w
+        # storage bytes + the redundant zero-tile stream (×2), re-fetched
+        # once per C class present
+        refetch = len(prob.c_classes)
+        hbm = 2.0 * refetch * (a_bytes + b_bytes) + 2 * c_bytes
+    else:  # ksplit paths: operational precision = B K-block class
+        w = dev.class_weight(prob.b_high, prob.b_low8)
+        compute = flops * w
+        if plan.path == "ksplit_pallas":
+            hbm = (a_bytes * (n // plan.bn) + b_bytes * (m // plan.bm)
+                   + 2 * m * n * 4.0)
+        else:
+            hbm = a_bytes + b_bytes + 2 * m * n * 4.0
+    compute_s = compute / (dev.low_tflops * 1e12)
+    hbm_s = hbm / (dev.hbm_gbps * 1e9)
+    overhead_s = dev.task_overhead_s * _grid_steps(plan, prob)
+    return {
+        "compute_s": compute_s,
+        "hbm_s": hbm_s,
+        "overhead_s": overhead_s,
+        "vmem_bytes": plan_vmem_bytes(plan, prob),
+        "total_s": max(compute_s, hbm_s) + overhead_s,
+    }

@@ -1,0 +1,323 @@
+"""Unified mixed-precision GEMM dispatch — ``mp_matmul`` and the plan
+registry.
+
+Every execution path the repo grew (reference semantics, the Pallas tile
+kernel, the compact grouped kernel, the KSplit XLA dots, the KSplit Pallas
+kernel) is registered here behind one entry point; a resolved ``GemmPlan``
+(explicit argument > in-memory registry > persisted cache > cost-model best)
+picks the path and block shape.  This is the runtime brain the paper
+delegates to PaRSEC's hardware-aware scheduler.
+
+The ``linear_matmul`` hook is the same mechanism for ``MPLinear``: the layer
+asks the registry for a plan keyed by its (M, K, N, tile, class-ratio)
+signature instead of hardcoding the XLA ksplit path, and
+``tune_linear_params`` fills that registry once at setup (serve engine /
+train step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import (CompactMPMatrix, KSplitWeight, MPMatrix,
+                               ksplit_matmul)
+from repro.core.mp_gemm import mp_gemm_ref
+from repro.core.precision import PrecClass
+from repro.kernels import ops
+from repro.tune.costmodel import GemmPlan, GemmProblem, PATHS, validate_plan
+from repro.tune.device import DeviceSpec, detect_device
+from repro.tune import search as S
+
+_LOW = int(PrecClass.LOW)
+
+#: in-memory plan registry: plan-cache key -> GemmPlan
+_REGISTRY: dict[str, GemmPlan] = {}
+
+
+def clear_registry() -> None:
+    _REGISTRY.clear()
+
+
+def register_plan(key: str, plan: GemmPlan) -> None:
+    _REGISTRY[key] = plan
+
+
+def warm_registry(cache: S.PlanCache | None = None) -> int:
+    """Load every persisted plan into the in-memory registry (the tune-once
+    setup step of serve/train).  Returns the number of plans loaded."""
+    cache = cache or S.default_cache()
+    n = 0
+    for key in cache.keys():
+        _REGISTRY[key] = cache.get(key)
+        n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Problem construction
+# ---------------------------------------------------------------------------
+
+def canonical_operands(a: MPMatrix, b: MPMatrix, c: MPMatrix | None
+                       ) -> tuple[MPMatrix, MPMatrix, MPMatrix]:
+    """Default C (when omitted) is a zero matrix with a uniform-LOW map —
+    the memory-optimal output the paper's 0D endpoint would choose."""
+    if not isinstance(a, MPMatrix) or not isinstance(b, MPMatrix):
+        raise TypeError("mp_matmul operands must be MPMatrix")
+    if a.tile != b.tile:
+        raise ValueError(f"tile mismatch {a.tile} vs {b.tile}")
+    if a.cls.arr.shape[1] != b.cls.arr.shape[0]:
+        raise ValueError(
+            f"inner tile-grid mismatch {a.cls.arr.shape} · {b.cls.arr.shape}")
+    if c is not None:
+        if c.tile != a.tile:
+            raise ValueError(f"C tile {c.tile} != A/B tile {a.tile}")
+        if c.cls.arr.shape != (a.cls.arr.shape[0], b.cls.arr.shape[1]):
+            raise ValueError(
+                f"C tile grid {c.cls.arr.shape} incompatible with "
+                f"{a.cls.arr.shape} · {b.cls.arr.shape}")
+    if c is None:
+        mt = a.cls.arr.shape[0]
+        nt = b.cls.arr.shape[1]
+        cmap = np.full((mt, nt), _LOW, np.int8)
+        c = MPMatrix.from_dense(
+            jnp.zeros((a.shape[0], b.shape[1]), jnp.float32), cmap, a.tile)
+    return a, b, c
+
+
+def problem_of(a: MPMatrix, b: MPMatrix, c: MPMatrix, *,
+               alpha: float = 1.0, beta: float = 0.0) -> GemmProblem:
+    pad_free = (a.shape == a.padded_shape and b.shape == b.padded_shape
+                and c.shape == c.padded_shape)
+    return GemmProblem.from_maps(
+        a.cls.arr, b.cls.arr, c.cls.arr, a.tile,
+        alpha=alpha, beta=beta, pad_free=pad_free)
+
+
+# ---------------------------------------------------------------------------
+# Path executors
+# ---------------------------------------------------------------------------
+
+def _exec_ref(plan, a, b, c, alpha, beta):
+    return mp_gemm_ref(a, b, c, alpha=alpha, beta=beta)
+
+
+def _exec_tile(plan, a, b, c, alpha, beta):
+    return ops.mp_gemm(a, b, c, alpha=alpha, beta=beta)
+
+
+def _exec_grouped(plan, a, b, c, alpha, beta):
+    t = a.tile
+    ac = CompactMPMatrix.from_dense(a.to_dense(), a.cls.arr, t)
+    bc = CompactMPMatrix.from_dense(b.to_dense(), b.cls.arr, t)
+    out = ops.grouped_mp_gemm(ac, bc, c.cls.arr)
+    dense = out.to_dense()[: c.shape[0], : c.shape[1]]
+    return MPMatrix.from_dense(dense, c.cls.arr, t)
+
+
+def _ksplit_weight(b: MPMatrix) -> KSplitWeight:
+    return KSplitWeight.from_dense(b.to_dense(), b.cls.arr[:, 0], b.tile)
+
+
+def _finish_c(y, c: MPMatrix, alpha, beta):
+    out = alpha * y
+    if beta != 0.0:
+        out = out + beta * c.to_dense()
+    return MPMatrix.from_dense(out, c.cls.arr, c.tile)
+
+
+def _exec_ksplit_xla(plan, a, b, c, alpha, beta):
+    y = ksplit_matmul(a.to_dense(), _ksplit_weight(b))
+    return _finish_c(y, c, alpha, beta)
+
+
+def _exec_ksplit_pallas(plan, a, b, c, alpha, beta):
+    w = _ksplit_weight(b)
+    x = a.to_dense()
+    # the kernel consumes x with class-contiguous K columns
+    idx_hi, idx_lo, _ = KSplitWeight.k_partition(w.k_cls.arr, w.tile)
+    xp = jnp.concatenate(
+        [x[:, jnp.asarray(idx)] for idx in (idx_hi, idx_lo) if len(idx)],
+        axis=-1)
+    y = ops.ksplit_matmul_kernel(xp, w, bm=plan.bm, bn=plan.bn, bk=plan.bk)
+    return _finish_c(y, c, alpha, beta)
+
+
+_EXECUTORS = {
+    "ref": _exec_ref,
+    "tile": _exec_tile,
+    "grouped": _exec_grouped,
+    "ksplit_xla": _exec_ksplit_xla,
+    "ksplit_pallas": _exec_ksplit_pallas,
+}
+assert set(_EXECUTORS) == set(PATHS)
+
+
+def execute_plan(plan: GemmPlan, a: MPMatrix, b: MPMatrix, c: MPMatrix,
+                 *, alpha: float = 1.0, beta: float = 0.0) -> MPMatrix:
+    return _EXECUTORS[plan.path](plan, a, b, c, alpha, beta)
+
+
+# ---------------------------------------------------------------------------
+# Plan resolution + public entry point
+# ---------------------------------------------------------------------------
+
+def resolve_plan(prob: GemmProblem, dev: DeviceSpec | None = None,
+                 paths: Iterable[str] = PATHS) -> tuple[GemmPlan, str]:
+    """registry > persisted cache > cost-model best.  Returns (plan, source).
+    Never measures — resolution must be cheap enough for trace time."""
+    dev = dev or detect_device()
+    key = S.plan_key(dev, prob)
+    # a stored plan is only served if it is still valid for THIS problem
+    # (belt-and-braces on top of the struct_key: registry entries can be
+    # hand-registered, and cache files can come from other builds)
+    plan = _REGISTRY.get(key)
+    if plan is not None and not validate_plan(plan, prob, dev):
+        return plan, "registry"
+    plan = S.default_cache().get(key)
+    if plan is not None and not validate_plan(plan, prob, dev):
+        _REGISTRY[key] = plan
+        return plan, "cache"
+    ranked = S.rank_plans(S.candidate_plans(prob, dev, paths), prob, dev)
+    if not ranked:
+        raise ValueError(f"no valid plan for {key}")
+    plan = ranked[0][0]
+    _REGISTRY[key] = plan
+    return plan, "model"
+
+
+def mp_matmul(a: MPMatrix, b: MPMatrix, c: MPMatrix | None = None, *,
+              alpha: float = 1.0, beta: float = 0.0,
+              plan: GemmPlan | None = None) -> MPMatrix:
+    """C ← α·A·B + β·C routed through the best known execution path.
+
+    With no explicit ``plan``, resolution order is in-memory registry →
+    persisted plan cache (``autotune`` winners) → analytical cost model.
+    """
+    a, b, c = canonical_operands(a, b, c)
+    prob = problem_of(a, b, c, alpha=alpha, beta=beta)
+    if plan is None:
+        plan, _ = resolve_plan(prob)
+    else:
+        bad = validate_plan(plan, prob, detect_device())
+        if bad:
+            raise ValueError(f"plan {plan.key()} invalid: {bad}")
+    return execute_plan(plan, a, b, c, alpha=alpha, beta=beta)
+
+
+# ---------------------------------------------------------------------------
+# MPLinear integration (op = "linear")
+# ---------------------------------------------------------------------------
+
+_LINEAR_PATHS = ("ksplit_xla", "ksplit_pallas")
+
+
+def linear_problem(w: KSplitWeight, m: int) -> GemmProblem:
+    k_cls = w.k_cls.arr
+    bh = float((k_cls == int(PrecClass.HIGH)).mean())
+    b8 = float((k_cls == int(PrecClass.LOW8)).mean())
+    k, n = w.shape
+    return GemmProblem(
+        m=int(m), n=n, k=k, tile=w.tile, op="linear",
+        a_high=0.0, a_low8=0.0, b_high=bh, b_low8=b8,
+        c_high=0.0, c_low8=0.0, b_k_constant=True,
+        c_classes=(_LOW,), has_low8=bool(b8),
+        alpha_one=True, beta_zero=True, pad_free=True)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _kernel_linear(blocks, x2d, w):
+    bm, bn, bk = blocks
+    return ops.ksplit_matmul_kernel(x2d, w, bm=bm, bn=bn, bk=bk)
+
+
+def _kernel_linear_fwd(blocks, x2d, w):
+    return _kernel_linear(blocks, x2d, w), (x2d, w)
+
+
+def _kernel_linear_bwd(blocks, res, g):
+    # gradients through the XLA ksplit path — numerically the same matmul,
+    # and pallas_call has no AD rule of its own
+    x2d, w = res
+    _, vjp = jax.vjp(ksplit_matmul, x2d, w)
+    return vjp(g)
+
+
+_kernel_linear.defvjp(_kernel_linear_fwd, _kernel_linear_bwd)
+
+
+def linear_matmul(x, w: KSplitWeight):
+    """MPLinear's matmul, with the kernel/block choice taken from the plan
+    registry instead of a hardcoded default.
+
+    Resolution is registry/cache only (a miss falls back to the XLA ksplit
+    path) so tracing a model never triggers search or measurement; call
+    ``tune_linear_params`` once at setup to pre-resolve every layer.
+    Batched activations [..., K] are flattened to 2D for the kernel; the
+    backward pass runs through the XLA path via custom_vjp.
+    """
+    m = 1
+    for d in x.shape[:-1]:
+        m *= int(d)
+    dev = detect_device()
+    prob = linear_problem(w, m)
+    key = S.plan_key(dev, prob)
+    plan = _REGISTRY.get(key) or S.default_cache().get(key)
+    # the kernel path assumes x's K columns are class-contiguous, which
+    # holds iff the K-class vector is sorted HIGH->LOW (ratio policies);
+    # data-driven unsorted maps stay on the gathering XLA path.
+    if (plan is not None and plan.path == "ksplit_pallas"
+            and not w.w_lo8.size
+            and bool(np.all(np.diff(w.k_cls.arr) <= 0))
+            and m % plan.bm == 0 and w.shape[1] % plan.bn == 0
+            and w.tile % plan.bk == 0):
+        x2d = x.reshape(m, x.shape[-1])
+        y = _kernel_linear((plan.bm, plan.bn, plan.bk), x2d, w)
+        return y.reshape(*x.shape[:-1], w.shape[1])
+    return ksplit_matmul(x, w)
+
+
+def tune_linear_params(params, m_hint: int, *, measure: bool = False,
+                       cache: S.PlanCache | None = None,
+                       warmup: int = 1, iters: int = 3) -> dict[str, GemmPlan]:
+    """Tune-once-at-setup: resolve a plan for every distinct KSplitWeight
+    signature in a parameter tree (serve engine / train step call this).
+
+    ``measure=False`` (the default) is pure model selection + cache lookup —
+    cheap enough for every startup.  ``measure=True`` times the candidates
+    on synthetic activations and persists winners to the plan cache.
+    """
+    dev = detect_device()
+    cache = cache or S.default_cache()
+    plans: dict[str, GemmPlan] = {}
+    leaves = jax.tree.leaves(
+        params, is_leaf=lambda l: isinstance(l, KSplitWeight))
+    for w in leaves:
+        if not isinstance(w, KSplitWeight):
+            continue
+        prob = linear_problem(w, m_hint)
+        key = S.plan_key(dev, prob)
+        if key in plans:
+            continue
+        if not measure or S.cache_only():
+            plan, _ = resolve_plan(prob, dev, _LINEAR_PATHS)
+        else:
+            x = jnp.zeros((m_hint, w.shape[0]), jnp.bfloat16)
+            idx_hi, idx_lo, _ = KSplitWeight.k_partition(w.k_cls.arr, w.tile)
+
+            def run(plan, x=x, w=w, idx_hi=idx_hi, idx_lo=idx_lo):
+                if plan.path == "ksplit_pallas":
+                    return ops.ksplit_matmul_kernel(
+                        x, w, bm=plan.bm, bn=plan.bn, bk=plan.bk)
+                return ksplit_matmul(x, w)
+
+            plan, _ = S.autotune_problem(
+                prob, run, dev=dev, paths=_LINEAR_PATHS, cache=cache,
+                warmup=warmup, iters=iters)
+        _REGISTRY[key] = plan
+        plans[key] = plan
+    return plans

@@ -1,0 +1,104 @@
+"""Optional-hypothesis shim.
+
+The property tests use a small slice of the hypothesis API
+(``@settings(max_examples=N) @given(x=st.integers(a, b), ...)`` with the
+``integers`` / ``floats`` / ``sampled_from`` / ``booleans`` strategies).
+When hypothesis is installed we re-export the real thing; otherwise a
+deterministic fallback runs each property against seeded pseudo-random
+draws plus the strategy's boundary values — weaker than real shrinking
+search, but the properties still execute instead of failing collection.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # the real library, when available
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import itertools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function plus the boundary examples always included."""
+
+        def __init__(self, draw, boundary=()):
+            self.draw = draw
+            self.boundary = tuple(boundary)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                boundary=(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                boundary=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))],
+                boundary=elements[:2])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)),
+                             boundary=(False, True))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value, boundary=(value,))
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **fixture_kw):
+                max_examples = getattr(runner, "_max_examples", 20)
+                rng = np.random.default_rng(0)
+                # boundary cross-product first (capped), then random draws
+                names = sorted(strategies)
+                bounds = [strategies[n].boundary or
+                          (strategies[n].draw(rng),) for n in names]
+                cases = list(itertools.islice(
+                    itertools.product(*bounds), max_examples))
+                while len(cases) < max_examples:
+                    cases.append(tuple(strategies[n].draw(rng)
+                                       for n in names))
+                for case in cases:
+                    kw = dict(zip(names, case))
+                    kw.update(fixture_kw)
+                    try:
+                        fn(*args, **kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (fallback shim): {kw}"
+                        ) from e
+
+            # hide the strategy params from pytest's fixture resolution
+            # (real hypothesis does the same)
+            sig = inspect.signature(fn)
+            runner.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            return runner
+        return deco

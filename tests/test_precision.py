@@ -1,8 +1,7 @@
 """Precision policies + tile maps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import precision as P
 from repro.core.precision import PAPER_RATIOS, Policy, PrecClass

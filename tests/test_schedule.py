@@ -1,8 +1,7 @@
 """Static load-balance (the SPMD analogue of PaRSEC scheduling)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import schedule
 from repro.core.precision import Policy, PrecClass

@@ -1,0 +1,239 @@
+"""repro.tune: cost model, plan validation, cache round-trip, dispatch."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MPMatrix, Policy, make_map, mp_gemm_ref
+from repro.core.layout import KSplitWeight, ksplit_matmul
+from repro.core.precision import PrecClass
+from repro.tune import dispatch as TD
+from repro.tune import search as TS
+from repro.tune.costmodel import (GemmPlan, GemmProblem, plan_vmem_bytes,
+                                  predict_time, validate_plan)
+from repro.tune.device import DEVICE_TABLE, detect_device
+
+LOW = int(PrecClass.LOW)
+V5E = DEVICE_TABLE["tpu-v5e"]
+CPU = DEVICE_TABLE["cpu-interpret"]
+
+
+@pytest.fixture(autouse=True)
+def _isolate_tune_state(tmp_path, monkeypatch):
+    """Every test gets an empty registry and its own plan-cache file."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    monkeypatch.delenv("REPRO_TUNE_CACHE_ONLY", raising=False)
+    monkeypatch.delenv("REPRO_TUNE_DEVICE", raising=False)
+    TD.clear_registry()
+    TS._default_cache = None
+    yield
+    TD.clear_registry()
+    TS._default_cache = None
+
+
+def _operands(M, K, N, T, ratio=0.5, *, b_kconst=False, c_uniform=False,
+              seed=0):
+    pol = Policy(kind="ratio", ratio_high=ratio, seed=seed)
+    a = jax.random.normal(jax.random.PRNGKey(seed), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (K, N))
+    pa = make_map((M, K), T, pol)
+    pb = (np.repeat(make_map((K, T), T, pol), N // T, axis=1) if b_kconst
+          else make_map((K, N), T, pol))
+    pc = (np.full((M // T, N // T), LOW, np.int8) if c_uniform
+          else make_map((M, N), T, pol))
+    return (MPMatrix.from_dense(a, pa, T), MPMatrix.from_dense(b, pb, T),
+            MPMatrix.from_dense(jnp.zeros((M, N)), pc, T))
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def _prob(c_high, tile=256, mnk=2048):
+    return GemmProblem(m=mnk, n=mnk, k=mnk, tile=tile,
+                       a_high=c_high, b_high=c_high, c_high=c_high,
+                       c_classes=(LOW, int(PrecClass.HIGH)))
+
+
+def test_costmodel_monotonic_in_high_fraction():
+    """More HIGH tiles -> more MXU passes -> higher predicted cost."""
+    plan = GemmPlan(path="tile", bm=256, bn=256, bk=256)
+    fracs = [0.0, 0.25, 0.5, 0.75, 1.0]
+    compute = [predict_time(plan, _prob(f), V5E)["compute_s"] for f in fracs]
+    total = [predict_time(plan, _prob(f), V5E)["total_s"] for f in fracs]
+    assert all(b > a for a, b in zip(compute, compute[1:])), compute
+    assert all(b >= a for a, b in zip(total, total[1:])), total
+
+
+def test_costmodel_high_pass_ratio_matches_device_table():
+    plan = GemmPlan(path="tile", bm=256, bn=256, bk=256)
+    lo = predict_time(plan, _prob(0.0), V5E)["compute_s"]
+    hi = predict_time(plan, _prob(1.0), V5E)["compute_s"]
+    assert hi / lo == pytest.approx(
+        V5E.class_cost[int(PrecClass.HIGH)], rel=1e-6)
+
+
+def test_vmem_limit_rejects_plan():
+    """tile=1024 -> 22 B/elem working set ~ 23 MB > 90% of v5e's 16 MB."""
+    prob = _prob(0.5, tile=1024, mnk=4096)
+    plan = GemmPlan(path="tile", bm=1024, bn=1024, bk=1024)
+    assert plan_vmem_bytes(plan, prob) > 0.9 * V5E.vmem_bytes
+    reasons = validate_plan(plan, prob, V5E)
+    assert any("VMEM" in r for r in reasons), reasons
+    # and the candidate enumerator never emits it
+    cands = TS.candidate_plans(prob, V5E)
+    assert all(c.path != "tile" for c in cands)
+    assert any(c.path == "ref" for c in cands)  # oracle always available
+
+
+def test_alignment_rejected_on_real_hw_only():
+    prob = _prob(0.5, tile=100, mnk=400)
+    plan = GemmPlan(path="tile", bm=100, bn=100, bk=100)
+    assert any("alignment" in r for r in validate_plan(plan, prob, V5E))
+    assert not any("alignment" in r
+                   for r in validate_plan(plan, prob, CPU))
+
+
+def test_detect_device_forced(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_DEVICE", "tpu-v6e")
+    assert detect_device().kind == "tpu-v6e"
+    monkeypatch.setenv("REPRO_TUNE_DEVICE", "no-such-device")
+    with pytest.raises(KeyError):
+        detect_device()
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_roundtrip_and_cache_only_dispatch(monkeypatch):
+    A, B, C = _operands(32, 32, 32, 8)
+    from repro.tune import autotune, mp_matmul
+    plan = autotune(A, B, C, warmup=1, iters=2, max_measure=2)
+    path = TS.cache_path()
+    assert os.path.exists(path), "autotune must persist the plan cache"
+
+    # fresh cache object reads the same plan back from disk
+    fresh = TS.PlanCache(path)
+    assert len(fresh) == 1
+    key = fresh.keys()[0]
+    assert fresh.get(key) == plan
+    assert fresh.meta(key)["source"] == "measured"
+
+    # cache-only (CI) mode: dispatch must route via the persisted plan
+    # without measuring anything
+    monkeypatch.setenv("REPRO_TUNE_CACHE_ONLY", "1")
+    TD.clear_registry()
+    TS._default_cache = None
+    prob = TD.problem_of(A, B, C)
+    got, source = TD.resolve_plan(prob)
+    assert got == plan and source == "cache"
+    out = mp_matmul(A, B, C)
+    ref = mp_gemm_ref(A, B, C)
+    np.testing.assert_allclose(np.asarray(out.to_dense()),
+                               np.asarray(ref.to_dense()),
+                               rtol=0, atol=1e-4)
+
+
+def test_cache_only_mode_never_measures():
+    A, B, C = _operands(16, 16, 16, 8)
+    os.environ["REPRO_TUNE_CACHE_ONLY"] = "1"
+    try:
+        prob = TD.problem_of(A, B, C)
+
+        def boom(plan):
+            raise RuntimeError("cache-only mode must not execute plans")
+
+        plan, report = TS.autotune_problem(prob, boom)
+        assert report["source"] == "model"
+        assert not validate_plan(plan, prob, detect_device())
+    finally:
+        del os.environ["REPRO_TUNE_CACHE_ONLY"]
+
+
+# ---------------------------------------------------------------------------
+# dispatcher numerical equivalence, every routed path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path,kw,tol", [
+    ("ref", {}, 0.0),
+    ("tile", {}, 1e-4),
+    ("grouped", {}, 1e-4),
+    ("ksplit_xla", dict(b_kconst=True, c_uniform=True), 2e-2),
+    ("ksplit_pallas", dict(b_kconst=True, c_uniform=True), 2e-2),
+])
+def test_dispatch_matches_reference(path, kw, tol):
+    M, K, N, T = 32, 48, 32, 8
+    A, B, C = _operands(M, K, N, T, ratio=0.5, **kw)
+    from repro.tune import mp_matmul
+    plan = GemmPlan(path=path, bm=M if path == "ksplit_pallas" else T,
+                    bn=N if path == "ksplit_pallas" else T, bk=T)
+    out = mp_matmul(A, B, C, plan=plan)
+    ref = mp_gemm_ref(A, B, C)
+    scale = float(jnp.abs(ref.to_dense()).max())
+    err = float(jnp.abs(out.to_dense() - ref.to_dense()).max())
+    assert err <= tol * scale + 1e-12, (path, err, scale)
+    assert np.array_equal(out.cls.arr, C.cls.arr)
+
+
+def test_invalid_plan_is_rejected_with_reasons():
+    A, B, C = _operands(32, 32, 32, 8)  # random B map: ksplit inapplicable
+    from repro.tune import mp_matmul
+    with pytest.raises(ValueError, match="ksplit"):
+        mp_matmul(A, B, C, plan=GemmPlan(path="ksplit_xla", bm=8, bn=8,
+                                         bk=8))
+
+
+def test_default_c_is_uniform_low_zero():
+    A, B, _ = _operands(16, 24, 16, 8)
+    from repro.tune import mp_matmul
+    out = mp_matmul(A, B, plan=GemmPlan(path="ref", bm=8, bn=8, bk=8))
+    assert (out.cls.arr == LOW).all()
+    ref = mp_gemm_ref(A, B, MPMatrix.from_dense(
+        jnp.zeros((16, 16)), np.full((2, 2), LOW, np.int8), 8))
+    np.testing.assert_allclose(np.asarray(out.to_dense()),
+                               np.asarray(ref.to_dense()), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MPLinear integration
+# ---------------------------------------------------------------------------
+
+def test_linear_dispatch_routes_registered_kernel_plan():
+    K, N, T, M = 32, 16, 8, 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    k_cls = np.array([2, 2, 1, 1], np.int8)  # sorted HIGH,HIGH,LOW,LOW
+    ksw = KSplitWeight.from_dense(w, k_cls, T)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    base = ksplit_matmul(x, ksw)
+
+    # default (no plan): XLA path
+    np.testing.assert_array_equal(np.asarray(TD.linear_matmul(x, ksw)),
+                                  np.asarray(base))
+
+    # register the Pallas kernel plan for this signature -> routed
+    dev = detect_device()
+    prob = TD.linear_problem(ksw, M)
+    TD.register_plan(TS.plan_key(dev, prob),
+                     GemmPlan(path="ksplit_pallas", bm=M, bn=N, bk=T))
+    routed = TD.linear_matmul(x, ksw)
+    np.testing.assert_allclose(np.asarray(routed), np.asarray(base),
+                               rtol=2e-2, atol=1e-4)
+
+
+def test_tune_linear_params_fills_registry():
+    from repro.core.linear import init_mp_linear
+    lin = init_mp_linear(jax.random.PRNGKey(0), 64, 32,
+                         Policy(kind="ratio", ratio_high=0.5), tile=8)
+    plans = TD.tune_linear_params({"lin": lin}, m_hint=16)
+    assert len(plans) == 1
+    (key, plan), = plans.items()
+    assert plan.path in ("ksplit_xla", "ksplit_pallas")
+    # the layer itself still evaluates correctly through the dispatcher
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+    y = lin(x)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ksplit_matmul(x, lin.w)),
+                               rtol=2e-2, atol=1e-4)
