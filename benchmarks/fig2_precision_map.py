@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.core import make_map, map_ratio_string, map_storage_bytes
 from repro.core import schedule
-from repro.core.precision import PAPER_RATIOS, PrecClass
+from repro.core.formats import DEFAULT_FORMATS
+from repro.core.precision import PAPER_RATIOS
 
 
 def run(matrix: int = 102_400, tile: int = 1_024):
@@ -33,7 +34,7 @@ def run(matrix: int = 102_400, tile: int = 1_024):
                      imb_random, imb_bal, dt))
         print(f"\n=== {name} (tile grid {m.shape[0]}x{m.shape[1]}) ===")
         for i in range(32):
-            print("".join("#" if m[i, j] == int(PrecClass.HIGH) else "."
+            print("".join("#" if m[i, j] == DEFAULT_FORMATS.high else "."
                           for j in range(32)))
     print(f"\n{'config':10s} {'realized':10s} {'B/elem':>7s} "
           f"{'imb(random)':>12s} {'imb(balanced)':>14s}")

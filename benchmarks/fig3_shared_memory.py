@@ -21,7 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import KSplitWeight, ksplit_matmul, split_cls
-from repro.core.precision import CLASS_MXU_COST, PAPER_RATIOS, Policy
+from repro.core.formats import get_format
+from repro.core.precision import PAPER_RATIOS, Policy
+
+_HI_COST = get_format("fp32").cost_on("tpu-v5e")
+_LO_COST = get_format("bf16").cost_on("tpu-v5e")
 
 PEAK = 197e12    # bf16 flops/chip
 HBM = 819e9
@@ -47,7 +51,7 @@ def measure_cpu(M=1024, K=1024, N=1024, tile=128, iters=3):
         ratio_high = float(np.mean(
             np.asarray(kcls) == 2))
         # v5e projection
-        mxu = flops * (3.0 * ratio_high + 1.0 * (1 - ratio_high))
+        mxu = flops * (_HI_COST * ratio_high + _LO_COST * (1 - ratio_high))
         t_comp = mxu / PEAK
         bytes_w = W.storage_bytes() + x.size * 4 + M * N * 4
         t_mem = bytes_w / HBM

@@ -47,10 +47,12 @@ def lower_summa(P, Q, size, tile=512, ratio_name="50D:50S"):
     pa = schedule.sorted_balanced_map(M // tile, K // tile, pol, 0, P)
     pb = schedule.sorted_balanced_map(K // tile, N // tile, pol, 1, Q)
     pc = schedule.balanced_ratio_map(M // tile, N // tile, pol, P, Q)
+    from repro.core.formats import DEFAULT_FORMATS
     from repro.core.layout import _HashableMap
     args = dict(cls_a=_HashableMap(pa), cls_b=_HashableMap(pb),
                 cls_c=_HashableMap(pc), tile=tile, mesh=mesh,
-                axes=("row", "col"), alpha=1.0, beta=0.0)
+                axes=("row", "col"), alpha=1.0, beta=0.0,
+                codes=(DEFAULT_FORMATS.high, DEFAULT_FORMATS.low))
     sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
     lowered = _summa_impl.lower(
         sds((M, K), jnp.float32), sds((M, K), jnp.bfloat16),

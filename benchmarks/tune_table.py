@@ -25,8 +25,7 @@ import numpy as np
 
 def _mk_problem(M, K, N, T, ratio, *, b_kconst=False, c_uniform=False,
                 seed=0):
-    from repro.core import MPMatrix, Policy, make_map
-    from repro.core.precision import PrecClass
+    from repro.core import DEFAULT_FORMATS, MPMatrix, Policy, make_map
     pol = Policy(kind="ratio", ratio_high=ratio, seed=seed)
     a = jax.random.normal(jax.random.PRNGKey(seed), (M, K))
     b = jax.random.normal(jax.random.PRNGKey(seed + 1), (K, N))
@@ -36,7 +35,7 @@ def _mk_problem(M, K, N, T, ratio, *, b_kconst=False, c_uniform=False,
     else:
         pb = make_map((K, N), T, pol)
     if c_uniform:
-        pc = np.full((M // T, N // T), int(PrecClass.LOW), np.int8)
+        pc = np.full((M // T, N // T), DEFAULT_FORMATS.low, np.int8)
     else:
         pc = make_map((M, N), T, pol)
     A = MPMatrix.from_dense(a, pa, T)

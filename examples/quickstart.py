@@ -56,3 +56,20 @@ plan = autotune(A, B, C)                     # line 1: tune once
 out2 = mp_matmul(A, B, C)                    # line 2: dispatch via the plan
 err2 = float(jnp.abs(out2.to_dense() - ref.to_dense()).max())
 print(f"autotuned plan {plan.key()}: max |Δ| vs reference = {err2:.2e}")
+
+# --- 5. swap the precision formats (the extensible registry) ---------------
+# Which concrete formats play the paper's D/S/Q roles is a FormatSet over
+# the registry in repro.core.formats — here fp8 e5m2 replaces e4m3 as the Q
+# format and fp16 replaces bf16 as the S format.  Any registered format
+# (one register_format(...) call) works through maps, layouts, dispatch and
+# the cost model; plans are cached per format set.
+from repro.core import format_set                              # noqa: E402
+
+fs = format_set("fp8_e5m2", "fp16", "fp32")
+pol_q = Policy(kind="ratio", ratio_high=0.25, ratio_low8=0.25, seed=7)
+Aq = MPMatrix.from_dense(a, make_map((M, K), TILE, pol_q, fset=fs), TILE, fs)
+Bq = MPMatrix.from_dense(b, make_map((K, N), TILE, pol_q, fset=fs), TILE, fs)
+outq = mp_matmul(Aq, Bq)
+print(f"format set {fs.key()}: storage "
+      f"{Aq.storage_bytes() / (M*K):.2f} B/elem, "
+      f"out max |val| = {float(jnp.abs(outq.to_dense()).max()):.2f}")

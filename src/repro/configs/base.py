@@ -58,6 +58,11 @@ class ArchConfig:
     # --- mixed-precision policy (the paper's technique) ---------------------
     mp_policy: Policy = Policy(kind="ratio", ratio_high=0.5)
     mp_tile: int = 128
+    #: which registered precision formats play the D/S/Q roles
+    #: (``repro.core.formats`` FormatSet key, e.g. "fp8_e5m2+fp16+fp32").
+    #: Governs the dense stack (attention / MLP / lm_head); the batched
+    #: MoE and Mamba split weights currently stay on the default set.
+    mp_formats: str = "fp8_e4m3+bf16+fp32"
     # --- training ------------------------------------------------------------
     remat: bool = True
     norm_eps: float = 1e-6

@@ -1,6 +1,10 @@
 # The paper's primary contribution: tile-centric mixed-precision GEMM
-# (precision policies, tile-heterogeneous layouts, reference semantics,
-# distributed SUMMA, and the MPLinear layer used by the model stack).
+# (precision formats + registry, precision policies, tile-heterogeneous
+# layouts, reference semantics, distributed SUMMA, and the MPLinear layer
+# used by the model stack).
+from repro.core.formats import (DEFAULT_FORMATS, FormatSet, PrecisionFormat,
+                                format_set, get_format, register_format,
+                                registered_formats)
 from repro.core.precision import (PAPER_RATIOS, PrecClass, Policy, make_map,
                                   map_ratio_string, map_storage_bytes)
 from repro.core.layout import (CompactMPMatrix, KSplitWeight, MPMatrix,
@@ -11,6 +15,8 @@ from repro.core.linear import MPLinear, choose_tile, init_mp_linear, split_cls
 from repro.core import schedule
 
 __all__ = [
+    "DEFAULT_FORMATS", "FormatSet", "PrecisionFormat", "format_set",
+    "get_format", "register_format", "registered_formats",
     "PAPER_RATIOS", "PrecClass", "Policy", "make_map", "map_ratio_string",
     "map_storage_bytes", "CompactMPMatrix", "KSplitWeight", "MPMatrix",
     "NSplitWeight", "ksplit_matmul", "nsplit_matmul", "model_flops",

@@ -1,0 +1,260 @@
+"""Extensible precision-format registry.
+
+The paper's §6 future work is "incorporating additional precision formats";
+the format space (fp8 e4m3/e5m2, fp16, bf16, tf32, int8 …) is exactly where
+tile-centric GEMM frameworks differentiate.  Instead of a closed 3-member
+enum whose properties are smeared across parallel dicts, every precision a
+tile can be stored/computed in is one frozen :class:`PrecisionFormat` record
+in a module-level registry, and the *active* combination of formats a matrix
+uses is an ordered :class:`FormatSet`.
+
+One ``register_format(...)`` call is all a new format needs; it then works
+through ``make_map`` → layout construction → ``mp_matmul`` dispatch → the
+tune cost model, because every layer reads its dtype/byte/pass-cost facts
+from here.
+
+Roles
+-----
+The paper expresses a map as ``aD:bS[:cQ]``: a *high* format (the paper's D,
+fp64 there / fp32 here), a *low* format (S), and optionally a sub-low
+*low8* format (Q).  A ``FormatSet`` is 2 or 3 formats in **ascending storage
+cost**; tile-class codes are indices into that order, so the default set
+``fp8_e4m3+bf16+fp32`` reproduces the historical codes LOW8=0, LOW=1,
+HIGH=2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionFormat:
+    """Everything the stack needs to know about one precision format.
+
+    ``pass_cost`` maps a device kind (exact table key like ``"tpu-v5e"``, a
+    platform family prefix like ``"tpu"``/``"gpu"``/``"cpu"``, or
+    ``"default"``) to the relative MXU pass count of a tile matmul task
+    executed at this format's *operational* precision (fp32 = 3 bf16 passes
+    on TPU v5e, 2 tensor-core passes on A100, …).
+    """
+
+    name: str                     # registry key, also used in cache keys
+    storage_dtype: object         # dtype tiles are stored/communicated in
+    compute_dtype: object         # operational dtype of the dot
+    bytes_per_elem: int           # storage bytes per element
+    dot_precision: jax.lax.Precision = jax.lax.Precision.DEFAULT
+    accum_dtype: object = jnp.float32   # accumulator (fp32 everywhere today)
+    pass_cost: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: {"default": 1.0})
+    short: str = ""               # one-letter tag for ratio strings (D/S/Q)
+
+    def cost_on(self, device_kind: str) -> float:
+        """Relative MXU passes on ``device_kind`` (family/default fallback)."""
+        if device_kind in self.pass_cost:
+            return float(self.pass_cost[device_kind])
+        family = device_kind.split("-")[0]
+        if family in self.pass_cost:
+            return float(self.pass_cost[family])
+        return float(self.pass_cost.get("default", 1.0))
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """Round-trip through storage precision (receiver-side conversion
+        produces exactly this value at the consumer)."""
+        return x.astype(self.storage_dtype).astype(jnp.float32)
+
+    def signature(self) -> str:
+        """Stable signature for cache invalidation: changing any operational
+        fact of a format must retire plans tuned against the old definition."""
+        costs = ",".join(f"{k}={v:g}" for k, v in sorted(self.pass_cost.items()))
+        return (f"{self.name}:{jnp.dtype(self.storage_dtype).name}"
+                f">{jnp.dtype(self.compute_dtype).name}"
+                f":{self.bytes_per_elem}B:{self.dot_precision.name}"
+                f":[{costs}]")
+
+
+_REGISTRY: dict[str, PrecisionFormat] = {}
+
+
+def register_format(fmt: PrecisionFormat | None = None, /, **kwargs
+                    ) -> PrecisionFormat:
+    """Register a format (idempotent for identical re-registration).
+
+    Either pass a ready ``PrecisionFormat`` or the field values as kwargs.
+    Re-registering a name with a *different* definition raises — formats are
+    load-bearing for persisted plan caches and serialized layouts.
+    """
+    if fmt is None:
+        fmt = PrecisionFormat(**kwargs)
+    prev = _REGISTRY.get(fmt.name)
+    if prev is not None and prev.signature() != fmt.signature():
+        raise ValueError(
+            f"format {fmt.name!r} already registered with a different "
+            f"definition ({prev.signature()} vs {fmt.signature()})")
+    _REGISTRY[fmt.name] = fmt
+    return fmt
+
+
+def get_format(name: str) -> PrecisionFormat:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown precision format {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_formats() -> dict[str, PrecisionFormat]:
+    return dict(_REGISTRY)
+
+
+def registry_signatures() -> dict[str, str]:
+    """name -> signature for every registered format (plan-cache stamps)."""
+    return {n: f.signature() for n, f in sorted(_REGISTRY.items())}
+
+
+# ---------------------------------------------------------------------------
+# Built-in formats
+# ---------------------------------------------------------------------------
+
+#: fp32 storage, fp32 3-pass MXU compute — the paper's "D".
+FP32 = register_format(
+    name="fp32", storage_dtype=jnp.float32, compute_dtype=jnp.float32,
+    bytes_per_elem=4, dot_precision=jax.lax.Precision.HIGHEST,
+    pass_cost={"default": 3.0, "tpu": 3.0, "gpu": 2.0, "cpu": 1.5},
+    short="D")
+
+#: bf16 storage + MXU-native compute — the paper's "S".
+BF16 = register_format(
+    name="bf16", storage_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    bytes_per_elem=2, pass_cost={"default": 1.0}, short="S")
+
+#: fp8 e4m3 storage, bf16 compute (upcast on v5e) — historical "Q".
+FP8_E4M3 = register_format(
+    name="fp8_e4m3", storage_dtype=jnp.float8_e4m3fn,
+    compute_dtype=jnp.bfloat16, bytes_per_elem=1,
+    pass_cost={"default": 1.0, "gpu-a100": 0.5}, short="Q")
+
+#: fp8 e5m2 (wider exponent, gradient-friendly) — first beyond-seed format.
+FP8_E5M2 = register_format(
+    name="fp8_e5m2", storage_dtype=jnp.float8_e5m2,
+    compute_dtype=jnp.bfloat16, bytes_per_elem=1,
+    pass_cost={"default": 1.0, "gpu-a100": 0.5}, short="Q")
+
+#: fp16 storage and compute — second beyond-seed format (GPU-native "S").
+FP16 = register_format(
+    name="fp16", storage_dtype=jnp.float16, compute_dtype=jnp.float16,
+    bytes_per_elem=2, pass_cost={"default": 1.0}, short="S")
+
+
+# ---------------------------------------------------------------------------
+# FormatSet — the ordered, role-tagged active combination
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FormatSet:
+    """2 or 3 format names in ascending storage cost.
+
+    Tile-class codes are indices into ``names``.  Role codes (the paper's
+    D/S/Q) are derived from the order: ``high`` is the last (most expensive)
+    format, ``low`` the one before it, ``low8`` the cheapest when three
+    formats are present.  Only names are stored — the records resolve
+    through the registry — so a FormatSet is tiny, hashable static metadata
+    (it rides in pytree aux data and jit cache keys).
+    """
+
+    names: tuple[str, ...]
+
+    def __post_init__(self):
+        if not (2 <= len(self.names) <= 3):
+            raise ValueError(
+                f"FormatSet holds 2 or 3 formats (D/S[/Q] roles), got "
+                f"{self.names}")
+        for n in self.names:
+            get_format(n)   # fail fast on unknown names
+        costs = [get_format(n).bytes_per_elem for n in self.names]
+        if costs != sorted(costs):
+            raise ValueError(
+                f"FormatSet must be ordered by ascending storage cost, got "
+                f"{self.names} with bytes {costs}")
+
+    # -- codes ---------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def __iter__(self):
+        return iter(self.names)
+
+    @property
+    def high(self) -> int:
+        """Class code of the D role (paper's FP64 / our fp32-like format)."""
+        return len(self.names) - 1
+
+    @property
+    def low(self) -> int:
+        """Class code of the S role."""
+        return len(self.names) - 2
+
+    @property
+    def low8(self) -> int | None:
+        """Class code of the Q role, or None for 2-format sets."""
+        return 0 if len(self.names) == 3 else None
+
+    @property
+    def codes(self) -> tuple[int, ...]:
+        return tuple(range(len(self.names)))
+
+    @property
+    def class_order(self) -> tuple[int, ...]:
+        """Codes in descending storage cost — the storage order of split
+        layouts (HIGH rows/cols first, matching sorted class maps)."""
+        return tuple(reversed(range(len(self.names))))
+
+    def fmt(self, code: int) -> PrecisionFormat:
+        try:
+            return get_format(self.names[code])
+        except IndexError:
+            raise KeyError(
+                f"class code {code} outside format set {self.names}") from None
+
+    def formats(self) -> tuple[PrecisionFormat, ...]:
+        return tuple(get_format(n) for n in self.names)
+
+    def code_of(self, name: str) -> int:
+        return self.names.index(name)
+
+    # -- derived fact tables -------------------------------------------------
+    def storage_dtype(self, code: int):
+        return self.fmt(code).storage_dtype
+
+    def bytes_of(self, code: int) -> int:
+        return self.fmt(code).bytes_per_elem
+
+    def role_bytes(self) -> tuple[float, float, float]:
+        """(high, low, low8) storage bytes per element; low8 0.0 if absent."""
+        b8 = float(self.fmt(self.low8).bytes_per_elem) \
+            if self.low8 is not None else 0.0
+        return (float(self.fmt(self.high).bytes_per_elem),
+                float(self.fmt(self.low).bytes_per_elem), b8)
+
+    def key(self) -> str:
+        """Plan-cache key segment, e.g. ``fp8_e4m3+bf16+fp32``."""
+        return "+".join(self.names)
+
+    @classmethod
+    def from_key(cls, key: str) -> "FormatSet":
+        return cls(tuple(key.split("+")))
+
+    def signatures(self) -> dict[str, str]:
+        return {n: get_format(n).signature() for n in self.names}
+
+
+def format_set(*names: str) -> FormatSet:
+    """Convenience constructor: ``format_set("fp8_e5m2", "bf16", "fp32")``."""
+    return FormatSet(tuple(names))
+
+
+#: The historical default: LOW8=0 (fp8 e4m3), LOW=1 (bf16), HIGH=2 (fp32).
+DEFAULT_FORMATS = format_set("fp8_e4m3", "bf16", "fp32")

@@ -3,18 +3,24 @@
 A JAX array has a single dtype, so the paper's "each tile has its own
 precision" needs an explicit representation.  Three layouts (see DESIGN.md §3):
 
-* ``MPMatrix``        — dense-dual: one fp32 buffer + one bf16 buffer (+ fp8),
-                        each tile valid in exactly one.  Semantic/reference
-                        layout: simple, differentiable, composable.
+* ``MPMatrix``        — dense-multi: one dense buffer per format in the
+                        active FormatSet, each tile valid in exactly one.
+                        Semantic/reference layout: simple, differentiable,
+                        composable.
 * ``CompactMPMatrix`` — class-sorted compact tiles; storage bytes are exactly
                         the paper's 4·a + 2·b (+ 1·c) per element.
 * ``KSplitWeight``    — production layout for LM matmuls: the class map is
                         constant along N, the K-blocks are permuted so each
-                        class is contiguous, and matmul lowers to (up to)
-                        three dense dots with zero HLO-FLOP inflation.
+                        class is contiguous, and matmul lowers to one dense
+                        dot per format with zero HLO-FLOP inflation.
 
-All are registered pytrees; static metadata (maps, tile size) lives in numpy
-on the host and is hashed into jit keys.
+Which formats the buffers hold is driven by the layout's
+:class:`~repro.core.formats.FormatSet` (default ``fp8_e4m3+bf16+fp32``);
+class-map entries are codes into that set.  The legacy ``hi``/``lo``/``lo8``
+(and ``w_hi``/``w_lo``/``w_lo8``) accessors remain as role-based views.
+
+All are registered pytrees; static metadata (maps, tile size, format set)
+lives in numpy/aux on the host and is hashed into jit keys.
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
-from repro.core.precision import PrecClass
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
 
 
 def _pad_to(x: jax.Array, m: int, n: int) -> jax.Array:
@@ -34,6 +40,14 @@ def _pad_to(x: jax.Array, m: int, n: int) -> jax.Array:
     if pm or pn:
         x = jnp.pad(x, ((0, pm), (0, pn)))
     return x
+
+
+def _check_codes(cls_map: np.ndarray, fset: FormatSet) -> np.ndarray:
+    cls_map = np.asarray(cls_map)
+    bad = [int(c) for c in np.unique(cls_map) if not 0 <= c < len(fset)]
+    if bad:
+        raise ValueError(f"class codes {bad} outside format set {fset.names}")
+    return cls_map
 
 
 class _HashableMap:
@@ -57,64 +71,89 @@ class _HashableMap:
 
 
 # ---------------------------------------------------------------------------
-# MPMatrix — dense dual-buffer layout
+# MPMatrix — dense per-format buffers
 # ---------------------------------------------------------------------------
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class MPMatrix:
-    """Dense-dual tile-heterogeneous matrix.
+    """Dense multi-buffer tile-heterogeneous matrix.
 
-    ``hi``/``lo``/``lo8`` are full (padded) dense buffers; tile (i, j) is
-    valid in the buffer selected by ``cls[i, j]`` and zero elsewhere.
+    ``bufs[code]`` is a full (padded) dense buffer in that format's storage
+    dtype; tile (i, j) is valid in the buffer selected by ``cls[i, j]`` and
+    zero elsewhere.
     """
 
-    hi: jax.Array        # f32[M, N]
-    lo: jax.Array        # bf16[M, N]
-    lo8: jax.Array       # f8e4m3[M, N] (zeros unless LOW8 tiles exist)
-    cls: _HashableMap    # int8[mt, nt]  (static)
-    tile: int            # static
-    shape: tuple[int, int]  # logical (unpadded) shape, static
+    bufs: tuple[jax.Array, ...]   # one [M, N] buffer per format code
+    cls: _HashableMap             # int8[mt, nt]  (static)
+    tile: int                     # static
+    shape: tuple[int, int]        # logical (unpadded) shape, static
+    fset: FormatSet = DEFAULT_FORMATS   # static
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.hi, self.lo, self.lo8), (self.cls, self.tile, self.shape)
+        # buffers are direct children (not a nested tuple): optimizer /
+        # error-feedback code maps leaves to (value, residual) tuples and
+        # splits them with is_leaf=isinstance(tuple), which must not fire
+        # on the container of the buffers themselves
+        return tuple(self.bufs), (self.cls, self.tile, self.shape, self.fset)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        hi, lo, lo8 = children
-        return cls(hi, lo, lo8, *aux)
+        return cls(tuple(children), *aux)
+
+    # -- role views (legacy accessors) --------------------------------------
+    @property
+    def hi(self) -> jax.Array:
+        return self.bufs[self.fset.high]
+
+    @property
+    def lo(self) -> jax.Array:
+        return self.bufs[self.fset.low]
+
+    @property
+    def lo8(self) -> jax.Array:
+        if self.fset.low8 is None:
+            return jnp.zeros(self.padded_shape, jnp.float8_e4m3fn)
+        return self.bufs[self.fset.low8]
 
     # -- constructors --------------------------------------------------------
     @classmethod
-    def from_dense(cls, w: jax.Array, cls_map: np.ndarray, tile: int) -> "MPMatrix":
+    def from_dense(cls, w: jax.Array, cls_map: np.ndarray, tile: int,
+                   fset: FormatSet = DEFAULT_FORMATS) -> "MPMatrix":
+        cls_map = _check_codes(cls_map, fset)
         mt, nt = cls_map.shape
         m, n = mt * tile, nt * tile
         wp = _pad_to(w.astype(jnp.float32), m, n)
-        cmap = jnp.asarray(np.asarray(cls_map), jnp.int8)
+        cmap = jnp.asarray(cls_map, jnp.int8)
         sel = jnp.repeat(jnp.repeat(cmap, tile, 0), tile, 1)
-        hi = jnp.where(sel == int(PrecClass.HIGH), wp, 0.0)
-        lo = jnp.where(sel == int(PrecClass.LOW), wp, 0.0).astype(jnp.bfloat16)
-        lo8 = jnp.where(sel == int(PrecClass.LOW8), wp, 0.0).astype(
-            jnp.float8_e4m3fn)
-        return cls(hi, lo, lo8, _HashableMap(np.asarray(cls_map)), tile,
-                   (w.shape[0], w.shape[1]))
+        bufs = tuple(
+            jnp.where(sel == code, wp, 0.0).astype(fset.storage_dtype(code))
+            for code in fset.codes)
+        return cls(bufs, _HashableMap(cls_map), tile,
+                   (w.shape[0], w.shape[1]), fset)
 
     # -- views ----------------------------------------------------------------
+    def padded_dense(self) -> jax.Array:
+        """Padded dense fp32 view with per-tile storage rounding applied
+        (each tile is valid in exactly one buffer, the rest are zeros)."""
+        d = self.bufs[0].astype(jnp.float32)
+        for b in self.bufs[1:]:
+            d = d + b.astype(jnp.float32)
+        return d
+
     def to_dense(self) -> jax.Array:
         """Materialize at fp32 with storage-precision rounding applied
         (this is the value every consumer sees after receiver-side convert)."""
-        d = (self.hi + self.lo.astype(jnp.float32)
-             + self.lo8.astype(jnp.float32))
-        return d[: self.shape[0], : self.shape[1]]
+        return self.padded_dense()[: self.shape[0], : self.shape[1]]
 
     @property
     def padded_shape(self) -> tuple[int, int]:
-        return self.hi.shape
+        return self.bufs[0].shape
 
     def storage_bytes(self) -> int:
         """Semantic storage bytes (what CompactMPMatrix would allocate)."""
-        return P.map_storage_bytes(self.cls.arr, self.tile)
+        return P.map_storage_bytes(self.cls.arr, self.tile, self.fset)
 
 
 # ---------------------------------------------------------------------------
@@ -124,38 +163,52 @@ class MPMatrix:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class CompactMPMatrix:
-    """Class-sorted tile storage: tiles_hi f32[n_hi,t,t], tiles_lo
-    bf16[n_lo,t,t], tiles_lo8 f8[n_lo8,t,t].  ``slot[i,j]`` is the index of
-    tile (i,j) inside its class array.  Allocated bytes == paper's storage."""
+    """Class-sorted tile storage: ``tiles[code]`` holds that format's tiles
+    as ``storage_dtype[n_code, t, t]``.  ``slot[i,j]`` is the index of tile
+    (i,j) inside its class array.  Allocated bytes == paper's storage."""
 
-    tiles_hi: jax.Array
-    tiles_lo: jax.Array
-    tiles_lo8: jax.Array
+    tiles: tuple[jax.Array, ...]
     cls: _HashableMap      # int8[mt, nt] (static)
     slot: _HashableMap     # int32[mt, nt] (static)
     tile: int
     shape: tuple[int, int]
+    fset: FormatSet = DEFAULT_FORMATS
 
     def tree_flatten(self):
-        return ((self.tiles_hi, self.tiles_lo, self.tiles_lo8),
-                (self.cls, self.slot, self.tile, self.shape))
+        return (tuple(self.tiles),
+                (self.cls, self.slot, self.tile, self.shape, self.fset))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(tuple(children), *aux)
+
+    # -- role views (legacy accessors) --------------------------------------
+    @property
+    def tiles_hi(self) -> jax.Array:
+        return self.tiles[self.fset.high]
+
+    @property
+    def tiles_lo(self) -> jax.Array:
+        return self.tiles[self.fset.low]
+
+    @property
+    def tiles_lo8(self) -> jax.Array:
+        if self.fset.low8 is None:
+            return jnp.zeros((0, self.tile, self.tile), jnp.float8_e4m3fn)
+        return self.tiles[self.fset.low8]
 
     @staticmethod
     def make_slots(cls_map: np.ndarray) -> np.ndarray:
         slot = np.zeros_like(cls_map, dtype=np.int32)
-        for c in (int(PrecClass.HIGH), int(PrecClass.LOW), int(PrecClass.LOW8)):
+        for c in np.unique(cls_map):
             mask = cls_map == c
             slot[mask] = np.arange(mask.sum(), dtype=np.int32)
         return slot
 
     @classmethod
-    def from_dense(cls, w: jax.Array, cls_map: np.ndarray, tile: int
-                   ) -> "CompactMPMatrix":
-        cls_map = np.asarray(cls_map)
+    def from_dense(cls, w: jax.Array, cls_map: np.ndarray, tile: int,
+                   fset: FormatSet = DEFAULT_FORMATS) -> "CompactMPMatrix":
+        cls_map = _check_codes(cls_map, fset)
         mt, nt = cls_map.shape
         m, n = mt * tile, nt * tile
         wp = _pad_to(w.astype(jnp.float32), m, n)
@@ -164,18 +217,16 @@ class CompactMPMatrix:
         slot = cls.make_slots(cls_map)
         flat_cls = cls_map.reshape(-1)
 
-        def gather_class(c, dtype):
-            idx = np.nonzero(flat_cls == c)[0]
+        def gather_class(code):
+            dtype = fset.storage_dtype(code)
+            idx = np.nonzero(flat_cls == code)[0]
             if len(idx) == 0:
                 return jnp.zeros((0, tile, tile), dtype)
             return tiles[jnp.asarray(idx)].astype(dtype)
 
-        return cls(
-            gather_class(int(PrecClass.HIGH), jnp.float32),
-            gather_class(int(PrecClass.LOW), jnp.bfloat16),
-            gather_class(int(PrecClass.LOW8), jnp.float8_e4m3fn),
-            _HashableMap(cls_map), _HashableMap(slot), tile,
-            (w.shape[0], w.shape[1]))
+        return cls(tuple(gather_class(code) for code in fset.codes),
+                   _HashableMap(cls_map), _HashableMap(slot), tile,
+                   (w.shape[0], w.shape[1]), fset)
 
     def to_dense(self) -> jax.Array:
         mt, nt = self.cls.arr.shape
@@ -183,10 +234,8 @@ class CompactMPMatrix:
         out = jnp.zeros((mt * nt, t, t), jnp.float32)
         flat_cls = self.cls.arr.reshape(-1)
         flat_slot = self.slot.arr.reshape(-1)
-        for c, buf in ((int(PrecClass.HIGH), self.tiles_hi),
-                       (int(PrecClass.LOW), self.tiles_lo),
-                       (int(PrecClass.LOW8), self.tiles_lo8)):
-            idx = np.nonzero(flat_cls == c)[0]
+        for code, buf in enumerate(self.tiles):
+            idx = np.nonzero(flat_cls == code)[0]
             if len(idx) == 0:
                 continue
             vals = buf[jnp.asarray(flat_slot[idx])].astype(jnp.float32)
@@ -197,11 +246,11 @@ class CompactMPMatrix:
 
     def to_mpmatrix(self) -> MPMatrix:
         dense = self.to_dense()
-        return MPMatrix.from_dense(dense, self.cls.arr, self.tile)
+        return MPMatrix.from_dense(dense, self.cls.arr, self.tile, self.fset)
 
     def storage_bytes(self) -> int:
-        return (self.tiles_hi.size * 4 + self.tiles_lo.size * 2
-                + self.tiles_lo8.size)
+        return sum(buf.size * self.fset.bytes_of(code)
+                   for code, buf in enumerate(self.tiles))
 
 
 # ---------------------------------------------------------------------------
@@ -214,48 +263,63 @@ class KSplitWeight:
     """Weight W[K, N] whose precision map is constant along N within each
     K-block.  K-blocks are permuted so classes are contiguous:
 
-        y = x[:, perm_hi] @ w_hi  (fp32 dot, HIGHEST)
-          + x[:, perm_lo] @ w_lo  (bf16 dot)
-          + x[:, perm_lo8] @ w_lo8(bf16 dot after upcast)
+        y = Σ_fmt  x[:, perm_fmt] @ w_fmt   (one dot per format, at that
+                                             format's operational precision)
 
     Exact storage savings, exact HLO FLOPs (one dot per class, K split),
     trivially shardable along N (TP) — see DESIGN.md §3(3).
 
-    ``k_cls`` int8[kt] is the per-K-block class (static).  ``perm`` is the
-    K-index permutation grouping classes (static).  Gradient flows through
+    ``k_cls`` int8[kt] is the per-K-block class code (static).  ``bufs``
+    holds one ``[K_code, N]`` buffer per format code.  Gradient flows through
     all buffers (they are leaves).
     """
 
-    w_hi: jax.Array    # f32[K_hi, N]
-    w_lo: jax.Array    # bf16[K_lo, N]
-    w_lo8: jax.Array   # f8[K_lo8, N]
-    k_cls: _HashableMap   # int8[kt]
+    bufs: tuple[jax.Array, ...]   # per format code: storage_dtype[K_code, N]
+    k_cls: _HashableMap           # int8[kt]
     tile: int
-    shape: tuple[int, int]    # logical (K, N)
+    shape: tuple[int, int]        # logical (K, N)
+    fset: FormatSet = DEFAULT_FORMATS
 
     def tree_flatten(self):
-        return ((self.w_hi, self.w_lo, self.w_lo8),
-                (self.k_cls, self.tile, self.shape))
+        return (tuple(self.bufs), (self.k_cls, self.tile, self.shape,
+                                   self.fset))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(tuple(children), *aux)
+
+    # -- role views (legacy accessors) --------------------------------------
+    @property
+    def w_hi(self) -> jax.Array:
+        return self.bufs[self.fset.high]
+
+    @property
+    def w_lo(self) -> jax.Array:
+        return self.bufs[self.fset.low]
+
+    @property
+    def w_lo8(self) -> jax.Array:
+        if self.fset.low8 is None:
+            return jnp.zeros((0, self.shape[1]), jnp.float8_e4m3fn)
+        return self.bufs[self.fset.low8]
 
     # static helpers ---------------------------------------------------------
     @staticmethod
-    def k_partition(k_cls: np.ndarray, tile: int):
-        """Return (idx_hi, idx_lo, idx_lo8): K-row indices per class."""
+    def k_partition(k_cls: np.ndarray, tile: int,
+                    fset: FormatSet = DEFAULT_FORMATS):
+        """K-row indices per class in storage order (descending code, i.e.
+        most-expensive format first — (hi, lo[, lo8]) for the default set)."""
         out = []
-        for c in (int(PrecClass.HIGH), int(PrecClass.LOW), int(PrecClass.LOW8)):
-            blocks = np.nonzero(k_cls == c)[0]
+        for code in fset.class_order:
+            blocks = np.nonzero(np.asarray(k_cls) == code)[0]
             rows = (blocks[:, None] * tile + np.arange(tile)[None, :]).reshape(-1)
             out.append(rows.astype(np.int32))
         return tuple(out)
 
     @classmethod
-    def from_dense(cls, w: jax.Array, k_cls: np.ndarray, tile: int
-                   ) -> "KSplitWeight":
-        k_cls = np.asarray(k_cls, np.int8)
+    def from_dense(cls, w: jax.Array, k_cls: np.ndarray, tile: int,
+                   fset: FormatSet = DEFAULT_FORMATS) -> "KSplitWeight":
+        k_cls = _check_codes(np.asarray(k_cls, np.int8), fset)
         kt = k_cls.shape[0]
         k, n = w.shape
         if k != kt * tile:
@@ -263,116 +327,134 @@ class KSplitWeight:
                 f"K={k} must equal kt*tile={kt}*{tile} (choose a tile that "
                 "divides K; padding K would desync with activations)")
         wp = w.astype(jnp.float32)
-        idx_hi, idx_lo, idx_lo8 = cls.k_partition(k_cls, tile)
-        return cls(
-            wp[jnp.asarray(idx_hi)] if len(idx_hi) else jnp.zeros((0, n), jnp.float32),
-            (wp[jnp.asarray(idx_lo)] if len(idx_lo) else jnp.zeros((0, n))
-             ).astype(jnp.bfloat16),
-            (wp[jnp.asarray(idx_lo8)] if len(idx_lo8) else jnp.zeros((0, n))
-             ).astype(jnp.float8_e4m3fn),
-            _HashableMap(k_cls), tile, (k, n))
+        parts = dict(zip(fset.class_order, cls.k_partition(k_cls, tile, fset)))
+        bufs = []
+        for code in fset.codes:
+            idx = parts[code]
+            rows = (wp[jnp.asarray(idx)] if len(idx)
+                    else jnp.zeros((0, n), jnp.float32))
+            bufs.append(rows.astype(fset.storage_dtype(code)))
+        return cls(tuple(bufs), _HashableMap(k_cls), tile, (k, n), fset)
 
     def to_dense(self) -> jax.Array:
         k, n = self.shape
         kt = self.k_cls.arr.shape[0]
         wp = jnp.zeros((kt * self.tile, n), jnp.float32)
-        idx_hi, idx_lo, idx_lo8 = self.k_partition(self.k_cls.arr, self.tile)
-        if len(idx_hi):
-            wp = wp.at[jnp.asarray(idx_hi)].set(self.w_hi.astype(jnp.float32))
-        if len(idx_lo):
-            wp = wp.at[jnp.asarray(idx_lo)].set(self.w_lo.astype(jnp.float32))
-        if len(idx_lo8):
-            wp = wp.at[jnp.asarray(idx_lo8)].set(self.w_lo8.astype(jnp.float32))
+        parts = self.k_partition(self.k_cls.arr, self.tile, self.fset)
+        for code, idx in zip(self.fset.class_order, parts):
+            if len(idx):
+                wp = wp.at[jnp.asarray(idx)].set(
+                    self.bufs[code].astype(jnp.float32))
         return wp[:k, :n]
 
     def storage_bytes(self) -> int:
-        return (self.w_hi.size * 4 + self.w_lo.size * 2 + self.w_lo8.size)
+        return sum(buf.size * self.fset.bytes_of(code)
+                   for code, buf in enumerate(self.bufs))
 
 
 # ---------------------------------------------------------------------------
 # NSplitWeight — class map constant along K, split along N.  Used for
 # row-parallel (TP-sharded-K) matmuls where K must stay contiguous but N is
 # unsharded (DESIGN.md §5): y = concat([x32 @ w_hi, x16 @ w_lo], axis=-1).
-# Class blocks are stored contiguously (hi columns first); for data-driven
-# policies the logical→stored column permutation is folded into the *next*
-# layer's weights at init time (permutation folding — zero runtime cost).
+# Class blocks are stored contiguously (most-expensive format's columns
+# first); for data-driven policies the logical→stored column permutation is
+# folded into the *next* layer's weights at init time (permutation folding —
+# zero runtime cost).
 # ---------------------------------------------------------------------------
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class NSplitWeight:
-    w_hi: jax.Array    # f32[K, N_hi]
-    w_lo: jax.Array    # bf16[K, N_lo]
-    w_lo8: jax.Array   # f8[K, N_lo8]
-    n_cls: _HashableMap   # int8[nt] — class per N-block, in STORED order
+    bufs: tuple[jax.Array, ...]   # per format code: storage_dtype[K, N_code]
+    n_cls: _HashableMap           # int8[nt] — class per N-block, STORED order
     tile: int
-    shape: tuple[int, int]    # logical (K, N)
+    shape: tuple[int, int]        # logical (K, N)
+    fset: FormatSet = DEFAULT_FORMATS
 
     def tree_flatten(self):
-        return ((self.w_hi, self.w_lo, self.w_lo8),
-                (self.n_cls, self.tile, self.shape))
+        return (tuple(self.bufs), (self.n_cls, self.tile, self.shape,
+                                   self.fset))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(tuple(children), *aux)
+
+    @property
+    def w_hi(self) -> jax.Array:
+        return self.bufs[self.fset.high]
+
+    @property
+    def w_lo(self) -> jax.Array:
+        return self.bufs[self.fset.low]
+
+    @property
+    def w_lo8(self) -> jax.Array:
+        if self.fset.low8 is None:
+            return jnp.zeros((self.shape[0], 0), jnp.float8_e4m3fn)
+        return self.bufs[self.fset.low8]
 
     @classmethod
-    def from_dense(cls, w: jax.Array, n_cls: np.ndarray, tile: int
-                   ) -> "NSplitWeight":
-        """``n_cls`` must be class-sorted (HIGH, LOW, LOW8 contiguous); the
-        caller is responsible for any column permutation of ``w``."""
-        n_cls = np.asarray(n_cls, np.int8)
+    def from_dense(cls, w: jax.Array, n_cls: np.ndarray, tile: int,
+                   fset: FormatSet = DEFAULT_FORMATS) -> "NSplitWeight":
+        """``n_cls`` must be class-sorted (descending code: the most
+        expensive format's blocks first); the caller is responsible for any
+        column permutation of ``w``."""
+        n_cls = _check_codes(np.asarray(n_cls, np.int8), fset)
         k, n = w.shape
         if n != n_cls.shape[0] * tile:
             raise ValueError(f"N={n} != nt*tile={n_cls.shape[0]}*{tile}")
-        order = np.argsort(-n_cls, kind="stable")  # HIGH(2), LOW(1), LOW8(0)
+        order = np.argsort(-n_cls, kind="stable")  # descending code
         if not np.array_equal(order, np.arange(len(n_cls))):
             raise ValueError("n_cls must be class-sorted (fold permutations "
                              "into adjacent layers instead)")
         wp = w.astype(jnp.float32)
-        n_hi = int((n_cls == int(PrecClass.HIGH)).sum()) * tile
-        n_lo = int((n_cls == int(PrecClass.LOW)).sum()) * tile
-        return cls(wp[:, :n_hi],
-                   wp[:, n_hi:n_hi + n_lo].astype(jnp.bfloat16),
-                   wp[:, n_hi + n_lo:].astype(jnp.float8_e4m3fn),
-                   _HashableMap(n_cls), tile, (k, n))
+        cols = {code: int((n_cls == code).sum()) * tile
+                for code in fset.codes}
+        bufs = [None] * len(fset)
+        start = 0
+        for code in fset.class_order:
+            stop = start + cols[code]
+            bufs[code] = wp[:, start:stop].astype(fset.storage_dtype(code))
+            start = stop
+        return cls(tuple(bufs), _HashableMap(n_cls), tile, (k, n), fset)
 
     def to_dense(self) -> jax.Array:
         return jnp.concatenate(
-            [self.w_hi, self.w_lo.astype(jnp.float32),
-             self.w_lo8.astype(jnp.float32)], axis=1)
+            [self.bufs[code].astype(jnp.float32)
+             for code in self.fset.class_order], axis=1)
 
     def storage_bytes(self) -> int:
-        return self.w_hi.size * 4 + self.w_lo.size * 2 + self.w_lo8.size
+        return sum(buf.size * self.fset.bytes_of(code)
+                   for code, buf in enumerate(self.bufs))
 
 
-#: reduce LOW-class row-parallel partial sums in bf16 over the ICI — the
-#: class's reduction precision follows its storage precision (receiver-side
-#: conversion extended to the TP collective; EXPERIMENTS.md §Perf).  HIGH
-#: partials always reduce in fp32.
+#: reduce LOW-class row-parallel partial sums in the class's compute dtype
+#: over the ICI — the class's reduction precision follows its storage
+#: precision (receiver-side conversion extended to the TP collective;
+#: EXPERIMENTS.md §Perf).  HIGH partials always reduce in fp32.
 REDUCE_LOW_IN_BF16 = True
 
 
 def nsplit_matmul(x: jax.Array, w: NSplitWeight) -> jax.Array:
     """y = x @ W, per-N-block operational precision, fp32 accumulation
-    within a shard (the MXU accumulator); LOW-class cross-shard reduction
-    optionally in bf16 (see REDUCE_LOW_IN_BF16)."""
+    within a shard (the MXU accumulator); non-HIGH cross-shard reduction
+    optionally in the class compute dtype (see REDUCE_LOW_IN_BF16)."""
     dims = (((x.ndim - 1,), (0,)), ((), ()))
-    low_dt = jnp.bfloat16 if REDUCE_LOW_IN_BF16 else jnp.float32
+    fset = w.fset
     parts = []
-    if w.w_hi.shape[1]:
+    for code in fset.class_order:
+        buf = w.bufs[code]
+        if not buf.shape[1]:
+            continue
+        fmt = fset.fmt(code)
+        if code == fset.high:
+            red_dt = jnp.float32
+        else:
+            red_dt = fmt.compute_dtype if REDUCE_LOW_IN_BF16 else jnp.float32
         parts.append(jax.lax.dot_general(
-            x.astype(jnp.float32), w.w_hi, dims,
-            precision=jax.lax.Precision.HIGHEST,
-            preferred_element_type=jnp.float32))
-    if w.w_lo.shape[1]:
-        parts.append(jax.lax.dot_general(
-            x.astype(jnp.bfloat16), w.w_lo, dims,
-            preferred_element_type=low_dt).astype(jnp.float32))
-    if w.w_lo8.shape[1]:
-        parts.append(jax.lax.dot_general(
-            x.astype(jnp.bfloat16), w.w_lo8.astype(jnp.bfloat16), dims,
-            preferred_element_type=low_dt).astype(jnp.float32))
+            x.astype(fmt.compute_dtype), buf.astype(fmt.compute_dtype), dims,
+            precision=fmt.dot_precision,
+            preferred_element_type=red_dt).astype(jnp.float32))
     return jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
 
 
@@ -391,24 +473,19 @@ def ksplit_matmul(x: jax.Array, w: KSplitWeight) -> jax.Array:
     that class's operational precision right before the dot (the TPU-register
     analogue of the paper's receiver-side conversion); accumulation fp32.
     """
-    idx_hi, idx_lo, idx_lo8 = KSplitWeight.k_partition(w.k_cls.arr, w.tile)
+    fset = w.fset
+    parts_idx = w.k_partition(w.k_cls.arr, w.tile, fset)
     k, n = w.shape
     parts = []
-    if len(idx_hi):
-        x_hi = _take_k(x, idx_hi).astype(jnp.float32)
+    for code, idx in zip(fset.class_order, parts_idx):
+        if not len(idx):
+            continue
+        fmt = fset.fmt(code)
+        x_c = _take_k(x, idx).astype(fmt.compute_dtype)
         parts.append(jax.lax.dot_general(
-            x_hi, w.w_hi, (((x.ndim - 1,), (0,)), ((), ())),
-            precision=jax.lax.Precision.HIGHEST,
-            preferred_element_type=jnp.float32))
-    if len(idx_lo):
-        x_lo = _take_k(x, idx_lo).astype(jnp.bfloat16)
-        parts.append(jax.lax.dot_general(
-            x_lo, w.w_lo, (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32))
-    if len(idx_lo8):
-        x_8 = _take_k(x, idx_lo8).astype(jnp.bfloat16)
-        parts.append(jax.lax.dot_general(
-            x_8, w.w_lo8.astype(jnp.bfloat16), (((x.ndim - 1,), (0,)), ((), ())),
+            x_c, w.bufs[code].astype(fmt.compute_dtype),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            precision=fmt.dot_precision,
             preferred_element_type=jnp.float32))
     if not parts:
         return jnp.zeros(x.shape[:-1] + (n,), jnp.float32)

@@ -24,9 +24,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision as P
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
 from repro.core.layout import (KSplitWeight, NSplitWeight, ksplit_matmul,
                                nsplit_matmul)
-from repro.core.precision import Policy, PrecClass
+from repro.core.precision import Policy, role_class_vector
 
 _TILE_PREFS = (128, 64, 32, 16, 8, 4, 2, 1)
 
@@ -41,32 +42,34 @@ def choose_tile(dim: int, prefer: int = 128) -> int:
 
 
 def split_cls(nblocks: int, policy: Policy,
-              block_norms: np.ndarray | None = None) -> np.ndarray:
+              block_norms: np.ndarray | None = None,
+              fset: FormatSet = DEFAULT_FORMATS) -> np.ndarray:
     """Per-block class vector.  Ratio policies are class-sorted (HIGH first);
     norm_topk marks the largest-norm blocks HIGH in place."""
     if policy.kind in ("uniform_high",):
-        return np.full(nblocks, int(PrecClass.HIGH), np.int8)
+        return np.full(nblocks, fset.high, np.int8)
     if policy.kind in ("uniform_low",):
-        return np.full(nblocks, int(PrecClass.LOW), np.int8)
+        return np.full(nblocks, fset.low, np.int8)
     if policy.kind in ("uniform_low8",):
-        return np.full(nblocks, int(PrecClass.LOW8), np.int8)
+        if fset.low8 is None:
+            raise ValueError(f"format set {fset.names} has no low8 role")
+        return np.full(nblocks, fset.low8, np.int8)
     n_hi = int(round(policy.ratio_high * nblocks))
     n_lo8 = int(round(policy.ratio_low8 * nblocks))
+    if n_lo8 and fset.low8 is None:
+        raise ValueError(f"format set {fset.names} has no low8 role")
     n_lo = nblocks - n_hi - n_lo8
     assert n_lo >= 0, (policy, nblocks)
     if policy.kind == "ratio":
-        return np.concatenate([
-            np.full(n_hi, int(PrecClass.HIGH), np.int8),
-            np.full(n_lo, int(PrecClass.LOW), np.int8),
-            np.full(n_lo8, int(PrecClass.LOW8), np.int8)])
+        return role_class_vector(n_hi, n_lo, n_lo8, fset)
     if policy.kind == "norm_topk":
         if block_norms is None:
             raise ValueError("norm_topk needs block norms")
-        cls = np.full(nblocks, int(PrecClass.LOW), np.int8)
+        cls = np.full(nblocks, fset.low, np.int8)
         order = np.argsort(-block_norms)
-        cls[order[:n_hi]] = int(PrecClass.HIGH)
+        cls[order[:n_hi]] = fset.high
         if n_lo8:
-            cls[order[-n_lo8:]] = int(PrecClass.LOW8)
+            cls[order[-n_lo8:]] = fset.low8
         return cls
     raise ValueError(f"unsupported policy kind {policy.kind!r}")
 
@@ -120,18 +123,20 @@ class MPLinear:
 def init_mp_linear(key: jax.Array, in_dim: int, out_dim: int,
                    policy: Policy | None, *, split: str = "ksplit",
                    tile: int | None = None, use_bias: bool = False,
-                   scale: float | None = None) -> MPLinear:
+                   scale: float | None = None,
+                   fset: FormatSet = DEFAULT_FORMATS) -> MPLinear:
     """Initialize an MPLinear.  ``split`` ∈ {ksplit, nsplit, dense}.
 
-    ``policy=None`` or split='dense' → plain bf16 weight (the pure-LOW
+    ``policy=None`` or split='dense' → plain low-format weight (the pure-LOW
     endpoint, no tile machinery — used as the memory-optimal default for
-    matrices the policy does not cover).
+    matrices the policy does not cover).  ``fset`` picks which registered
+    formats play the D/S/Q roles.
     """
     scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
     w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
     b = jnp.zeros((out_dim,), jnp.float32) if use_bias else None
     if policy is None or split == "dense" or policy.kind == "uniform_low":
-        return MPLinear(w.astype(jnp.bfloat16), b)
+        return MPLinear(w.astype(fset.storage_dtype(fset.low)), b)
     if split == "ksplit":
         t = tile or choose_tile(in_dim)
         kt = in_dim // t
@@ -139,8 +144,8 @@ def init_mp_linear(key: jax.Array, in_dim: int, out_dim: int,
         if policy.kind == "norm_topk":
             norms = np.asarray(jnp.linalg.norm(
                 w.reshape(kt, t, out_dim), axis=(1, 2)))
-        cls = split_cls(kt, policy, norms)
-        return MPLinear(KSplitWeight.from_dense(w, cls, t), b)
+        cls = split_cls(kt, policy, norms, fset)
+        return MPLinear(KSplitWeight.from_dense(w, cls, t, fset), b)
     if split == "nsplit":
         t = tile or choose_tile(out_dim)
         nt = out_dim // t
@@ -148,26 +153,28 @@ def init_mp_linear(key: jax.Array, in_dim: int, out_dim: int,
             # sort columns by norm, fold the permutation into storage order.
             norms = np.asarray(jnp.linalg.norm(
                 w.reshape(in_dim, nt, t), axis=(0, 2)))
-            cls = split_cls(nt, policy, norms)
+            cls = split_cls(nt, policy, norms, fset)
             order = np.argsort(-cls, kind="stable")
             colperm = (order[:, None] * t + np.arange(t)[None, :]).reshape(-1)
             w = w[:, jnp.asarray(colperm)]
             cls = cls[order]
         else:
-            cls = split_cls(nt, policy)
-        return MPLinear(NSplitWeight.from_dense(w, cls, t), b)
+            cls = split_cls(nt, policy, fset=fset)
+        return MPLinear(NSplitWeight.from_dense(w, cls, t, fset), b)
     raise ValueError(f"unknown split {split!r}")
 
 
-def mp_linear_flops(m_tokens: int, lin: MPLinear) -> dict:
+def mp_linear_flops(m_tokens: int, lin: MPLinear,
+                    device_kind: str = "tpu-v5e") -> dict:
     """Model + MXU-weighted FLOPs for one application over m_tokens rows."""
     k, n = lin.shape
     base = 2 * m_tokens * k * n
-    if isinstance(lin.w, KSplitWeight):
-        cls = lin.w.k_cls.arr
-    elif isinstance(lin.w, NSplitWeight):
-        cls = lin.w.n_cls.arr
+    if isinstance(lin.w, (KSplitWeight, NSplitWeight)):
+        fset = lin.w.fset
+        cls = (lin.w.k_cls.arr if isinstance(lin.w, KSplitWeight)
+               else lin.w.n_cls.arr)
     else:
-        cls = np.full(1, int(PrecClass.LOW), np.int8)
-    wts = np.array([P.CLASS_MXU_COST[int(c)] for c in cls])
+        fset = DEFAULT_FORMATS
+        cls = np.full(1, fset.low, np.int8)
+    wts = np.array([fset.fmt(int(c)).cost_on(device_kind) for c in cls])
     return {"model_flops": base, "mxu_flops": base * float(wts.mean())}

@@ -12,8 +12,9 @@ and are converted to the task's precision at the consumer).  Accumulation is
 always fp32 (the paper's SGEMM accumulates in fp32 registers; TPU MXU
 accumulates fp32 natively).
 
-Operational dtype per class:  HIGH → fp32 dot at Precision.HIGHEST
-                              LOW/LOW8 → bf16 dot (MXU native)
+The operational dtype / dot precision / storage rounding of each class come
+from the operands' :class:`~repro.core.formats.FormatSet` — there is no
+parallel dtype table here.
 """
 from __future__ import annotations
 
@@ -21,24 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
 from repro.core.layout import MPMatrix
-from repro.core.precision import PrecClass
-
-_OP_DTYPE = {
-    int(PrecClass.HIGH): jnp.float32,
-    int(PrecClass.LOW): jnp.bfloat16,
-    int(PrecClass.LOW8): jnp.bfloat16,
-}
-_OP_PREC = {
-    int(PrecClass.HIGH): jax.lax.Precision.HIGHEST,
-    int(PrecClass.LOW): jax.lax.Precision.DEFAULT,
-    int(PrecClass.LOW8): jax.lax.Precision.DEFAULT,
-}
 
 
 def _storage_dense(m: MPMatrix) -> jax.Array:
     """Padded dense fp32 view with per-tile storage rounding applied."""
-    return (m.hi + m.lo.astype(jnp.float32) + m.lo8.astype(jnp.float32))
+    return m.padded_dense()
 
 
 def _expand(cls_map: np.ndarray, tile: int) -> np.ndarray:
@@ -52,13 +42,16 @@ def mp_gemm_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
     not the performance path (classes × MNK flops)."""
     ad, bd = _storage_dense(a), _storage_dense(b)
     cd = _storage_dense(c)
+    fset = c.fset
     classes = sorted({int(v) for v in np.unique(c.cls.arr)})
     per_class = {}
     for cc in classes:
-        op = _OP_DTYPE[cc]
+        fmt = fset.fmt(cc)
+        op = fmt.compute_dtype
         acc = jax.lax.dot_general(
             ad.astype(op), bd.astype(op), (((1,), (0,)), ((), ())),
-            precision=_OP_PREC[cc], preferred_element_type=jnp.float32)
+            precision=fmt.dot_precision,
+            preferred_element_type=jnp.float32)
         per_class[cc] = alpha * acc + beta * cd
     sel = jnp.asarray(_expand(c.cls.arr, c.tile))
     out = jnp.zeros_like(cd)
@@ -66,7 +59,7 @@ def mp_gemm_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
         out = jnp.where(sel == cc, per_class[cc], out)
     # store back in C's per-tile precision
     return MPMatrix.from_dense(
-        out[: c.shape[0], : c.shape[1]], c.cls.arr, c.tile)
+        out[: c.shape[0], : c.shape[1]], c.cls.arr, c.tile, fset)
 
 
 def mp_gemm_tilewise_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
@@ -74,6 +67,7 @@ def mp_gemm_tilewise_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
     """Slow literal per-tile loop (Algorithm 1 verbatim) in numpy/jnp, used
     to validate mp_gemm_ref itself in tests.  Returns dense fp32."""
     t = c.tile
+    fset = c.fset
     ad, bd, cd = map(np.asarray, (_storage_dense(a), _storage_dense(b),
                                   _storage_dense(c)))
     mt, kt = a.cls.arr.shape
@@ -82,8 +76,8 @@ def mp_gemm_tilewise_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
     out = np.zeros_like(cd)
     for i in range(mt):
         for j in range(nt):
-            cc = int(c.cls.arr[i, j])
-            op = _OP_DTYPE[cc]
+            fmt = fset.fmt(int(c.cls.arr[i, j]))
+            op = fmt.compute_dtype
             acc = np.zeros((t, t), np.float32)
             for l in range(kt):
                 at = ad[i * t:(i + 1) * t, l * t:(l + 1) * t]
@@ -94,11 +88,8 @@ def mp_gemm_tilewise_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
                 acc += at_op @ bt_op
             upd = alpha * acc + beta * cd[i * t:(i + 1) * t, j * t:(j + 1) * t]
             # storage rounding of the C tile
-            sd = {int(PrecClass.HIGH): jnp.float32,
-                  int(PrecClass.LOW): jnp.bfloat16,
-                  int(PrecClass.LOW8): jnp.float8_e4m3fn}[cc]
             out[i * t:(i + 1) * t, j * t:(j + 1) * t] = np.asarray(
-                jnp.asarray(upd).astype(sd).astype(jnp.float32))
+                fmt.quantize(jnp.asarray(upd)))
     return jnp.asarray(out[: c.shape[0], : c.shape[1]])
 
 
@@ -107,10 +98,12 @@ def model_flops(m: int, n: int, k: int) -> int:
     return 2 * m * n * k
 
 
-def mxu_weighted_flops(c_cls: np.ndarray, m: int, n: int, k: int) -> float:
+def mxu_weighted_flops(c_cls: np.ndarray, m: int, n: int, k: int,
+                       fset: FormatSet = DEFAULT_FORMATS,
+                       device_kind: str = "tpu-v5e") -> float:
     """FLOPs weighted by MXU pass count per C-tile class — the quantity a
-    real v5e must execute (HIGH = 3 bf16 passes)."""
-    from repro.core.precision import CLASS_MXU_COST
+    real accelerator must execute (HIGH = 3 bf16 passes on v5e)."""
     total = c_cls.size
-    w = sum(CLASS_MXU_COST[int(v)] for v in c_cls.reshape(-1)) / total
+    w = sum(fset.fmt(int(v)).cost_on(device_kind)
+            for v in c_cls.reshape(-1)) / total
     return 2.0 * m * n * k * w

@@ -1,13 +1,18 @@
 """Precision classes, tile maps, and precision-selection policies.
 
 The paper expresses mixed precision as per-tile FP64/FP32 ("aD:bS") maps.  On
-TPU the native pair is fp32 (HIGH) / bf16 (LOW); we additionally support an
-fp8 storage class (LOW8) as a beyond-paper extension (paper §6 future work:
-"incorporating additional precision formats").
+TPU the native pair is fp32 (D) / bf16 (S); additional storage formats (fp8
+e4m3/e5m2, fp16 — paper §6 future work: "incorporating additional precision
+formats") come from the extensible registry in ``core.formats``.
 
-A *tile map* is an int8 array of shape (mt, nt) whose entries are members of
-``PrecClass``.  Policies generate maps; ``core.schedule`` re-balances them for
-static SPMD load balance.
+A *tile map* is an int8 array of shape (mt, nt) whose entries are class codes
+into an active :class:`~repro.core.formats.FormatSet` (default
+``fp8_e4m3+bf16+fp32``, i.e. the historical LOW8=0 / LOW=1 / HIGH=2).
+Policies generate maps; ``core.schedule`` re-balances them for static SPMD
+load balance.
+
+``PrecClass`` and the ``CLASS_*`` tables are retained as deprecation aliases
+over the default format set — new code should consult the registry.
 """
 from __future__ import annotations
 
@@ -19,47 +24,54 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import (DEFAULT_FORMATS, FormatSet, PrecisionFormat,
+                                format_set, get_format, register_format,
+                                registered_formats)
+
+__all__ = [
+    "PrecClass", "Policy", "PAPER_RATIOS", "make_map", "map_ratio_string",
+    "map_storage_bytes", "quantize_tile", "tile_grid", "class_dtype",
+    "CLASS_DTYPE", "CLASS_BYTES", "CLASS_MXU_COST", "CLASS_DOT_PRECISION",
+    "DEFAULT_FORMATS", "FormatSet", "PrecisionFormat", "format_set",
+    "get_format", "register_format", "registered_formats",
+]
+
 
 class PrecClass(enum.IntEnum):
-    """Precision class of a tile.  Order = ascending storage cost."""
+    """DEPRECATED alias — class codes of the default format set.
 
-    LOW8 = 0   # fp8 e4m3 storage, bf16 compute (beyond-paper extension)
+    Kept so existing call sites (and persisted maps) keep working; the codes
+    are the indices of ``DEFAULT_FORMATS`` (ascending storage cost).
+    """
+
+    LOW8 = 0   # fp8 e4m3 storage, bf16 compute
     LOW = 1    # bf16 storage + MXU-native compute      (paper's "S")
     HIGH = 2   # fp32 storage + 3-pass MXU compute       (paper's "D")
 
 
-#: storage dtype per class
-CLASS_DTYPE: Mapping[int, jnp.dtype] = {
-    int(PrecClass.LOW8): jnp.float8_e4m3fn,
-    int(PrecClass.LOW): jnp.bfloat16,
-    int(PrecClass.HIGH): jnp.float32,
-}
-
-#: bytes per element per class
-CLASS_BYTES: Mapping[int, int] = {
-    int(PrecClass.LOW8): 1,
-    int(PrecClass.LOW): 2,
-    int(PrecClass.HIGH): 4,
-}
-
-#: relative MXU cost of a tile matmul task in this class (v5e pass counts).
-#: HIGH is fp32 = bf16x3 (3 passes); LOW8 upcasts to bf16 on v5e (1 pass).
-CLASS_MXU_COST: Mapping[int, float] = {
-    int(PrecClass.LOW8): 1.0,
-    int(PrecClass.LOW): 1.0,
-    int(PrecClass.HIGH): 3.0,
-}
-
-#: jax.lax dot precision used for the *operational* precision of a class.
-CLASS_DOT_PRECISION: Mapping[int, jax.lax.Precision] = {
-    int(PrecClass.LOW8): jax.lax.Precision.DEFAULT,
-    int(PrecClass.LOW): jax.lax.Precision.DEFAULT,
-    int(PrecClass.HIGH): jax.lax.Precision.HIGHEST,
-}
+def _default_table(field: Callable[[PrecisionFormat], object]
+                   ) -> Mapping[int, object]:
+    return {c: field(DEFAULT_FORMATS.fmt(c)) for c in DEFAULT_FORMATS.codes}
 
 
-def class_dtype(cls: int) -> jnp.dtype:
-    return CLASS_DTYPE[int(cls)]
+#: DEPRECATED — storage dtype per default-set class; use the registry.
+CLASS_DTYPE: Mapping[int, jnp.dtype] = _default_table(
+    lambda f: f.storage_dtype)
+
+#: DEPRECATED — bytes per element per default-set class; use the registry.
+CLASS_BYTES: Mapping[int, int] = _default_table(lambda f: f.bytes_per_elem)
+
+#: DEPRECATED — relative MXU pass cost on TPU (v5e) per default-set class.
+CLASS_MXU_COST: Mapping[int, float] = _default_table(
+    lambda f: f.cost_on("tpu-v5e"))
+
+#: DEPRECATED — jax.lax dot precision per default-set class.
+CLASS_DOT_PRECISION: Mapping[int, jax.lax.Precision] = _default_table(
+    lambda f: f.dot_precision)
+
+
+def class_dtype(cls: int, fset: FormatSet = DEFAULT_FORMATS) -> jnp.dtype:
+    return fset.fmt(int(cls)).storage_dtype
 
 
 def tile_grid(shape: tuple[int, int], tile: int) -> tuple[int, int]:
@@ -69,27 +81,55 @@ def tile_grid(shape: tuple[int, int], tile: int) -> tuple[int, int]:
     return (-(-m // tile), -(-n // tile))
 
 
-def map_storage_bytes(cls_map: np.ndarray, tile: int) -> int:
-    """Exact storage bytes of a tile-heterogeneous matrix (paper's saving)."""
-    counts = {c: int((cls_map == c).sum()) for c in (0, 1, 2)}
-    return sum(counts[c] * CLASS_BYTES[c] * tile * tile for c in counts)
+def map_storage_bytes(cls_map: np.ndarray, tile: int,
+                      fset: FormatSet = DEFAULT_FORMATS) -> int:
+    """Exact storage bytes of a tile-heterogeneous matrix (paper's saving).
+
+    The class set is derived from the map itself; a code outside the active
+    format set raises instead of silently dropping those tiles from the
+    accounting.
+    """
+    cls_map = np.asarray(cls_map)
+    classes = [int(c) for c in np.unique(cls_map)]
+    bad = [c for c in classes if not 0 <= c < len(fset)]
+    if bad:
+        raise ValueError(
+            f"class codes {bad} outside format set {fset.names}")
+    return sum(int((cls_map == c).sum()) * fset.bytes_of(c) * tile * tile
+               for c in classes)
 
 
-def map_ratio_string(cls_map: np.ndarray) -> str:
-    """Paper notation 'aD:bS' (HIGH:LOW[+LOW8]) as percentages."""
+def _largest_remainder_percent(counts: list[int], total: int) -> list[int]:
+    """Integer percentages that sum to exactly 100 (largest-remainder
+    apportionment — plain per-component round() can produce 99/101 splits
+    for small grids)."""
+    exact = [100.0 * c / total for c in counts]
+    floors = [int(f) for f in exact]
+    short = 100 - sum(floors)
+    order = sorted(range(len(counts)), key=lambda i: exact[i] - floors[i],
+                   reverse=True)
+    for i in order[:short]:
+        floors[i] += 1
+    return floors
+
+
+def map_ratio_string(cls_map: np.ndarray,
+                     fset: FormatSet = DEFAULT_FORMATS) -> str:
+    """Paper notation 'aD:bS[:cQ]' as percentages (always summing to 100)."""
+    cls_map = np.asarray(cls_map)
     total = cls_map.size
-    hi = int((cls_map == int(PrecClass.HIGH)).sum())
-    lo8 = int((cls_map == int(PrecClass.LOW8)).sum())
-    a = round(100.0 * hi / total)
-    c = round(100.0 * lo8 / total)
-    b = 100 - a - c
-    if c:
+    hi = int((cls_map == fset.high).sum())
+    lo8 = int((cls_map == fset.low8).sum()) if fset.low8 is not None else 0
+    lo = total - hi - lo8
+    a, b, c = _largest_remainder_percent([hi, lo, lo8], total)
+    if c or lo8:
         return f"{a}D:{b}S:{c}Q"
     return f"{a}D:{b}S"
 
 
 # ---------------------------------------------------------------------------
-# Policies — map generators.  Each policy returns int8[mt, nt].
+# Policies — map generators.  Each policy returns int8[mt, nt] of class codes
+# into the active FormatSet.
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +146,9 @@ class Policy:
                            selection", implemented here).
       * ``outlier_aware`` — K-blocks whose max |w| exceeds
                            ``outlier_sigma``·std become HIGH (LLM.int8-style).
+
+    Ratios are *role* fractions (D/S/Q); which concrete formats play the
+    roles is the FormatSet passed to ``make_map``/``split_cls``.
     """
 
     kind: str = "ratio"
@@ -122,26 +165,43 @@ class Policy:
         return self.kind
 
 
-def _ratio_map(mt: int, nt: int, p: Policy) -> np.ndarray:
+def _role_counts(n: int, p: Policy, fset: FormatSet) -> tuple[int, int, int]:
+    n_hi = int(round(p.ratio_high * n))
+    n_lo8 = int(round(p.ratio_low8 * n))
+    if n_lo8 and fset.low8 is None:
+        raise ValueError(
+            f"policy {p} requests a Q fraction but format set {fset.names} "
+            "has no low8 role")
+    n_lo = n - n_hi - n_lo8
+    assert n_lo >= 0, f"ratio_high + ratio_low8 > 1 ({p})"
+    return n_hi, n_lo, n_lo8
+
+
+def role_class_vector(n_hi: int, n_lo: int, n_lo8: int,
+                      fset: FormatSet = DEFAULT_FORMATS) -> np.ndarray:
+    """Class-code vector with the given role counts, HIGH block first
+    (callers shuffle/reshape as needed)."""
+    if n_lo8 and fset.low8 is None:
+        raise ValueError(f"format set {fset.names} has no low8 role")
+    return np.concatenate([
+        np.full(n_hi, fset.high, np.int8),
+        np.full(n_lo, fset.low, np.int8),
+        np.full(n_lo8, fset.low8 if n_lo8 else 0, np.int8),
+    ])
+
+
+def _ratio_map(mt: int, nt: int, p: Policy, fset: FormatSet) -> np.ndarray:
     """Random map with an *exact* class ratio (paper randomizes per tile; we
     draw a random permutation of an exact-count class vector so the global
     ratio is exact — matters for reproducible storage accounting)."""
-    n = mt * nt
-    n_hi = int(round(p.ratio_high * n))
-    n_lo8 = int(round(p.ratio_low8 * n))
-    n_lo = n - n_hi - n_lo8
-    assert n_lo >= 0, f"ratio_high + ratio_low8 > 1 ({p})"
-    flat = np.concatenate([
-        np.full(n_hi, int(PrecClass.HIGH), np.int8),
-        np.full(n_lo, int(PrecClass.LOW), np.int8),
-        np.full(n_lo8, int(PrecClass.LOW8), np.int8),
-    ])
+    flat = role_class_vector(*_role_counts(mt * nt, p, fset), fset)
     rng = np.random.default_rng(p.seed)
     rng.shuffle(flat)
     return flat.reshape(mt, nt)
 
 
-def _norm_topk_map(w: np.ndarray, tile: int, p: Policy) -> np.ndarray:
+def _norm_topk_map(w: np.ndarray, tile: int, p: Policy,
+                   fset: FormatSet) -> np.ndarray:
     mt, nt = tile_grid(w.shape, tile)
     m, n = mt * tile, nt * tile
     wp = np.zeros((m, n), w.dtype)
@@ -150,19 +210,20 @@ def _norm_topk_map(w: np.ndarray, tile: int, p: Policy) -> np.ndarray:
         wp.reshape(mt, tile, nt, tile).transpose(0, 2, 1, 3), axis=(2, 3)
     )
     k = int(round(p.ratio_high * mt * nt))
-    cls = np.full((mt, nt), int(PrecClass.LOW), np.int8)
+    cls = np.full((mt, nt), fset.low, np.int8)
     if k > 0:
         thresh_idx = np.argsort(norms, axis=None)[::-1][:k]
-        cls.flat[thresh_idx] = int(PrecClass.HIGH)
-    if p.ratio_low8 > 0:
-        k8 = int(round(p.ratio_low8 * mt * nt))
+        cls.flat[thresh_idx] = fset.high
+    k8 = _role_counts(mt * nt, p, fset)[2]
+    if k8:
         lo_idx = np.argsort(norms, axis=None)[:k8]
-        keep = cls.flat[lo_idx] == int(PrecClass.LOW)
-        cls.flat[lo_idx[keep]] = int(PrecClass.LOW8)
+        keep = cls.flat[lo_idx] == fset.low
+        cls.flat[lo_idx[keep]] = fset.low8
     return cls
 
 
-def _outlier_map(w: np.ndarray, tile: int, p: Policy) -> np.ndarray:
+def _outlier_map(w: np.ndarray, tile: int, p: Policy,
+                 fset: FormatSet) -> np.ndarray:
     mt, nt = tile_grid(w.shape, tile)
     m, n = mt * tile, nt * tile
     wp = np.zeros((m, n), np.float32)
@@ -171,7 +232,7 @@ def _outlier_map(w: np.ndarray, tile: int, p: Policy) -> np.ndarray:
     amax = np.abs(tiles).max(axis=(2, 3))
     sigma = wp.std() + 1e-12
     cls = np.where(amax > p.outlier_sigma * sigma,
-                   int(PrecClass.HIGH), int(PrecClass.LOW)).astype(np.int8)
+                   fset.high, fset.low).astype(np.int8)
     return cls
 
 
@@ -180,32 +241,36 @@ def make_map(
     tile: int,
     policy: Policy,
     weights: np.ndarray | None = None,
+    fset: FormatSet = DEFAULT_FORMATS,
 ) -> np.ndarray:
-    """Generate an int8[mt, nt] class map for a matrix of ``shape``."""
+    """Generate an int8[mt, nt] class-code map for a matrix of ``shape``."""
     mt, nt = tile_grid(shape, tile)
     if policy.kind == "uniform_high":
-        return np.full((mt, nt), int(PrecClass.HIGH), np.int8)
+        return np.full((mt, nt), fset.high, np.int8)
     if policy.kind == "uniform_low":
-        return np.full((mt, nt), int(PrecClass.LOW), np.int8)
+        return np.full((mt, nt), fset.low, np.int8)
     if policy.kind == "uniform_low8":
-        return np.full((mt, nt), int(PrecClass.LOW8), np.int8)
+        if fset.low8 is None:
+            raise ValueError(f"format set {fset.names} has no low8 role")
+        return np.full((mt, nt), fset.low8, np.int8)
     if policy.kind == "ratio":
-        return _ratio_map(mt, nt, policy)
+        return _ratio_map(mt, nt, policy, fset)
     if policy.kind == "norm_topk":
         if weights is None:
             raise ValueError("norm_topk policy needs weights")
-        return _norm_topk_map(np.asarray(weights), tile, policy)
+        return _norm_topk_map(np.asarray(weights), tile, policy, fset)
     if policy.kind == "outlier_aware":
         if weights is None:
             raise ValueError("outlier_aware policy needs weights")
-        return _outlier_map(np.asarray(weights), tile, policy)
+        return _outlier_map(np.asarray(weights), tile, policy, fset)
     raise ValueError(f"unknown policy kind {policy.kind!r}")
 
 
-def quantize_tile(x: jax.Array, cls: int) -> jax.Array:
+def quantize_tile(x: jax.Array, cls: int,
+                  fset: FormatSet = DEFAULT_FORMATS) -> jax.Array:
     """Round-trip a tile through its storage precision (receiver-side
     conversion produces exactly this value at the consumer)."""
-    return x.astype(class_dtype(cls)).astype(jnp.float32)
+    return fset.fmt(int(cls)).quantize(x)
 
 
 # Convenience named policies matching the paper's sweep (Figs. 2-4).

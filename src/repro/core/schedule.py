@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.precision import CLASS_MXU_COST, Policy, PrecClass
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
+from repro.core.precision import Policy, role_class_vector
 
 
 def _policy_ratios(policy: Policy) -> tuple[float, float]:
@@ -42,7 +43,8 @@ def _exact_counts(n: int, ratio_high: float, ratio_low8: float = 0.0
 
 
 def balanced_ratio_map(mt: int, nt: int, policy: Policy,
-                       row_groups: int = 1, col_groups: int = 1) -> np.ndarray:
+                       row_groups: int = 1, col_groups: int = 1,
+                       fset: FormatSet = DEFAULT_FORMATS) -> np.ndarray:
     """Random map whose class counts are identical in every
     (mt/row_groups × nt/col_groups) group of tiles."""
     assert mt % row_groups == 0 and nt % col_groups == 0, (
@@ -51,10 +53,7 @@ def balanced_ratio_map(mt: int, nt: int, policy: Policy,
     n_hi, n_lo, n_lo8 = _exact_counts(rg * cg, *_policy_ratios(policy))
     rng = np.random.default_rng(policy.seed)
     out = np.empty((mt, nt), np.int8)
-    base = np.concatenate([
-        np.full(n_hi, int(PrecClass.HIGH), np.int8),
-        np.full(n_lo, int(PrecClass.LOW), np.int8),
-        np.full(n_lo8, int(PrecClass.LOW8), np.int8)])
+    base = role_class_vector(n_hi, n_lo, n_lo8, fset)
     for i in range(row_groups):
         for j in range(col_groups):
             blk = base.copy()
@@ -64,7 +63,8 @@ def balanced_ratio_map(mt: int, nt: int, policy: Policy,
 
 
 def sorted_balanced_map(mt: int, nt: int, policy: Policy, axis: int,
-                        groups: int = 1) -> np.ndarray:
+                        groups: int = 1,
+                        fset: FormatSet = DEFAULT_FORMATS) -> np.ndarray:
     """Balanced map sorted within each panel.
 
     ``axis=0``: within every tile-*column*, HIGH tiles occupy the lowest row
@@ -77,39 +77,39 @@ def sorted_balanced_map(mt: int, nt: int, policy: Policy, axis: int,
     assert panel_len % groups == 0
     seg = panel_len // groups
     n_hi, n_lo, n_lo8 = _exact_counts(seg, *_policy_ratios(policy))
-    col = np.concatenate([
-        np.full(n_hi, int(PrecClass.HIGH), np.int8),
-        np.full(n_lo, int(PrecClass.LOW), np.int8),
-        np.full(n_lo8, int(PrecClass.LOW8), np.int8)])
+    col = role_class_vector(n_hi, n_lo, n_lo8, fset)
     panel = np.tile(col, groups)
     out = np.tile(panel[:, None], (1, n_panels))
     return out if axis == 0 else out.T.copy()
 
 
 def class_counts_per_group(cls_map: np.ndarray, row_groups: int,
-                           col_groups: int) -> np.ndarray:
-    """int[row_groups, col_groups, 3] class histogram per shard group."""
+                           col_groups: int,
+                           fset: FormatSet = DEFAULT_FORMATS) -> np.ndarray:
+    """int[row_groups, col_groups, n_formats] class histogram per group."""
     mt, nt = cls_map.shape
     rg, cg = mt // row_groups, nt // col_groups
-    out = np.zeros((row_groups, col_groups, 3), np.int64)
+    out = np.zeros((row_groups, col_groups, len(fset)), np.int64)
     for i in range(row_groups):
         for j in range(col_groups):
             blk = cls_map[i * rg:(i + 1) * rg, j * cg:(j + 1) * cg]
-            for c in range(3):
+            for c in fset.codes:
                 out[i, j, c] = int((blk == c).sum())
     return out
 
 
-def shard_costs(cls_map: np.ndarray, row_groups: int, col_groups: int
-                ) -> np.ndarray:
+def shard_costs(cls_map: np.ndarray, row_groups: int, col_groups: int,
+                fset: FormatSet = DEFAULT_FORMATS,
+                device_kind: str = "tpu-v5e") -> np.ndarray:
     """Per-shard MXU-pass cost of the tile tasks it owns."""
-    counts = class_counts_per_group(cls_map, row_groups, col_groups)
-    w = np.array([CLASS_MXU_COST[c] for c in range(3)])
+    counts = class_counts_per_group(cls_map, row_groups, col_groups, fset)
+    w = np.array([fset.fmt(c).cost_on(device_kind) for c in fset.codes])
     return (counts * w).sum(-1)
 
 
-def imbalance(cls_map: np.ndarray, row_groups: int, col_groups: int) -> float:
+def imbalance(cls_map: np.ndarray, row_groups: int, col_groups: int,
+              fset: FormatSet = DEFAULT_FORMATS) -> float:
     """max/mean shard cost — 1.0 is perfectly balanced (what PaRSEC's dynamic
     scheduler achieves asymptotically; what our maps achieve statically)."""
-    c = shard_costs(cls_map, row_groups, col_groups)
+    c = shard_costs(cls_map, row_groups, col_groups, fset)
     return float(c.max() / max(c.mean(), 1e-12))

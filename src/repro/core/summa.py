@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as Pspec
 
-from repro.core.precision import PrecClass
+from repro.core.formats import DEFAULT_FORMATS
 
 try:  # jax>=0.6
     from jax import shard_map
@@ -51,7 +51,8 @@ def _panel_owner_steps(K: int, tile: int, P: int, Q: int):
             p_b.astype(np.int32), lb.astype(np.int32))
 
 
-def _check_sorted_balanced(cls_map: np.ndarray, axis: int, groups: int) -> int:
+def _check_sorted_balanced(cls_map: np.ndarray, axis: int, groups: int,
+                           high: int = DEFAULT_FORMATS.high) -> int:
     """Verify the map is sorted-balanced along ``axis`` with ``groups`` shard
     segments; return the HIGH count per segment-panel."""
     m = cls_map if axis == 0 else cls_map.T
@@ -61,8 +62,8 @@ def _check_sorted_balanced(cls_map: np.ndarray, axis: int, groups: int) -> int:
         blk = m[g * seg:(g + 1) * seg]
         for j in range(m.shape[1]):
             col = blk[:, j]
-            hi = int((col == int(PrecClass.HIGH)).sum())
-            if not np.all(col[:hi] == int(PrecClass.HIGH)):
+            hi = int((col == high).sum())
+            if not np.all(col[:hi] == high):
                 raise ValueError("map not class-sorted within panel segment")
             if h is None:
                 h = hi
@@ -74,9 +75,10 @@ def _check_sorted_balanced(cls_map: np.ndarray, axis: int, groups: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("cls_a", "cls_b", "cls_c", "tile", "mesh", "axes",
-                     "alpha", "beta"))
+                     "alpha", "beta", "codes", "low_dt", "low_op"))
 def _summa_impl(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, *, cls_a, cls_b, cls_c,
-                tile, mesh, axes, alpha, beta):
+                tile, mesh, axes, alpha, beta, codes,
+                low_dt="bfloat16", low_op="bfloat16"):
     row_ax, col_ax = axes
     P = mesh.shape[row_ax]
     Q = mesh.shape[col_ax]
@@ -85,13 +87,14 @@ def _summa_impl(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, *, cls_a, cls_b, cls_c,
     T = tile
     mloc, nloc = M // P, N // Q
 
+    HIGH, LOW = codes
     amap, bmap, cmap = cls_a.arr, cls_b.arr, cls_c.arr
-    h_a = _check_sorted_balanced(amap, axis=0, groups=P)   # HIGH tiles/panel/shard
-    h_b = _check_sorted_balanced(bmap, axis=1, groups=Q)
+    h_a = _check_sorted_balanced(amap, axis=0, groups=P, high=HIGH)
+    h_b = _check_sorted_balanced(bmap, axis=1, groups=Q, high=HIGH)
     ha_rows = h_a * T                     # fp32 rows of each local A panel
     hb_cols = h_b * T                     # fp32 cols of each local B panel
     c_classes = sorted(int(v) for v in np.unique(cmap))
-    if int(PrecClass.LOW8) in c_classes:
+    if not set(c_classes) <= {HIGH, LOW}:
         raise NotImplementedError("SUMMA path supports HIGH/LOW C tiles")
 
     steps = _panel_owner_steps(K, T, P, Q)
@@ -128,21 +131,22 @@ def _summa_impl(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, *, cls_a, cls_b, cls_c,
                 [pb_hi, pb_lo.astype(jnp.float32)], axis=1)
             # --- local rank-T update at each C tile's precision ------------
             upd = None
-            if int(PrecClass.HIGH) in c_classes:
+            if HIGH in c_classes:
                 upd_hi = jax.lax.dot_general(
                     a_panel, b_panel, (((1,), (0,)), ((), ())),
                     precision=jax.lax.Precision.HIGHEST,
                     preferred_element_type=jnp.float32)
                 upd = upd_hi
-            if int(PrecClass.LOW) in c_classes:
+            if LOW in c_classes:
+                op = jnp.dtype(low_op)
                 upd_lo = jax.lax.dot_general(
-                    a_panel.astype(jnp.bfloat16), b_panel.astype(jnp.bfloat16),
+                    a_panel.astype(op), b_panel.astype(op),
                     (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)
                 if upd is None:
                     upd = upd_lo
                 else:
-                    upd = jnp.where(sel_c == int(PrecClass.HIGH), upd, upd_lo)
+                    upd = jnp.where(sel_c == HIGH, upd, upd_lo)
             return acc + upd, None
 
         acc0 = jnp.zeros((mloc, nloc), jnp.float32)
@@ -153,9 +157,9 @@ def _summa_impl(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, *, cls_a, cls_b, cls_c,
             acc0 = jax.lax.pcast(acc0, (row_ax, col_ax), to="varying")
         acc, _ = jax.lax.scan(step, acc0, (qa, la, pb, lb))
         out = alpha * acc + beta * (c_hi + c_lo.astype(jnp.float32))
-        hi_mask = sel_c == int(PrecClass.HIGH)
+        hi_mask = sel_c == HIGH
         out_hi = jnp.where(hi_mask, out, 0.0)
-        out_lo = jnp.where(hi_mask, 0.0, out).astype(jnp.bfloat16)
+        out_lo = jnp.where(hi_mask, 0.0, out).astype(jnp.dtype(low_dt))
         return out_hi, out_lo
 
     spec2 = Pspec(row_ax, col_ax)
@@ -177,14 +181,23 @@ def summa_mp_gemm(a, b, c, *, mesh, axes: Sequence[str] = ("row", "col"),
     sorted-balanced (see module docstring).
     """
     from repro.core.layout import MPMatrix
-    if a.lo8.dtype == jnp.float8_e4m3fn and bool((a.cls.arr == 0).any()):
-        raise NotImplementedError("SUMMA path supports HIGH/LOW tiles")
+    fset = a.fset
+    ok = {fset.high, fset.low}
+    for m_ in (a, b):
+        if not {int(v) for v in np.unique(m_.cls.arr)} <= ok:
+            raise NotImplementedError("SUMMA path supports HIGH/LOW tiles")
     out_hi, out_lo = _summa_impl(
         a.hi, a.lo, b.hi, b.lo, c.hi, c.lo,
         cls_a=a.cls, cls_b=b.cls, cls_c=c.cls, tile=a.tile, mesh=mesh,
-        axes=tuple(axes), alpha=alpha, beta=beta)
-    lo8 = jnp.zeros_like(out_hi, jnp.float8_e4m3fn)
-    return MPMatrix(out_hi, out_lo, lo8, c.cls, c.tile, c.shape)
+        axes=tuple(axes), alpha=alpha, beta=beta,
+        codes=(fset.high, fset.low),
+        low_dt=jnp.dtype(fset.storage_dtype(fset.low)).name,
+        low_op=jnp.dtype(fset.fmt(fset.low).compute_dtype).name)
+    bufs = [jnp.zeros(out_hi.shape, fset.storage_dtype(code))
+            for code in fset.codes]
+    bufs[fset.high] = out_hi
+    bufs[fset.low] = out_lo
+    return MPMatrix(tuple(bufs), c.cls, c.tile, c.shape, fset)
 
 
 def summa_collective_bytes(M: int, N: int, K: int, tile: int, P: int, Q: int,

@@ -1,26 +1,26 @@
 """Grouped GEMM over the compact class-sorted layout (CompactMPMatrix).
 
-The paper's runtime schedules two task pools (dgemm / sgemm).  The compact
-layout stores each class's tiles contiguously (`tiles_hi f32[n_hi,t,t]`,
-`tiles_lo bf16[n_lo,t,t]`), so the TPU analogue is one ``pallas_call`` per
-class whose BlockSpec ``index_map`` *gathers* tiles by slot id from scalar-
-prefetched dispatch tables — HBM traffic equals storage bytes for the class
-being computed (MegaBlocks-style grouped GEMM).
+The paper's runtime schedules per-precision task pools (dgemm / sgemm).  The
+compact layout stores each format's tiles contiguously
+(``tiles[code] = storage_dtype[n_code, t, t]``), so the TPU analogue is one
+``pallas_call`` per *output* class whose BlockSpec ``index_map`` *gathers*
+tiles by slot id from scalar-prefetched dispatch tables — HBM traffic equals
+storage bytes for the class being computed (MegaBlocks-style grouped GEMM).
 
 For output tile C(i,j) of class c, the kernel walks k = 0..kt-1 and needs
-A(i,k)·B(k,j) where A/B tiles live in *either* class buffer.  A BlockSpec
-fetch cannot be skipped per-step, so each input class buffer carries one
-trailing **zero tile**; the dispatch table routes a mismatched-class fetch
-to the zero tile and the kernel reconstructs the storage value branch-free
-as ``hi_tile + upcast(lo_tile)`` (one of the two is the zero tile).  Real
-traffic is storage bytes + one redundant zero-tile stream — the honest
-overhead is documented in DESIGN.md §4.
+A(i,k)·B(k,j) where A/B tiles live in *any* of the format buffers.  A
+BlockSpec fetch cannot be skipped per-step, so each input format buffer
+carries one trailing **zero tile**; the dispatch table routes a
+mismatched-class fetch to the zero tile and the kernel reconstructs the
+storage value branch-free as the sum of upcast candidate tiles (all but one
+are the zero tile).  Real traffic is storage bytes + the redundant zero-tile
+streams — the honest overhead is documented in DESIGN.md §4.
 
-Dispatch tables (host-side, from the static maps):
-    a_hi_slot[i,k] = slot of A(i,k) in tiles_hi (or n_hi → zero tile)
-    a_lo_slot[i,k] = slot in tiles_lo (or n_lo → zero tile)
-    (same for B); c tables list the (i,j) pairs of *this class's* output
-    tiles so the grid runs only over tiles the class owns.
+Dispatch tables (host-side, from the static maps), one pair per format f:
+    a_slot[f][i,k] = slot of A(i,k) in tiles[f] (or n_f → zero tile)
+    b_slot[f][k,j] = slot of B(k,j) in tiles[f] (or n_f → zero tile)
+The c tables list the (i,j) pairs of *this class's* output tiles so the grid
+runs only over tiles the class owns.
 """
 from __future__ import annotations
 
@@ -32,35 +32,36 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.layout import CompactMPMatrix
-from repro.core.precision import PrecClass
-
-HIGH = int(PrecClass.HIGH)
-LOW = int(PrecClass.LOW)
+from repro.core.layout import CompactMPMatrix, _check_codes
+from repro.kernels.mp_gemm_tile import format_specs
 
 
-def _kernel(ci_ref, cj_ref, a_hi_s, a_lo_s, b_hi_s, b_lo_s,   # prefetch
-            a_hi, a_lo, b_hi, b_lo,                            # inputs
-            o_ref, acc_ref, *, kt: int, high: bool):
+def _kernel(*refs, nf: int, kt: int, spec: tuple):
+    # refs: ci, cj, 2*nf slot tables (prefetch) | 2*nf inputs | out | scratch
+    a_tiles = refs[2 + 2 * nf: 2 + 3 * nf]
+    b_tiles = refs[2 + 3 * nf: 2 + 4 * nf]
+    o_ref = refs[2 + 4 * nf]
+    acc_ref = refs[3 + 4 * nf]
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # reconstruct storage values: exactly one of the two fetched candidate
-    # tiles is real, the other is the zero tile (blocks are [1, t, t])
-    a32 = a_hi[0] + a_lo[0].astype(jnp.float32)
-    b32 = b_hi[0] + b_lo[0].astype(jnp.float32)
-    if high:
-        acc_ref[0] += jax.lax.dot_general(
-            a32, b32, (((1,), (0,)), ((), ())),
-            precision=jax.lax.Precision.HIGHEST,
-            preferred_element_type=jnp.float32)
-    else:
-        acc_ref[0] += jax.lax.dot_general(
-            a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16),
-            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # reconstruct storage values: exactly one of the fetched candidate tiles
+    # is real, the others are the zero tiles (blocks are [1, t, t])
+    def upcast_sum(rs):
+        out = rs[0][0].astype(jnp.float32)
+        for r in rs[1:]:
+            out = out + r[0].astype(jnp.float32)
+        return out
+
+    a32 = upcast_sum(a_tiles)
+    b32 = upcast_sum(b_tiles)
+    op = jnp.dtype(spec[0])
+    acc_ref[0] += jax.lax.dot_general(
+        a32.astype(op), b32.astype(op), (((1,), (0,)), ((), ())),
+        precision=spec[1], preferred_element_type=jnp.float32)
 
     @pl.when(k == kt - 1)
     def _store():
@@ -73,48 +74,41 @@ def _class_tables(cls_map: np.ndarray, slot_map: np.ndarray, want: int,
     return np.where(cls_map == want, slot_map, n_in_class).astype(np.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret",
-                                             "meta"))
-def _grouped_class_call(a_hi, a_lo, b_hi, b_lo, ci, cj,
-                        a_hi_s, a_lo_s, b_hi_s, b_lo_s, *,
+@functools.partial(jax.jit, static_argnames=("tile", "interpret", "meta"))
+def _grouped_class_call(a_bufs, b_bufs, ci, cj, a_slots, b_slots, *,
                         tile: int, interpret: bool, meta):
-    n_out, kt, high = meta
+    n_out, kt, spec = meta
+    nf = len(a_bufs)
     t = tile
-    out_dtype = jnp.float32 if high else jnp.bfloat16
 
-    def a_map(g, k, ci_r, cj_r, ah, al, bh, bl):
-        return (ah[ci_r[g], k], 0, 0)
+    def a_map(f):
+        def index(g, k, ci_r, cj_r, *slots):
+            return (slots[f][ci_r[g], k], 0, 0)
+        return index
 
-    def al_map(g, k, ci_r, cj_r, ah, al, bh, bl):
-        return (al[ci_r[g], k], 0, 0)
-
-    def b_map(g, k, ci_r, cj_r, ah, al, bh, bl):
-        return (bh[k, cj_r[g]], 0, 0)
-
-    def bl_map(g, k, ci_r, cj_r, ah, al, bh, bl):
-        return (bl[k, cj_r[g]], 0, 0)
+    def b_map(f):
+        def index(g, k, ci_r, cj_r, *slots):
+            return (slots[nf + f][k, cj_r[g]], 0, 0)
+        return index
 
     def o_map(g, k, *_):
         return (g, 0, 0)
 
-    kernel = functools.partial(_kernel, kt=kt, high=high)
+    kernel = functools.partial(_kernel, nf=nf, kt=kt, spec=spec)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=6,
+            num_scalar_prefetch=2 + 2 * nf,
             grid=(n_out, kt),
-            in_specs=[
-                pl.BlockSpec((1, t, t), a_map),
-                pl.BlockSpec((1, t, t), al_map),
-                pl.BlockSpec((1, t, t), b_map),
-                pl.BlockSpec((1, t, t), bl_map),
-            ],
+            in_specs=(
+                [pl.BlockSpec((1, t, t), a_map(f)) for f in range(nf)]
+                + [pl.BlockSpec((1, t, t), b_map(f)) for f in range(nf)]),
             out_specs=pl.BlockSpec((1, t, t), o_map),
             scratch_shapes=[pltpu.VMEM((1, t, t), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((n_out, t, t), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((n_out, t, t), jnp.dtype(spec[2])),
         interpret=interpret,
-    )(ci, cj, a_hi_s, a_lo_s, b_hi_s, b_lo_s, a_hi, a_lo, b_hi, b_lo)
+    )(ci, cj, *a_slots, *b_slots, *a_bufs, *b_bufs)
 
 
 def grouped_mp_gemm(a: CompactMPMatrix, b: CompactMPMatrix,
@@ -122,44 +116,44 @@ def grouped_mp_gemm(a: CompactMPMatrix, b: CompactMPMatrix,
                     ) -> CompactMPMatrix:
     """C = A·B with compact class-sorted operands and a per-tile output
     class map ``c_cls`` int8[mt, nt].  Returns a CompactMPMatrix."""
+    if a.fset != b.fset:
+        raise ValueError(f"operand format sets differ: {a.fset.names} vs "
+                         f"{b.fset.names}")
+    fset = a.fset
+    specs = format_specs(fset)
     t = a.tile
     mt, kt = a.cls.arr.shape
     kt2, nt = b.cls.arr.shape
     assert kt == kt2
-    # zero tiles appended per class buffer
-    z32 = jnp.zeros((1, t, t), jnp.float32)
-    z16 = jnp.zeros((1, t, t), jnp.bfloat16)
-    a_hi = jnp.concatenate([a.tiles_hi, z32], 0)
-    a_lo = jnp.concatenate([a.tiles_lo, z16], 0)
-    b_hi = jnp.concatenate([b.tiles_hi, z32], 0)
-    b_lo = jnp.concatenate([b.tiles_lo, z16], 0)
+    # zero tiles appended per format buffer
+    a_bufs, b_bufs, a_slots, b_slots = [], [], [], []
+    for code in fset.codes:
+        z = jnp.zeros((1, t, t), fset.storage_dtype(code))
+        a_bufs.append(jnp.concatenate([a.tiles[code], z], 0))
+        b_bufs.append(jnp.concatenate([b.tiles[code], z], 0))
+        a_slots.append(jnp.asarray(_class_tables(
+            a.cls.arr, a.slot.arr, code, a.tiles[code].shape[0])))
+        b_slots.append(jnp.asarray(_class_tables(
+            b.cls.arr, b.slot.arr, code, b.tiles[code].shape[0])))
 
-    a_hi_s = _class_tables(a.cls.arr, a.slot.arr, HIGH, a.tiles_hi.shape[0])
-    a_lo_s = _class_tables(a.cls.arr, a.slot.arr, LOW, a.tiles_lo.shape[0])
-    b_hi_s = _class_tables(b.cls.arr, b.slot.arr, HIGH, b.tiles_hi.shape[0])
-    b_lo_s = _class_tables(b.cls.arr, b.slot.arr, LOW, b.tiles_lo.shape[0])
-
-    c_cls = np.asarray(c_cls, np.int8)
-    out_buffers = {}
-    for want, high in ((HIGH, True), (LOW, False)):
-        idx = np.argwhere(c_cls == want)
+    c_cls = _check_codes(np.asarray(c_cls, np.int8), fset)
+    out_buffers = []
+    for code in fset.codes:
+        idx = np.argwhere(c_cls == code)
         if len(idx) == 0:
-            out_buffers[want] = jnp.zeros(
-                (0, t, t), jnp.float32 if high else jnp.bfloat16)
+            out_buffers.append(
+                jnp.zeros((0, t, t), fset.storage_dtype(code)))
             continue
         ci = jnp.asarray(idx[:, 0].astype(np.int32))
         cj = jnp.asarray(idx[:, 1].astype(np.int32))
-        out_buffers[want] = _grouped_class_call(
-            a_hi, a_lo, b_hi, b_lo, ci, cj,
-            jnp.asarray(a_hi_s), jnp.asarray(a_lo_s),
-            jnp.asarray(b_hi_s), jnp.asarray(b_lo_s),
+        out_buffers.append(_grouped_class_call(
+            tuple(a_bufs), tuple(b_bufs), ci, cj,
+            tuple(a_slots), tuple(b_slots),
             tile=t, interpret=interpret,
-            meta=(len(idx), kt, high))
+            meta=(len(idx), kt, specs[code])))
 
     from repro.core.layout import _HashableMap
     slot = CompactMPMatrix.make_slots(c_cls)
     return CompactMPMatrix(
-        out_buffers[HIGH], out_buffers[LOW],
-        jnp.zeros((0, t, t), jnp.float8_e4m3fn),
-        _HashableMap(c_cls), _HashableMap(slot), t,
-        (mt * t, nt * t))
+        tuple(out_buffers), _HashableMap(c_cls), _HashableMap(slot), t,
+        (mt * t, nt * t), fset)

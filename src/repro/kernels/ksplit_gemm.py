@@ -1,22 +1,26 @@
 """Class-split blocked GEMM — the production kernel behind MPLinear.
 
-A KSplit weight stores its HIGH K-rows as fp32 and LOW K-rows as bf16 in two
-contiguous buffers (DESIGN.md §3(3)).  The matmul is two standard blocked
-GEMMs that share the output accumulator:
+A KSplit weight stores each format's K-rows contiguously (DESIGN.md §3(3)).
+The matmul is one standard blocked GEMM per format present, all sharing the
+output accumulator:
 
-    y  = x[:, :K_hi] · w_hi     (fp32 operands, Precision.HIGHEST)
-    y += x[:, K_hi:] · w_lo     (bf16 operands)
+    y  = x[:, :K_0] · w_0      (format 0's compute dtype / dot precision)
+    y += x[:, K_0:K_0+K_1] · w_1
+    ...
 
 Each class runs as its own ``pallas_call`` (PaRSEC would schedule these as a
-dgemm pool and an sgemm pool); the second call aliases the first call's
-output (``input_output_aliases``) so the accumulation never round-trips an
-extra HBM buffer.  HBM traffic is exactly storage bytes: fp32 blocks of w_hi,
-bf16 blocks of w_lo, x in its storage dtype — receiver-side conversion to the
+dgemm pool and an sgemm pool); later calls alias the previous call's output
+(``input_output_aliases``) so the accumulation never round-trips an extra
+HBM buffer.  HBM traffic is exactly storage bytes: each w buffer in its
+storage dtype, x in its storage dtype — receiver-side conversion to the
 operational precision happens in VMEM after the DMA.
 
 Block shapes: (bm × bk)·x + (bk × bn)·w + (bm × bn)·acc.  Defaults
 bm=bn=bk=128 → 128²·(4+4+4)·2(double-buffer) ≈ 400 KB VMEM; bump bm/bn to
 256/512 for large M on real hardware.  MXU wants every dim % 128 == 0.
+
+``spec`` rows are the hashable (compute_dtype_name, dot_precision,
+storage_dtype_name) projection from ``mp_gemm_tile.format_specs``.
 """
 from __future__ import annotations
 
@@ -27,9 +31,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+_F32_SPEC = ("float32", jax.lax.Precision.HIGHEST, "float32")
+_BF16_SPEC = ("bfloat16", jax.lax.Precision.DEFAULT, "bfloat16")
+
 
 def _gemm_kernel(x_ref, w_ref, y_in_ref, y_ref, acc_ref, *,
-                 kt: int, high: bool, accumulate: bool):
+                 kt: int, spec: tuple, accumulate: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -39,18 +46,13 @@ def _gemm_kernel(x_ref, w_ref, y_in_ref, y_ref, acc_ref, *,
         else:
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    if high:
-        # receiver-side conversion: operands to fp32, 3-pass MXU dot
-        upd = jax.lax.dot_general(
-            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
-            (((1,), (0,)), ((), ())),
-            precision=jax.lax.Precision.HIGHEST,
-            preferred_element_type=jnp.float32)
-    else:
-        upd = jax.lax.dot_general(
-            x_ref[...].astype(jnp.bfloat16), w_ref[...].astype(jnp.bfloat16),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+    # receiver-side conversion: operands to the class's operational precision
+    op = jnp.dtype(spec[0])
+    upd = jax.lax.dot_general(
+        x_ref[...].astype(op), w_ref[...].astype(op),
+        (((1,), (0,)), ((), ())),
+        precision=spec[1],
+        preferred_element_type=jnp.float32)
     acc_ref[...] += upd
 
     @pl.when(k == kt - 1)
@@ -58,7 +60,7 @@ def _gemm_kernel(x_ref, w_ref, y_in_ref, y_ref, acc_ref, *,
         y_ref[...] = acc_ref[...]
 
 
-def _one_class(x, w, y_in, *, high: bool, bm: int, bn: int, bk: int,
+def _one_class(x, w, y_in, *, spec: tuple, bm: int, bn: int, bk: int,
                interpret: bool):
     """y = y_in + x·w for one precision class."""
     M, K = x.shape
@@ -68,7 +70,7 @@ def _one_class(x, w, y_in, *, high: bool, bm: int, bn: int, bk: int,
     accumulate = y_in is not None
     if y_in is None:
         y_in = jnp.zeros((M, N), jnp.float32)
-    kernel = functools.partial(_gemm_kernel, kt=K // bk, high=high,
+    kernel = functools.partial(_gemm_kernel, kt=K // bk, spec=spec,
                                accumulate=accumulate)
     return pl.pallas_call(
         kernel,
@@ -86,22 +88,36 @@ def _one_class(x, w, y_in, *, high: bool, bm: int, bn: int, bk: int,
     )(x, w, y_in)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("specs", "bm", "bn", "bk", "interpret"))
+def ksplit_gemm_multi(x, bufs, *, specs: tuple, bm: int = 128, bn: int = 128,
+                      bk: int = 128, interpret: bool = False):
+    """y = Σ_f x[:, off_f:off_f+K_f]·bufs[f], fp32 out.
+
+    ``bufs`` are the per-format weight buffers in *storage order* (the order
+    their K-rows are concatenated in x — most expensive format first, i.e.
+    ``FormatSet.class_order``); ``specs[f]`` is the matching format spec.
+    Empty buffers are skipped.
+    """
+    y = None
+    off = 0
+    for buf, spec in zip(bufs, specs):
+        kc = buf.shape[0]
+        if not kc:
+            continue
+        y = _one_class(x[:, off:off + kc], buf, y, spec=spec,
+                       bm=bm, bn=bn, bk=min(bk, kc), interpret=interpret)
+        off += kc
+    assert y is not None, "empty weight"
+    return y
+
+
 def ksplit_gemm(x, w_hi, w_lo, *, bm: int = 128, bn: int = 128, bk: int = 128,
                 interpret: bool = False):
-    """y = x[:, :K_hi]·w_hi + x[:, K_hi:]·w_lo, fp32 out.
+    """Legacy two-class entry: y = x[:, :K_hi]·w_hi + x[:, K_hi:]·w_lo.
 
     x: [M, K_hi + K_lo] (fp32 or bf16 storage); w_hi: f32[K_hi, N];
     w_lo: bf16[K_lo, N].
     """
-    k_hi = w_hi.shape[0]
-    k_lo = w_lo.shape[0]
-    y = None
-    if k_hi:
-        y = _one_class(x[:, :k_hi], w_hi, None, high=True,
-                       bm=bm, bn=bn, bk=min(bk, k_hi), interpret=interpret)
-    if k_lo:
-        y = _one_class(x[:, k_hi:], w_lo, y, high=False,
-                       bm=bm, bn=bn, bk=min(bk, k_lo), interpret=interpret)
-    assert y is not None, "empty weight"
-    return y
+    return ksplit_gemm_multi(x, (w_hi, w_lo), specs=(_F32_SPEC, _BF16_SPEC),
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)

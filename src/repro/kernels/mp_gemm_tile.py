@@ -2,22 +2,27 @@
 
 One kernel instance per (i, j, k) tile triple — the paper's tile task.  The
 precision maps of A, B, C arrive through scalar prefetch (SMEM); A/B tiles
-are stored in dual buffers (the valid tile is in exactly one, the other is
-zeros, so ``hi + upcast(lo)`` reconstructs the storage value branch-free —
-the VMEM analogue of receiver-side conversion: the DMA moved only storage
-bytes of real data, the cast to the task's operational precision happens in
-registers).  The C tile's class selects the MXU path:
+are stored in one buffer per registered format (the valid tile is in exactly
+one, the others are zeros, so the sum of upcasts reconstructs the storage
+value branch-free — the VMEM analogue of receiver-side conversion: the DMA
+moved only storage bytes of real data, the cast to the task's operational
+precision happens in registers).  The C tile's class selects the MXU path
+via ``lax.switch`` over the format set:
 
-    HIGH → fp32 dot at Precision.HIGHEST (3 MXU passes on v5e)
-    LOW  → bf16 dot (1 MXU pass)
+    fp32 → fp32 dot at Precision.HIGHEST (3 MXU passes on v5e)
+    bf16/fp8/fp16 → dot at that format's compute dtype (1 MXU pass)
 
 Accumulation is a fp32 VMEM scratch across the k grid dimension.
 
 Block shape == precision-map tile (bm = bn = bk = tile).  VMEM working set
-per instance: tile²·(4+2)·2 inputs + tile²·4 scratch + tile²·(4+2) outputs —
-tile=256 → ~1.4 MB, comfortably inside the ~16 MB v5e VMEM with double
-buffering; tile=512 → 5.5 MB, still fine.  MXU alignment requires
+per instance: tile²·Σbytes·2 inputs + tile²·4 scratch + tile²·Σbytes
+outputs — tile=256 with the default 3-format set → ~1.6 MB, comfortably
+inside the ~16 MB v5e VMEM with double buffering.  MXU alignment requires
 tile % 128 == 0 on real hardware (interpret mode accepts any).
+
+``FormatSpec`` rows are ``(compute_dtype_name, dot_precision,
+storage_dtype_name)`` — a hashable, jit-static projection of the registered
+:class:`~repro.core.formats.PrecisionFormat` records (one per class code).
 """
 from __future__ import annotations
 
@@ -28,40 +33,54 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.precision import PrecClass
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
 
-HIGH = int(PrecClass.HIGH)
+
+def format_specs(fset: FormatSet) -> tuple:
+    """Hashable per-class (compute, precision, storage) rows for jit keys."""
+    return tuple(
+        (jnp.dtype(f.compute_dtype).name, f.dot_precision,
+         jnp.dtype(f.storage_dtype).name)
+        for f in fset.formats())
 
 
 def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
-            a_hi_ref, a_lo_ref, b_hi_ref, b_lo_ref, c_hi_ref, c_lo_ref,
-            o_hi_ref, o_lo_ref,                # outputs
-            acc_ref,                           # VMEM scratch
-            *, kt: int, alpha: float, beta: float):
+            *refs,                             # nf a-bufs, nf b-bufs, nf
+                                               # c-bufs, nf outputs, scratch
+            nf: int, kt: int, alpha: float, beta: float, specs: tuple):
     i = pl.program_id(0)
     j = pl.program_id(1)
     k = pl.program_id(2)
-    del pa_ref, pb_ref  # storage class already encoded in dual buffers
+    del pa_ref, pb_ref  # storage class already encoded in the format buffers
+    a_refs = refs[:nf]
+    b_refs = refs[nf:2 * nf]
+    c_refs = refs[2 * nf:3 * nf]
+    o_refs = refs[3 * nf:4 * nf]
+    acc_ref = refs[4 * nf]
+
+    def upcast_sum(rs):
+        out = rs[0][...].astype(jnp.float32)
+        for r in rs[1:]:
+            out = out + r[...].astype(jnp.float32)
+        return out
 
     # receiver-side reconstruction of the storage values (branch-free)
-    a32 = a_hi_ref[...] + a_lo_ref[...].astype(jnp.float32)
-    b32 = b_hi_ref[...] + b_lo_ref[...].astype(jnp.float32)
+    a32 = upcast_sum(a_refs)
+    b32 = upcast_sum(b_refs)
 
     cls_c = pc_ref[i, j]
 
-    def dot_high():
-        return jax.lax.dot_general(
-            a32, b32, (((1,), (0,)), ((), ())),
-            precision=jax.lax.Precision.HIGHEST,
-            preferred_element_type=jnp.float32)
+    def dot_at(spec):
+        compute, prec, _ = spec
 
-    def dot_low():
-        # convert operands to the task's operational precision (bf16)
-        return jax.lax.dot_general(
-            a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16),
-            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        def dot():
+            op = jnp.dtype(compute)
+            return jax.lax.dot_general(
+                a32.astype(op), b32.astype(op), (((1,), (0,)), ((), ())),
+                precision=prec, preferred_element_type=jnp.float32)
+        return dot
 
-    upd = jax.lax.cond(cls_c == HIGH, dot_high, dot_low)
+    upd = jax.lax.switch(cls_c, [dot_at(s) for s in specs])
 
     @pl.when(k == 0)
     def _init():
@@ -71,26 +90,30 @@ def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
 
     @pl.when(k == kt - 1)
     def _store():
-        c32 = c_hi_ref[...] + c_lo_ref[...].astype(jnp.float32)
+        c32 = upcast_sum(c_refs)
         out = alpha * acc_ref[...] + beta * c32
-        is_high = cls_c == HIGH
-        o_hi_ref[...] = jnp.where(is_high, out, 0.0)
-        o_lo_ref[...] = jnp.where(is_high, 0.0, out).astype(jnp.bfloat16)
+        for code, (o_ref, spec) in enumerate(zip(o_refs, specs)):
+            o_ref[...] = jnp.where(cls_c == code, out, 0.0).astype(
+                jnp.dtype(spec[2]))
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tile", "alpha", "beta", "interpret"))
-def mp_gemm_tile(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, pa, pb, pc,
-                 *, tile: int, alpha: float = 1.0, beta: float = 0.0,
-                 interpret: bool = False):
-    """C ← α·A·B + β·C with per-tile precision (dual-buffer layout).
+    static_argnames=("tile", "specs", "alpha", "beta", "interpret"))
+def mp_gemm_tile_multi(a_bufs, b_bufs, c_bufs, pa, pb, pc,
+                       *, tile: int, specs: tuple, alpha: float = 1.0,
+                       beta: float = 0.0, interpret: bool = False):
+    """C ← α·A·B + β·C with per-tile precision over per-format buffers.
 
-    a_hi f32[M,K], a_lo bf16[M,K], b_* [K,N], c_* [M,N]; pa/pb/pc int32 tile
-    class maps.  Returns (c_hi f32[M,N], c_lo bf16[M,N]).
+    ``a_bufs``/``b_bufs``/``c_bufs`` are tuples with one [M,K]/[K,N]/[M,N]
+    buffer per class code (``MPMatrix.bufs``); ``specs`` is
+    ``format_specs(fset)``; pa/pb/pc are int tile class maps.  Returns one
+    output buffer per class code, in storage dtype.
     """
-    M, K = a_hi.shape
-    N = b_hi.shape[1]
+    nf = len(specs)
+    assert len(a_bufs) == len(b_bufs) == len(c_bufs) == nf
+    M, K = a_bufs[0].shape
+    N = b_bufs[0].shape[1]
     t = tile
     assert M % t == 0 and K % t == 0 and N % t == 0, (M, K, N, t)
     mt, kt, nt = M // t, K // t, N // t
@@ -100,19 +123,12 @@ def mp_gemm_tile(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, pa, pb, pc,
     ik = lambda i, j, k, *_: (i, k)
     kj = lambda i, j, k, *_: (k, j)
     ij = lambda i, j, k, *_: (i, j)
-    in_specs = [
-        pl.BlockSpec((t, t), ik),  # a_hi
-        pl.BlockSpec((t, t), ik),  # a_lo
-        pl.BlockSpec((t, t), kj),  # b_hi
-        pl.BlockSpec((t, t), kj),  # b_lo
-        pl.BlockSpec((t, t), ij),  # c_hi
-        pl.BlockSpec((t, t), ij),  # c_lo
-    ]
-    out_specs = [
-        pl.BlockSpec((t, t), ij),  # o_hi
-        pl.BlockSpec((t, t), ij),  # o_lo
-    ]
-    kernel = functools.partial(_kernel, kt=kt, alpha=alpha, beta=beta)
+    in_specs = ([pl.BlockSpec((t, t), ik) for _ in range(nf)]
+                + [pl.BlockSpec((t, t), kj) for _ in range(nf)]
+                + [pl.BlockSpec((t, t), ij) for _ in range(nf)])
+    out_specs = [pl.BlockSpec((t, t), ij) for _ in range(nf)]
+    kernel = functools.partial(_kernel, nf=nf, kt=kt, alpha=alpha, beta=beta,
+                               specs=specs)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -123,9 +139,34 @@ def mp_gemm_tile(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, pa, pb, pc,
             scratch_shapes=[pltpu.VMEM((t, t), jnp.float32)],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((M, N), jnp.float32),
-            jax.ShapeDtypeStruct((M, N), jnp.bfloat16),
+            jax.ShapeDtypeStruct((M, N), jnp.dtype(s[2])) for s in specs
         ],
         interpret=interpret,
     )(pa.astype(jnp.int32), pb.astype(jnp.int32), pc.astype(jnp.int32),
-      a_hi, a_lo, b_hi, b_lo, c_hi, c_lo)
+      *a_bufs, *b_bufs, *c_bufs)
+
+
+def mp_gemm_tile(a_hi, a_lo, b_hi, b_lo, c_hi, c_lo, pa, pb, pc,
+                 *, tile: int, alpha: float = 1.0, beta: float = 0.0,
+                 interpret: bool = False):
+    """Legacy dual-buffer entry over the default format set.
+
+    a_hi f32[M,K], a_lo bf16[M,K], b_* [K,N], c_* [M,N]; pa/pb/pc int32 tile
+    class maps.  Returns (c_hi f32[M,N], c_lo bf16[M,N]).
+    """
+    fset = DEFAULT_FORMATS
+    z = {
+        "a": jnp.zeros(a_hi.shape, fset.storage_dtype(fset.low8)),
+        "b": jnp.zeros(b_hi.shape, fset.storage_dtype(fset.low8)),
+        "c": jnp.zeros(c_hi.shape, fset.storage_dtype(fset.low8)),
+    }
+    outs = mp_gemm_tile_multi(
+        (z["a"], a_lo, a_hi), (z["b"], b_lo, b_hi), (z["c"], c_lo, c_hi),
+        pa, pb, pc, tile=tile, specs=format_specs(fset),
+        alpha=alpha, beta=beta, interpret=interpret)
+    # the two-buffer return cannot carry the fp8 output buffer, so LOW8 C
+    # tiles ride in o_lo (buffers are disjoint; values keep their fp8
+    # storage rounding, matching the tilewise reference semantics)
+    o_lo = (outs[fset.low].astype(jnp.float32)
+            + outs[fset.low8].astype(jnp.float32)).astype(jnp.bfloat16)
+    return outs[fset.high], o_lo

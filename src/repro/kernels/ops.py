@@ -3,6 +3,9 @@
 On the CPU host (this container, and unit tests) kernels run in
 ``interpret=True`` mode — the kernel body executes in Python for exact
 semantic validation.  On a TPU backend they compile through Mosaic.
+
+All wrappers derive dtypes/precisions from the operands' FormatSet, so any
+registered precision format flows through without kernel edits.
 """
 from __future__ import annotations
 
@@ -22,24 +25,29 @@ def _interpret() -> bool:
 def mp_gemm(a: MPMatrix, b: MPMatrix, c: MPMatrix,
             alpha: float = 1.0, beta: float = 0.0) -> MPMatrix:
     """Tile-centric mixed-precision GEMM (paper Algorithm 1) via the Pallas
-    kernel.  Dual-buffer layout in/out."""
-    o_hi, o_lo = _mp_tile.mp_gemm_tile(
-        a.hi, a.lo, b.hi, b.lo, c.hi, c.lo,
+    kernel.  Per-format multi-buffer layout in/out."""
+    if not (a.fset == b.fset == c.fset):
+        raise ValueError("mp_gemm operands must share a format set")
+    o_bufs = _mp_tile.mp_gemm_tile_multi(
+        a.bufs, b.bufs, c.bufs,
         jnp.asarray(a.cls.arr), jnp.asarray(b.cls.arr), jnp.asarray(c.cls.arr),
-        tile=a.tile, alpha=alpha, beta=beta, interpret=_interpret())
-    lo8 = jnp.zeros_like(o_hi, jnp.float8_e4m3fn)
-    return MPMatrix(o_hi, o_lo, lo8, c.cls, c.tile, c.shape)
+        tile=a.tile, specs=_mp_tile.format_specs(a.fset),
+        alpha=alpha, beta=beta, interpret=_interpret())
+    return MPMatrix(tuple(o_bufs), c.cls, c.tile, c.shape, c.fset)
 
 
 def ksplit_matmul_kernel(x: jax.Array, w: KSplitWeight,
                          bm: int = 128, bn: int = 128, bk: int = 128
                          ) -> jax.Array:
     """MPLinear's matmul through the class-split Pallas kernel.  x: [M, K]
-    with K-classes stored contiguously (sorted maps)."""
-    if w.w_lo8.size:
-        raise NotImplementedError("kernel path covers HIGH/LOW classes")
-    return _ksplit.ksplit_gemm(x, w.w_hi, w.w_lo, bm=bm, bn=bn, bk=bk,
-                               interpret=_interpret())
+    with K-classes stored contiguously in ``w.fset.class_order`` (sorted
+    maps)."""
+    fset = w.fset
+    specs = _mp_tile.format_specs(fset)
+    return _ksplit.ksplit_gemm_multi(
+        x, tuple(w.bufs[code] for code in fset.class_order),
+        specs=tuple(specs[code] for code in fset.class_order),
+        bm=bm, bn=bn, bk=bk, interpret=_interpret())
 
 
 def convert_tiles(x: jax.Array, out_dtype, bm: int = 256, bn: int = 256

@@ -9,10 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.precision import PrecClass
+from repro.core.formats import DEFAULT_FORMATS
 
-HIGH = int(PrecClass.HIGH)
-LOW = int(PrecClass.LOW)
+HIGH = DEFAULT_FORMATS.high
+LOW = DEFAULT_FORMATS.low
 
 
 def _expand(m: np.ndarray, t: int) -> np.ndarray:

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
 from repro.core.linear import MPLinear, init_mp_linear
 from repro.core.precision import Policy
 
@@ -101,20 +102,21 @@ def attn_dims(n_heads: int, n_kv_heads: int, d_model: int,
 
 
 def init_attention(key, d_model: int, dims: AttnDims, policy: Policy | None,
-                   tile: int | None = None) -> dict:
+                   tile: int | None = None,
+                   fset: FormatSet = DEFAULT_FORMATS) -> dict:
     kq, kk, kv, ko = jax.random.split(key, 4)
     nq, nkv, dh = dims.n_q, dims.n_kv, dims.head_dim
     return {
         # column-parallel (N sharded over model) → ksplit along K=d_model
         "wq": init_mp_linear(kq, d_model, nq * dh, policy, split="ksplit",
-                             tile=tile),
+                             tile=tile, fset=fset),
         "wk": init_mp_linear(kk, d_model, nkv * dh, policy, split="ksplit",
-                             tile=tile),
+                             tile=tile, fset=fset),
         "wv": init_mp_linear(kv, d_model, nkv * dh, policy, split="ksplit",
-                             tile=tile),
+                             tile=tile, fset=fset),
         # row-parallel (K sharded over model) → nsplit along N=d_model
         "wo": init_mp_linear(ko, nq * dh, d_model, policy, split="nsplit",
-                             tile=tile),
+                             tile=tile, fset=fset),
     }
 
 
@@ -277,17 +279,18 @@ def decode_attention(params, x, dims: AttnDims, cache_k, cache_v, *,
 # ---------------------------------------------------------------------------
 
 def init_mlp(key, d_model: int, d_ff: int, policy: Policy | None,
-             tile: int | None = None, gated: bool = True) -> dict:
+             tile: int | None = None, gated: bool = True,
+             fset: FormatSet = DEFAULT_FORMATS) -> dict:
     kg, ku, kd = jax.random.split(key, 3)
     p = {
         "up": init_mp_linear(ku, d_model, d_ff, policy, split="ksplit",
-                             tile=tile),
+                             tile=tile, fset=fset),
         "down": init_mp_linear(kd, d_ff, d_model, policy, split="nsplit",
-                               tile=tile),
+                               tile=tile, fset=fset),
     }
     if gated:
         p["gate"] = init_mp_linear(kg, d_model, d_ff, policy, split="ksplit",
-                                   tile=tile)
+                                   tile=tile, fset=fset)
     return p
 
 

@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core.layout import _HashableMap
 from repro.core.linear import choose_tile, split_cls
-from repro.core.precision import Policy, PrecClass
+from repro.core.formats import DEFAULT_FORMATS
+from repro.core.precision import Policy
 from repro.models.common import ACT_DTYPE
 
 
@@ -51,10 +52,10 @@ class MoEKSplit:
         t = tile or choose_tile(k)
         kt = k // t
         if policy is None or policy.kind == "uniform_low":
-            kcls = np.full(kt, int(PrecClass.LOW), np.int8)
+            kcls = np.full(kt, DEFAULT_FORMATS.low, np.int8)
         else:
             kcls = split_cls(kt, policy)
-        k_hi = int((kcls == int(PrecClass.HIGH)).sum()) * t
+        k_hi = int((kcls == DEFAULT_FORMATS.high).sum()) * t
         w = jax.random.normal(key, (e, k, n), jnp.float32) / np.sqrt(k)
         return cls(w[:, :k_hi, :],
                    w[:, k_hi:, :].astype(jnp.bfloat16),
@@ -108,10 +109,10 @@ class MoENSplit:
         t = tile or choose_tile(n)
         nt = n // t
         if policy is None or policy.kind == "uniform_low":
-            ncls = np.full(nt, int(PrecClass.LOW), np.int8)
+            ncls = np.full(nt, DEFAULT_FORMATS.low, np.int8)
         else:
             ncls = split_cls(nt, policy)
-        n_hi = int((ncls == int(PrecClass.HIGH)).sum()) * t
+        n_hi = int((ncls == DEFAULT_FORMATS.high).sum()) * t
         w = jax.random.normal(key, (e, k, n), jnp.float32) / np.sqrt(k)
         return cls(w[:, :, :n_hi], w[:, :, n_hi:].astype(jnp.bfloat16),
                    _HashableMap(ncls), t, (e, k, n))

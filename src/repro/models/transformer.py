@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.formats import FormatSet
 from repro.core.linear import init_mp_linear
 from repro.models import common as C
 from repro.models import mamba as M
@@ -39,9 +40,10 @@ def _init_layer(key, cfg: ArchConfig, mixer: str, ffn: str) -> dict:
     p: dict[str, Any] = {"norm1": C.init_rms_norm(cfg.d_model)}
     dims = C.attn_dims(cfg.n_heads, cfg.n_kv_heads, cfg.d_model, cfg.tp,
                        cfg.head_dim, cfg.kv_dup_to_tp)
+    fs = FormatSet.from_key(cfg.mp_formats)
     if mixer.startswith("attn"):
         p["attn"] = C.init_attention(km, cfg.d_model, dims, cfg.mp_policy,
-                                     cfg.mp_tile)
+                                     cfg.mp_tile, fset=fs)
     elif mixer == "mamba":
         p["mamba"] = M.init_mamba(km, cfg.d_model, cfg.mp_policy,
                                   expand=cfg.mamba_expand,
@@ -55,7 +57,7 @@ def _init_layer(key, cfg: ArchConfig, mixer: str, ffn: str) -> dict:
     if ffn == "mlp":
         p["norm2"] = C.init_rms_norm(cfg.d_model)
         p["mlp"] = C.init_mlp(kf, cfg.d_model, cfg.d_ff, cfg.mp_policy,
-                              cfg.mp_tile, gated=cfg.gated_mlp)
+                              cfg.mp_tile, gated=cfg.gated_mlp, fset=fs)
     elif ffn == "moe":
         p["norm2"] = C.init_rms_norm(cfg.d_model)
         p["moe"] = MOE.init_moe(kf, cfg.d_model, cfg.d_ff, cfg.n_experts,
@@ -182,7 +184,8 @@ def init_model(key, cfg: ArchConfig) -> dict:
         "final_norm": C.init_rms_norm(cfg.d_model),
         "lm_head": init_mp_linear(keys[1], cfg.d_model, cfg.vocab,
                                   cfg.mp_policy, split="ksplit",
-                                  tile=cfg.mp_tile),
+                                  tile=cfg.mp_tile,
+                                  fset=FormatSet.from_key(cfg.mp_formats)),
     }
     if cfg.frontend == "audio":
         params["frontend_proj"] = init_mp_linear(

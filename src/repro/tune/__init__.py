@@ -12,6 +12,11 @@ Two-line API::
     from repro.tune import autotune, mp_matmul
     autotune(A, B, C)          # measure candidates once, persist the winner
     out = mp_matmul(A, B, C)   # routed through the cached plan
+
+Plans are keyed per precision-format set (``repro.core.formats``): every
+registered format's bytes and per-device MXU pass costs feed the cost model,
+and the persisted cache (schema 2) stamps format definitions so registry
+changes retire stale plans instead of mis-dispatching.
 """
 from repro.tune.device import DeviceSpec, detect_device, device_table
 from repro.tune.costmodel import (GemmPlan, GemmProblem, predict_time,

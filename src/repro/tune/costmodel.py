@@ -1,17 +1,18 @@
 """Analytical roofline cost model over (path × block shape × precision map).
 
 ``GemmProblem`` captures the static facts of one mixed-precision GEMM (shape,
-precision-map tile, per-operand class fractions, structural flags);
-``GemmPlan`` is one way to execute it (a kernel path plus block shape).
-``predict_time`` scores a plan as
+precision-map tile, per-operand role fractions, the active format set,
+structural flags); ``GemmPlan`` is one way to execute it (a kernel path plus
+block shape).  ``predict_time`` scores a plan as
 
     max(compute seconds, HBM seconds) + per-task overhead
 
-where compute is pass-weighted by ``DeviceSpec.class_cost`` (the paper's
-dgemm/sgemm cost asymmetry), HBM bytes are *storage* bytes from the class
-fractions (the paper's bandwidth saving) with the classic blocked-GEMM
-re-fetch factors (A travels N/bn times, B travels M/bm times), and overhead
-charges each kernel grid step (dominant in CPU interpret mode).
+where compute is pass-weighted by the registered formats' per-device pass
+costs (the paper's dgemm/sgemm cost asymmetry), HBM bytes are *storage*
+bytes from the class fractions (the paper's bandwidth saving) with the
+classic blocked-GEMM re-fetch factors (A travels N/bn times, B travels M/bm
+times), and overhead charges each kernel grid step (dominant in CPU
+interpret mode).
 
 ``validate_plan`` rejects plans that violate MXU alignment (% 128 on real
 TPUs), shape divisibility, path applicability, or the VMEM working-set
@@ -25,26 +26,19 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.precision import PrecClass
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
 from repro.tune.device import DeviceSpec
 
 #: every execution path the dispatcher can route to
 PATHS = ("ref", "tile", "grouped", "ksplit_xla", "ksplit_pallas")
 
-_HI = int(PrecClass.HIGH)
-_LO8 = int(PrecClass.LOW8)
 
-
-def _fracs(cls_map: np.ndarray) -> tuple[float, float]:
+def _fracs(cls_map: np.ndarray, fset: FormatSet) -> tuple[float, float]:
     """(frac_high, frac_low8) of a class map."""
     total = cls_map.size
-    return (float((cls_map == _HI).sum()) / total,
-            float((cls_map == _LO8).sum()) / total)
-
-
-def _bytes_per_elem(frac_high: float, frac_low8: float) -> float:
-    return 4.0 * frac_high + 1.0 * frac_low8 \
-        + 2.0 * (1.0 - frac_high - frac_low8)
+    f8 = (float((cls_map == fset.low8).sum()) / total
+          if fset.low8 is not None else 0.0)
+    return (float((cls_map == fset.high).sum()) / total, f8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +50,7 @@ class GemmProblem:
     k: int
     tile: int
     op: str = "mp_gemm"
-    # per-operand class fractions
+    # per-operand role fractions (D and Q; S is the remainder)
     a_high: float = 0.0
     a_low8: float = 0.0
     b_high: float = 0.0
@@ -65,21 +59,28 @@ class GemmProblem:
     c_low8: float = 0.0
     # structural applicability flags
     b_k_constant: bool = False   # B map constant along N (ksplit layouts)
-    c_classes: tuple = (int(PrecClass.LOW),)  # distinct classes in C map
+    c_classes: tuple = (DEFAULT_FORMATS.low,)  # distinct classes in C map
     has_low8: bool = False
     alpha_one: bool = True
     beta_zero: bool = True
     pad_free: bool = True        # logical shapes equal padded tile grid
+    #: active format-set key — part of the plan-cache identity, so a plan
+    #: tuned for one format combination is never served to another
+    formats: str = DEFAULT_FORMATS.key()
+
+    @property
+    def fset(self) -> FormatSet:
+        return FormatSet.from_key(self.formats)
 
     @classmethod
     def from_maps(cls, pa: np.ndarray, pb: np.ndarray, pc: np.ndarray,
                   tile: int, *, alpha: float = 1.0, beta: float = 0.0,
-                  op: str = "mp_gemm", pad_free: bool = True
-                  ) -> "GemmProblem":
+                  op: str = "mp_gemm", pad_free: bool = True,
+                  fset: FormatSet = DEFAULT_FORMATS) -> "GemmProblem":
         pa, pb, pc = (np.asarray(p) for p in (pa, pb, pc))
-        ah, a8 = _fracs(pa)
-        bh, b8 = _fracs(pb)
-        ch, c8 = _fracs(pc)
+        ah, a8 = _fracs(pa, fset)
+        bh, b8 = _fracs(pb, fset)
+        ch, c8 = _fracs(pc, fset)
         return cls(
             m=pa.shape[0] * tile, n=pb.shape[1] * tile,
             k=pa.shape[1] * tile, tile=tile, op=op,
@@ -89,7 +90,7 @@ class GemmProblem:
             c_classes=tuple(sorted(int(v) for v in np.unique(pc))),
             has_low8=bool(a8 or b8 or c8),
             alpha_one=(alpha == 1.0), beta_zero=(beta == 0.0),
-            pad_free=pad_free)
+            pad_free=pad_free, formats=fset.key())
 
     def ratio_key(self) -> str:
         """Compact class-fraction signature used in plan-cache keys."""
@@ -110,6 +111,17 @@ class GemmProblem:
             int(self.b_k_constant), int(self.pad_free),
             "".join(str(c) for c in self.c_classes)))
 
+    # -- derived byte/pass facts (role fractions × registered formats) ------
+    def bytes_per_elem(self, frac_high: float, frac_low8: float) -> float:
+        hb, lb, l8b = self.fset.role_bytes()
+        return (hb * frac_high + l8b * frac_low8
+                + lb * (1.0 - frac_high - frac_low8))
+
+    def stream_bytes_per_elem(self) -> float:
+        """Bytes/elem the dense multi-buffer (MPMatrix) layout streams: every
+        format's buffer travels, valid tile or not."""
+        return float(sum(self.fset.bytes_of(c) for c in self.fset.codes))
+
 
 @dataclasses.dataclass(frozen=True)
 class GemmPlan:
@@ -129,14 +141,16 @@ def plan_vmem_bytes(plan: GemmPlan, prob: GemmProblem) -> int:
     """Peak fast-memory working set of one kernel instance (double-buffered
     streams; formulas match the kernel docstrings)."""
     t, bm, bn, bk = prob.tile, plan.bm, plan.bn, plan.bk
+    s = prob.stream_bytes_per_elem()   # Σ format bytes (multi-buffer stream)
+    hb = prob.fset.role_bytes()[0]     # widest (accumulator-sized) buffer
     if plan.path == "tile":
-        # dual-buffer a/b/c inputs (4+2 B/elem, double-buffered), fp32
-        # scratch, dual-buffer output
-        return t * t * ((4 + 2) * 2 * 3 + 4 + (4 + 2))
+        # multi-buffer a/b/c inputs (Σ bytes/elem, double-buffered), fp32
+        # scratch, multi-buffer output
+        return int(t * t * (s * 2 * 3 + 4 + s))
     if plan.path == "grouped":
-        # per class call: 4 candidate input tiles (f32+bf16 for A and B),
+        # per class call: one candidate input tile per format for A and B,
         # fp32 scratch, one output tile; double-buffered inputs
-        return t * t * ((4 + 2 + 4 + 2) * 2 + 4 + 4)
+        return int(t * t * (2 * s * 2 + 4 + hb))
     if plan.path == "ksplit_pallas":
         # x block + w block + y alias + fp32 scratch, double-buffered
         return (bm * bk + bk * bn + 2 * bm * bn) * 4 * 2
@@ -166,13 +180,9 @@ def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
         if k % t:
             bad.append(f"K={k} not a multiple of tile={t}")
     if plan.path == "grouped":
-        if prob.has_low8:
-            bad.append("grouped path covers HIGH/LOW classes only")
         if not (prob.alpha_one and prob.beta_zero):
             bad.append("grouped path computes C=A·B (alpha=1, beta=0)")
     if plan.path == "ksplit_pallas":
-        if prob.has_low8:
-            bad.append("ksplit kernel covers HIGH/LOW classes only")
         if not prob.beta_zero:
             bad.append("ksplit kernel computes y=x·W (beta=0)")
         if m % plan.bm or n % plan.bn:
@@ -211,33 +221,36 @@ def _grid_steps(plan: GemmPlan, prob: GemmProblem) -> int:
 def predict_time(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec) -> dict:
     """Roofline score.  Returns the breakdown; ``total_s`` is the rank key."""
     m, n, k = prob.m, prob.n, prob.k
+    fset = prob.fset
     flops = 2.0 * m * n * k
-    a_bytes = m * k * _bytes_per_elem(prob.a_high, prob.a_low8)
-    b_bytes = k * n * _bytes_per_elem(prob.b_high, prob.b_low8)
-    c_bytes = m * n * _bytes_per_elem(prob.c_high, prob.c_low8)
+    a_bytes = m * k * prob.bytes_per_elem(prob.a_high, prob.a_low8)
+    b_bytes = k * n * prob.bytes_per_elem(prob.b_high, prob.b_low8)
+    c_bytes = m * n * prob.bytes_per_elem(prob.c_high, prob.c_low8)
 
     if plan.path == "ref":
-        # one dense fp32 dot per distinct C class over the full MNK
-        w = sum(dev.class_cost[c] for c in prob.c_classes)
+        # one dense dot per distinct C class over the full MNK
+        w = sum(dev.format_cost(fset.names[c]) for c in prob.c_classes)
         compute = flops * w
         hbm = len(prob.c_classes) * (m * k + k * n) * 4.0 + 2 * m * n * 4.0
     elif plan.path == "tile":
         # operational precision = C tile class (paper Algorithm 1)
-        w = dev.class_weight(prob.c_high, prob.c_low8)
+        w = dev.class_weight(prob.c_high, prob.c_low8, fset)
         compute = flops * w
-        # dual-buffer layout streams BOTH class buffers (4+2 B/elem);
+        # multi-buffer layout streams EVERY format buffer (Σ bytes/elem);
         # blocked re-fetch: A read n/bn times, B read m/bm times
-        hbm = (m * k * 6.0 * (n // plan.bn)
-               + k * n * 6.0 * (m // plan.bm) + 2 * m * n * 6.0)
+        s = prob.stream_bytes_per_elem()
+        hbm = (m * k * s * (n // plan.bn)
+               + k * n * s * (m // plan.bm) + 2 * m * n * s)
     elif plan.path == "grouped":
-        w = dev.class_weight(prob.c_high, prob.c_low8)
+        w = dev.class_weight(prob.c_high, prob.c_low8, fset)
         compute = flops * w
-        # storage bytes + the redundant zero-tile stream (×2), re-fetched
+        # storage bytes + the redundant zero-tile streams (×nf), re-fetched
         # once per C class present
         refetch = len(prob.c_classes)
-        hbm = 2.0 * refetch * (a_bytes + b_bytes) + 2 * c_bytes
+        nf = len(fset)
+        hbm = float(nf) * refetch * (a_bytes + b_bytes) + 2 * c_bytes
     else:  # ksplit paths: operational precision = B K-block class
-        w = dev.class_weight(prob.b_high, prob.b_low8)
+        w = dev.class_weight(prob.b_high, prob.b_low8, fset)
         compute = flops * w
         if plan.path == "ksplit_pallas":
             hbm = (a_bytes * (n // plan.bn) + b_bytes * (m // plan.bm)

@@ -8,10 +8,15 @@ cost model and plan validator need:
 * MXU/matmul native shape and block alignment,
 * on-chip fast-memory budget (VMEM on TPU, SMEM+L1 on GPU),
 * HBM bandwidth,
-* peak LOW-precision matmul throughput and the per-``PrecClass`` pass cost
-  (HIGH = fp32 = 3 bf16 MXU passes on TPU v5e),
+* peak LOW-precision matmul throughput,
 * a per-kernel-task overhead (large in CPU interpret mode, where each grid
   step executes as Python — the model must know this to prefer XLA paths).
+
+Per-format MXU pass costs are *not* stored here: each registered
+:class:`~repro.core.formats.PrecisionFormat` carries its own per-device
+``pass_cost`` table (fp32 = 3 bf16 MXU passes on TPU, 2 tensor-core passes
+on A100, …) and ``DeviceSpec.format_cost`` resolves it for this device —
+registering a new format never requires touching the device table.
 
 Specs for hardware this container does not have are retained so plan caches
 can be built *for* a target architecture on any host (cache-only CI mode).
@@ -24,7 +29,7 @@ from typing import Mapping
 
 import jax
 
-from repro.core.precision import CLASS_MXU_COST, PrecClass
+from repro.core.formats import DEFAULT_FORMATS, FormatSet, get_format
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,16 +43,28 @@ class DeviceSpec:
     smem_bytes: int                 # scalar memory (prefetch maps live here)
     hbm_gbps: float                 # HBM bandwidth, GB/s
     low_tflops: float               # peak LOW-class (bf16) matmul TFLOP/s
-    class_cost: Mapping[int, float]  # PrecClass -> relative pass count
     task_overhead_s: float          # fixed cost per kernel grid step
     interpret: bool                 # Pallas runs in interpret mode here
 
-    def class_weight(self, frac_high: float, frac_low8: float = 0.0) -> float:
-        """Mean MXU passes per tile task given class fractions."""
+    def format_cost(self, name: str) -> float:
+        """Relative MXU passes of a tile task at format ``name`` here."""
+        return get_format(name).cost_on(self.kind)
+
+    @property
+    def class_cost(self) -> Mapping[int, float]:
+        """DEPRECATED — default-set class code -> pass cost (registry view)."""
+        return {c: self.format_cost(DEFAULT_FORMATS.names[c])
+                for c in DEFAULT_FORMATS.codes}
+
+    def class_weight(self, frac_high: float, frac_low8: float = 0.0,
+                     fset: FormatSet = DEFAULT_FORMATS) -> float:
+        """Mean MXU passes per tile task given role fractions."""
         frac_low = 1.0 - frac_high - frac_low8
-        return (self.class_cost[int(PrecClass.HIGH)] * frac_high
-                + self.class_cost[int(PrecClass.LOW)] * frac_low
-                + self.class_cost[int(PrecClass.LOW8)] * frac_low8)
+        w = (self.format_cost(fset.names[fset.high]) * frac_high
+             + self.format_cost(fset.names[fset.low]) * frac_low)
+        if fset.low8 is not None:
+            w += self.format_cost(fset.names[fset.low8]) * frac_low8
+        return w
 
 
 def _tpu(kind, vmem_mb, gbps, tflops, overhead=2e-6) -> DeviceSpec:
@@ -55,32 +72,27 @@ def _tpu(kind, vmem_mb, gbps, tflops, overhead=2e-6) -> DeviceSpec:
         kind=kind, mxu=(128, 128), alignment=128,
         vmem_bytes=vmem_mb * 2**20, smem_bytes=64 * 2**10,
         hbm_gbps=gbps, low_tflops=tflops,
-        class_cost=dict(CLASS_MXU_COST), task_overhead_s=overhead,
-        interpret=False)
+        task_overhead_s=overhead, interpret=False)
 
 
 #: Known accelerators.  Numbers are public peak specs (bf16 / HBM); they feed
 #: a *relative* roofline model, so being a few percent off is harmless.
+#: Per-format pass asymmetries (fp32 = 3 passes on TPU, 2 on A100 tensor
+#: cores, fp8 at double rate on A100 …) live in the format registry.
 DEVICE_TABLE: dict[str, DeviceSpec] = {
     "tpu-v4": _tpu("tpu-v4", vmem_mb=16, gbps=1228.0, tflops=275.0),
     "tpu-v5e": _tpu("tpu-v5e", vmem_mb=16, gbps=819.0, tflops=197.0),
     "tpu-v5p": _tpu("tpu-v5p", vmem_mb=16, gbps=2765.0, tflops=459.0),
     "tpu-v6e": _tpu("tpu-v6e", vmem_mb=32, gbps=1640.0, tflops=918.0),
-    # GPU entries (paper's A100 / Frontier MI250X): fp32 tensor-core rate is
-    # half the bf16 rate -> HIGH pass cost 2 instead of TPU's 3.
     "gpu-a100": DeviceSpec(
         kind="gpu-a100", mxu=(16, 16), alignment=8,
         vmem_bytes=192 * 2**10, smem_bytes=64 * 2**10,
         hbm_gbps=2039.0, low_tflops=312.0,
-        class_cost={int(PrecClass.LOW8): 0.5, int(PrecClass.LOW): 1.0,
-                    int(PrecClass.HIGH): 2.0},
         task_overhead_s=2e-6, interpret=False),
     "gpu-mi250x": DeviceSpec(
         kind="gpu-mi250x", mxu=(16, 16), alignment=8,
         vmem_bytes=160 * 2**10, smem_bytes=64 * 2**10,
         hbm_gbps=1638.0, low_tflops=191.5,
-        class_cost={int(PrecClass.LOW8): 1.0, int(PrecClass.LOW): 1.0,
-                    int(PrecClass.HIGH): 2.0},
         task_overhead_s=2e-6, interpret=False),
     # CPU / interpret fallback: Pallas kernels execute per-grid-step in
     # Python, so task overhead dominates everything; XLA dot paths run at
@@ -90,8 +102,6 @@ DEVICE_TABLE: dict[str, DeviceSpec] = {
         kind="cpu-interpret", mxu=(1, 1), alignment=1,
         vmem_bytes=16 * 2**20, smem_bytes=64 * 2**10,
         hbm_gbps=30.0, low_tflops=0.2,
-        class_cost={int(PrecClass.LOW8): 1.0, int(PrecClass.LOW): 1.0,
-                    int(PrecClass.HIGH): 1.5},
         task_overhead_s=2e-3, interpret=True),
 }
 

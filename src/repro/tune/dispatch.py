@@ -27,13 +27,10 @@ import numpy as np
 from repro.core.layout import (CompactMPMatrix, KSplitWeight, MPMatrix,
                                ksplit_matmul)
 from repro.core.mp_gemm import mp_gemm_ref
-from repro.core.precision import PrecClass
 from repro.kernels import ops
 from repro.tune.costmodel import GemmPlan, GemmProblem, PATHS, validate_plan
 from repro.tune.device import DeviceSpec, detect_device
 from repro.tune import search as S
-
-_LOW = int(PrecClass.LOW)
 
 #: in-memory plan registry: plan-cache key -> GemmPlan
 _REGISTRY: dict[str, GemmPlan] = {}
@@ -70,6 +67,8 @@ def canonical_operands(a: MPMatrix, b: MPMatrix, c: MPMatrix | None
         raise TypeError("mp_matmul operands must be MPMatrix")
     if a.tile != b.tile:
         raise ValueError(f"tile mismatch {a.tile} vs {b.tile}")
+    if a.fset != b.fset or (c is not None and c.fset != a.fset):
+        raise ValueError("mp_matmul operands must share a format set")
     if a.cls.arr.shape[1] != b.cls.arr.shape[0]:
         raise ValueError(
             f"inner tile-grid mismatch {a.cls.arr.shape} · {b.cls.arr.shape}")
@@ -83,9 +82,10 @@ def canonical_operands(a: MPMatrix, b: MPMatrix, c: MPMatrix | None
     if c is None:
         mt = a.cls.arr.shape[0]
         nt = b.cls.arr.shape[1]
-        cmap = np.full((mt, nt), _LOW, np.int8)
+        cmap = np.full((mt, nt), a.fset.low, np.int8)
         c = MPMatrix.from_dense(
-            jnp.zeros((a.shape[0], b.shape[1]), jnp.float32), cmap, a.tile)
+            jnp.zeros((a.shape[0], b.shape[1]), jnp.float32), cmap, a.tile,
+            a.fset)
     return a, b, c
 
 
@@ -95,7 +95,7 @@ def problem_of(a: MPMatrix, b: MPMatrix, c: MPMatrix, *,
                 and c.shape == c.padded_shape)
     return GemmProblem.from_maps(
         a.cls.arr, b.cls.arr, c.cls.arr, a.tile,
-        alpha=alpha, beta=beta, pad_free=pad_free)
+        alpha=alpha, beta=beta, pad_free=pad_free, fset=a.fset)
 
 
 # ---------------------------------------------------------------------------
@@ -112,22 +112,23 @@ def _exec_tile(plan, a, b, c, alpha, beta):
 
 def _exec_grouped(plan, a, b, c, alpha, beta):
     t = a.tile
-    ac = CompactMPMatrix.from_dense(a.to_dense(), a.cls.arr, t)
-    bc = CompactMPMatrix.from_dense(b.to_dense(), b.cls.arr, t)
+    ac = CompactMPMatrix.from_dense(a.to_dense(), a.cls.arr, t, a.fset)
+    bc = CompactMPMatrix.from_dense(b.to_dense(), b.cls.arr, t, b.fset)
     out = ops.grouped_mp_gemm(ac, bc, c.cls.arr)
     dense = out.to_dense()[: c.shape[0], : c.shape[1]]
-    return MPMatrix.from_dense(dense, c.cls.arr, t)
+    return MPMatrix.from_dense(dense, c.cls.arr, t, c.fset)
 
 
 def _ksplit_weight(b: MPMatrix) -> KSplitWeight:
-    return KSplitWeight.from_dense(b.to_dense(), b.cls.arr[:, 0], b.tile)
+    return KSplitWeight.from_dense(b.to_dense(), b.cls.arr[:, 0], b.tile,
+                                   b.fset)
 
 
 def _finish_c(y, c: MPMatrix, alpha, beta):
     out = alpha * y
     if beta != 0.0:
         out = out + beta * c.to_dense()
-    return MPMatrix.from_dense(out, c.cls.arr, c.tile)
+    return MPMatrix.from_dense(out, c.cls.arr, c.tile, c.fset)
 
 
 def _exec_ksplit_xla(plan, a, b, c, alpha, beta):
@@ -138,11 +139,10 @@ def _exec_ksplit_xla(plan, a, b, c, alpha, beta):
 def _exec_ksplit_pallas(plan, a, b, c, alpha, beta):
     w = _ksplit_weight(b)
     x = a.to_dense()
-    # the kernel consumes x with class-contiguous K columns
-    idx_hi, idx_lo, _ = KSplitWeight.k_partition(w.k_cls.arr, w.tile)
+    # the kernel consumes x with class-contiguous K columns (storage order)
+    parts = KSplitWeight.k_partition(w.k_cls.arr, w.tile, w.fset)
     xp = jnp.concatenate(
-        [x[:, jnp.asarray(idx)] for idx in (idx_hi, idx_lo) if len(idx)],
-        axis=-1)
+        [x[:, jnp.asarray(idx)] for idx in parts if len(idx)], axis=-1)
     y = ops.ksplit_matmul_kernel(xp, w, bm=plan.bm, bn=plan.bn, bk=plan.bk)
     return _finish_c(y, c, alpha, beta)
 
@@ -218,15 +218,18 @@ _LINEAR_PATHS = ("ksplit_xla", "ksplit_pallas")
 
 def linear_problem(w: KSplitWeight, m: int) -> GemmProblem:
     k_cls = w.k_cls.arr
-    bh = float((k_cls == int(PrecClass.HIGH)).mean())
-    b8 = float((k_cls == int(PrecClass.LOW8)).mean())
+    fset = w.fset
+    bh = float((k_cls == fset.high).mean())
+    b8 = (float((k_cls == fset.low8).mean())
+          if fset.low8 is not None else 0.0)
     k, n = w.shape
     return GemmProblem(
         m=int(m), n=n, k=k, tile=w.tile, op="linear",
         a_high=0.0, a_low8=0.0, b_high=bh, b_low8=b8,
         c_high=0.0, c_low8=0.0, b_k_constant=True,
-        c_classes=(_LOW,), has_low8=bool(b8),
-        alpha_one=True, beta_zero=True, pad_free=True)
+        c_classes=(fset.low,), has_low8=bool(b8),
+        alpha_one=True, beta_zero=True, pad_free=True,
+        formats=fset.key())
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -268,10 +271,9 @@ def linear_matmul(x, w: KSplitWeight):
     key = S.plan_key(dev, prob)
     plan = _REGISTRY.get(key) or S.default_cache().get(key)
     # the kernel path assumes x's K columns are class-contiguous, which
-    # holds iff the K-class vector is sorted HIGH->LOW (ratio policies);
-    # data-driven unsorted maps stay on the gathering XLA path.
+    # holds iff the K-class vector is sorted by descending code (ratio
+    # policies); data-driven unsorted maps stay on the gathering XLA path.
     if (plan is not None and plan.path == "ksplit_pallas"
-            and not w.w_lo8.size
             and bool(np.all(np.diff(w.k_cls.arr) <= 0))
             and m % plan.bm == 0 and w.shape[1] % plan.bn == 0
             and w.tile % plan.bk == 0):
@@ -307,9 +309,8 @@ def tune_linear_params(params, m_hint: int, *, measure: bool = False,
             plan, _ = resolve_plan(prob, dev, _LINEAR_PATHS)
         else:
             x = jnp.zeros((m_hint, w.shape[0]), jnp.bfloat16)
-            idx_hi, idx_lo, _ = KSplitWeight.k_partition(w.k_cls.arr, w.tile)
 
-            def run(plan, x=x, w=w, idx_hi=idx_hi, idx_lo=idx_lo):
+            def run(plan, x=x, w=w):
                 if plan.path == "ksplit_pallas":
                     return ops.ksplit_matmul_kernel(
                         x, w, bm=plan.bm, bn=plan.bn, bk=plan.bk)

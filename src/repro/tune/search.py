@@ -23,12 +23,18 @@ from typing import Callable, Iterable
 
 import jax
 
+from repro.core.formats import DEFAULT_FORMATS, registry_signatures
 from repro.tune.costmodel import (GemmPlan, GemmProblem, PATHS, predict_time,
                                   validate_plan)
 from repro.tune.device import DeviceSpec, detect_device
 
 _DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache",
                               "repro-tune", "plans.json")
+
+#: persisted plan-cache schema.  v1 had no format-set segment in the keys
+#: and no registry stamps; v2 adds both so format-registry changes retire
+#: stale plans instead of mis-dispatching.
+CACHE_SCHEMA = 2
 
 
 def cache_path() -> str:
@@ -41,7 +47,21 @@ def cache_only() -> bool:
 
 def plan_key(dev: DeviceSpec, prob: GemmProblem) -> str:
     return (f"{dev.kind}|{prob.op}|M{prob.m}N{prob.n}K{prob.k}"
-            f"|t{prob.tile}|{prob.ratio_key()}|{prob.struct_key()}")
+            f"|t{prob.tile}|{prob.formats}|{prob.ratio_key()}"
+            f"|{prob.struct_key()}")
+
+
+def _key_formats(key: str) -> list[str]:
+    """Format names referenced by a v2 plan key (segment 4)."""
+    parts = key.split("|")
+    return parts[4].split("+") if len(parts) > 4 else []
+
+
+def _migrate_v1_key(key: str) -> str:
+    """v1 keys predate format sets: every plan was tuned on the default
+    set, so the upgrade inserts its segment after the tile."""
+    parts = key.split("|")
+    return "|".join(parts[:4] + [DEFAULT_FORMATS.key()] + parts[4:])
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +78,12 @@ class PlanCache:
         self.path = path or cache_path()
         self._mem: dict[str, GemmPlan] = {}
         self._meta: dict[str, dict] = {}
+        # plans whose formats are not registered *in this process* are never
+        # served, but they are preserved verbatim (entry + stamps) across
+        # save() so loading before a custom register_format() call cannot
+        # erase another process's tuning results from disk
+        self._shelved: dict[str, dict] = {}
+        self._shelved_stamps: dict[str, str] = {}
         self._loaded = False
 
     def _ensure_loaded(self) -> None:
@@ -71,7 +97,29 @@ class PlanCache:
                 raw = json.load(f)
         except (OSError, json.JSONDecodeError):
             return
+        schema = raw.get("schema", raw.get("version", 1))
+        stamps = raw.get("formats", {})
+        current = registry_signatures()
         for key, ent in raw.get("plans", {}).items():
+            if schema < 2:
+                key = _migrate_v1_key(key)
+            # targeted invalidation: a plan is served only while every
+            # format its key references still has the definition it was
+            # tuned against (v1 files carry no stamps — their formats are
+            # the unmodified builtins, so the current signature stands in)
+            names = _key_formats(key)
+            if any(stamps.get(n, current.get(n)) != current[n]
+                   for n in names if n in current):
+                continue   # format redefined since tuning → genuinely stale
+            unknown = [n for n in names if n not in current]
+            if unknown:
+                # format not registered (yet) in this process: shelve the
+                # entry and its stamps so save() round-trips it untouched
+                self._shelved[key] = dict(ent)
+                for n in unknown:
+                    if n in stamps:
+                        self._shelved_stamps[n] = stamps[n]
+                continue
             self._mem[key] = GemmPlan(path=ent["path"], bm=ent["bm"],
                                       bn=ent["bn"], bk=ent["bk"])
             self._meta[key] = {k: v for k, v in ent.items()
@@ -101,10 +149,13 @@ class PlanCache:
                    "bk": plan.bk}
             ent.update(self._meta.get(key, {}))
             plans[key] = ent
+        plans.update(self._shelved)   # preserve unknown-format plans
+        stamps = dict(self._shelved_stamps)
+        stamps.update(registry_signatures())
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"version": 1, "plans": plans}, f, indent=1,
-                      sort_keys=True)
+            json.dump({"schema": CACHE_SCHEMA, "formats": stamps,
+                       "plans": plans}, f, indent=1, sort_keys=True)
         os.replace(tmp, self.path)
 
     def __len__(self) -> int:

@@ -1,0 +1,393 @@
+"""Precision-format registry: extensibility end-to-end + round-trips.
+
+Covers the ISSUE-2 acceptance criteria: a new format registered in one
+place works through make_map → layout construction → mp_matmul dispatch →
+cost-model plan scoring; fp8_e5m2 and fp16 are exercised across all three
+layouts; storage round-trips match ``quantize_tile`` for every registered
+format.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (CompactMPMatrix, KSplitWeight, MPMatrix, Policy,
+                        make_map, mp_gemm_ref)
+from repro.core import precision as P
+from repro.core.formats import (DEFAULT_FORMATS, FormatSet, PrecisionFormat,
+                                format_set, get_format, register_format,
+                                registered_formats)
+
+E5M2_SET = format_set("fp8_e5m2", "bf16", "fp32")
+FP16_SET = format_set("fp16", "fp32")
+ALL_SETS = [DEFAULT_FORMATS, E5M2_SET, FP16_SET,
+            format_set("fp8_e5m2", "fp16", "fp32")]
+
+
+@pytest.fixture(autouse=True)
+def _isolate_tune_state(tmp_path, monkeypatch):
+    from repro.tune import dispatch as TD
+    from repro.tune import search as TS
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    monkeypatch.delenv("REPRO_TUNE_CACHE_ONLY", raising=False)
+    monkeypatch.delenv("REPRO_TUNE_DEVICE", raising=False)
+    TD.clear_registry()
+    TS._default_cache = None
+    yield
+    TD.clear_registry()
+    TS._default_cache = None
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_builtin_formats_registered():
+    names = set(registered_formats())
+    assert {"fp32", "bf16", "fp8_e4m3", "fp8_e5m2", "fp16"} <= names
+    assert get_format("fp32").dot_precision == jax.lax.Precision.HIGHEST
+    assert get_format("fp8_e5m2").bytes_per_elem == 1
+
+
+def test_register_is_idempotent_but_rejects_redefinition():
+    fmt = get_format("bf16")
+    assert register_format(fmt) is fmt  # identical re-register is fine
+    with pytest.raises(ValueError, match="different definition"):
+        register_format(PrecisionFormat(
+            name="bf16", storage_dtype=jnp.bfloat16,
+            compute_dtype=jnp.bfloat16, bytes_per_elem=3))
+
+
+def test_format_set_roles_and_codes():
+    assert DEFAULT_FORMATS.names == ("fp8_e4m3", "bf16", "fp32")
+    assert (DEFAULT_FORMATS.low8, DEFAULT_FORMATS.low,
+            DEFAULT_FORMATS.high) == (0, 1, 2)
+    assert FP16_SET.low8 is None
+    assert (FP16_SET.low, FP16_SET.high) == (0, 1)
+    assert DEFAULT_FORMATS.class_order == (2, 1, 0)
+    assert FormatSet.from_key(E5M2_SET.key()) == E5M2_SET
+    with pytest.raises(ValueError, match="ascending"):
+        format_set("fp32", "bf16")
+    with pytest.raises(KeyError):
+        format_set("fp4_imaginary", "fp32")
+
+
+def test_device_pass_costs_come_from_registry():
+    from repro.tune.device import DEVICE_TABLE
+    v5e, a100 = DEVICE_TABLE["tpu-v5e"], DEVICE_TABLE["gpu-a100"]
+    assert v5e.format_cost("fp32") == 3.0
+    assert a100.format_cost("fp32") == 2.0
+    assert a100.format_cost("fp8_e4m3") == 0.5
+    assert a100.format_cost("fp8_e5m2") == 0.5
+    # deprecated class_cost view stays consistent
+    assert v5e.class_cost[2] == 3.0 and v5e.class_cost[1] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# one-call extensibility: register → map → layout → dispatch → cost model
+# ---------------------------------------------------------------------------
+
+def test_new_format_registered_once_works_end_to_end():
+    register_format(
+        name="tf32_sim", storage_dtype=jnp.float32,
+        compute_dtype=jnp.bfloat16, bytes_per_elem=4,
+        pass_cost={"default": 1.0}, short="D")
+    fs = format_set("bf16", "tf32_sim")
+
+    M = K = N = 32
+    t = 8
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    pol = Policy(kind="ratio", ratio_high=0.5, seed=0)
+    pa = make_map((M, K), t, pol, fset=fs)
+    A = MPMatrix.from_dense(a, pa, t, fs)
+    B = MPMatrix.from_dense(b, make_map((K, N), t, pol, fset=fs), t, fs)
+
+    from repro.tune import mp_matmul
+    from repro.tune import dispatch as TD
+    out = mp_matmul(A, B)   # resolves through the cost model
+    ref = mp_gemm_ref(*TD.canonical_operands(A, B, None))
+    np.testing.assert_allclose(np.asarray(out.to_dense()),
+                               np.asarray(ref.to_dense()), atol=1e-4)
+    # the resolved plan is keyed by the new format set
+    prob = TD.problem_of(*TD.canonical_operands(A, B, None))
+    assert prob.formats == "bf16+tf32_sim"
+    from repro.tune import search as TS
+    from repro.tune.device import detect_device
+    assert "|bf16+tf32_sim|" in TS.plan_key(detect_device(), prob)
+
+
+@pytest.mark.parametrize("fs", [E5M2_SET, FP16_SET], ids=lambda f: f.key())
+def test_new_formats_through_every_dispatch_path(fs):
+    """fp8_e5m2 / fp16 flow through ref, tile, grouped and ksplit paths."""
+    from repro.tune import mp_matmul
+    from repro.tune.costmodel import GemmPlan
+    M, K, N, t = 16, 32, 16, 8
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    pol = Policy(kind="ratio", ratio_high=0.5, seed=3)
+    pa = make_map((M, K), t, pol, fset=fs)
+    pb = np.repeat(make_map((K, t), t, pol, fset=fs), N // t, axis=1)
+    pc = np.full((M // t, N // t), fs.low, np.int8)
+    A = MPMatrix.from_dense(a, pa, t, fs)
+    B = MPMatrix.from_dense(b, pb, t, fs)
+    C = MPMatrix.from_dense(jnp.zeros((M, N)), pc, t, fs)
+    ref = mp_gemm_ref(A, B, C)
+    for path in ("ref", "tile", "grouped", "ksplit_xla", "ksplit_pallas"):
+        plan = GemmPlan(path=path, bm=M if path == "ksplit_pallas" else t,
+                        bn=N if path == "ksplit_pallas" else t, bk=t)
+        out = mp_matmul(A, B, C, plan=plan)
+        scale = float(jnp.abs(ref.to_dense()).max()) + 1e-12
+        err = float(jnp.abs(out.to_dense() - ref.to_dense()).max())
+        assert err <= 3e-2 * scale, (fs.key(), path, err)
+
+
+def test_mplinear_with_new_formats():
+    from repro.core import init_mp_linear, ksplit_matmul
+    for fs in (E5M2_SET, FP16_SET):
+        pol = Policy(kind="ratio", ratio_high=0.5,
+                     ratio_low8=0.25 if fs.low8 is not None else 0.0)
+        lin = init_mp_linear(jax.random.PRNGKey(0), 64, 32, pol, tile=8,
+                             fset=fs)
+        assert lin.w.fset == fs
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+        y = lin(x)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ksplit_matmul(x, lin.w)),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_tune_linear_params_keys_carry_format_set():
+    """Serve/train setup path: tuning a non-default-format layer caches a
+    plan keyed by that format set (no cross-format plan reuse)."""
+    from repro.core import init_mp_linear
+    from repro.tune import dispatch as TD
+    lin = init_mp_linear(jax.random.PRNGKey(0), 64, 32,
+                         Policy(kind="ratio", ratio_high=0.5), tile=8,
+                         fset=FP16_SET)
+    plans = TD.tune_linear_params({"lin": lin}, m_hint=16)
+    (key, plan), = plans.items()
+    assert "|fp16+fp32|" in key
+    assert plan.path in ("ksplit_xla", "ksplit_pallas")
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+    from repro.core import ksplit_matmul
+    np.testing.assert_allclose(np.asarray(lin(x)),
+                               np.asarray(ksplit_matmul(x, lin.w)),
+                               rtol=2e-2, atol=1e-4)
+
+
+def test_model_config_formats_knob():
+    """ArchConfig.mp_formats threads a FormatSet through attention/MLP/head
+    weight construction."""
+    import dataclasses
+    from repro.configs.base import ArchConfig
+    from repro.models import common as C
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=32,
+                     n_heads=4, n_kv_heads=4, d_ff=64, vocab=64,
+                     mp_tile=8, mp_formats="fp16+fp32")
+    fs = FormatSet.from_key(cfg.mp_formats)
+    mlp = C.init_mlp(jax.random.PRNGKey(0), cfg.d_model, cfg.d_ff,
+                     cfg.mp_policy, cfg.mp_tile, fset=fs)
+    assert mlp["up"].w.fset == fs
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model))
+    y = C.mlp_block(mlp, x)
+    assert y.shape == (2, 4, cfg.d_model)
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# storage round-trips: from_dense → to_dense == quantize_tile, all layouts
+# ---------------------------------------------------------------------------
+
+def _tilewise_quantized(w, cls_map, t, fs):
+    mt, nt = cls_map.shape
+    exp = np.zeros((mt * t, nt * t), np.float32)
+    wp = np.zeros_like(exp)
+    wp[: w.shape[0], : w.shape[1]] = np.asarray(w, np.float32)
+    for i in range(mt):
+        for j in range(nt):
+            blk = jnp.asarray(wp[i*t:(i+1)*t, j*t:(j+1)*t])
+            exp[i*t:(i+1)*t, j*t:(j+1)*t] = np.asarray(
+                P.quantize_tile(blk, int(cls_map[i, j]), fs))
+    return exp[: w.shape[0], : w.shape[1]]
+
+
+@settings(max_examples=12, deadline=None)
+@given(mt=st.integers(1, 4), nt=st.integers(1, 4), seed=st.integers(0, 50),
+       which=st.integers(0, len(ALL_SETS) - 1))
+def test_roundtrip_matches_quantize_tile_dense_and_compact(mt, nt, seed,
+                                                           which):
+    fs = ALL_SETS[which]
+    t = 8
+    w = jax.random.normal(jax.random.PRNGKey(seed), (mt * t, nt * t))
+    rng = np.random.default_rng(seed)
+    cls = rng.integers(0, len(fs), size=(mt, nt)).astype(np.int8)
+    exp = _tilewise_quantized(w, cls, t, fs)
+    dense = MPMatrix.from_dense(w, cls, t, fs)
+    np.testing.assert_array_equal(np.asarray(dense.to_dense()), exp)
+    comp = CompactMPMatrix.from_dense(w, cls, t, fs)
+    np.testing.assert_array_equal(np.asarray(comp.to_dense()), exp)
+    # compact allocation is exactly the map's storage bytes
+    assert comp.storage_bytes() == P.map_storage_bytes(cls, t, fs)
+
+
+@settings(max_examples=12, deadline=None)
+@given(kt=st.integers(1, 6), seed=st.integers(0, 50),
+       which=st.integers(0, len(ALL_SETS) - 1))
+def test_roundtrip_matches_quantize_tile_ksplit(kt, seed, which):
+    fs = ALL_SETS[which]
+    t, n = 8, 16
+    w = jax.random.normal(jax.random.PRNGKey(seed), (kt * t, n))
+    rng = np.random.default_rng(seed)
+    k_cls = rng.integers(0, len(fs), size=kt).astype(np.int8)
+    ks = KSplitWeight.from_dense(w, k_cls, t, fs)
+    exp = _tilewise_quantized(
+        w, np.repeat(k_cls[:, None], n // t, axis=1), t, fs)
+    np.testing.assert_array_equal(np.asarray(ks.to_dense()), exp)
+    assert ks.storage_bytes() == sum(
+        t * n * fs.bytes_of(int(c)) for c in k_cls)
+
+
+def test_unknown_class_code_rejected_everywhere():
+    w = jnp.zeros((16, 16))
+    bad = np.full((2, 2), 7, np.int8)
+    for ctor in (MPMatrix.from_dense, CompactMPMatrix.from_dense):
+        with pytest.raises(ValueError, match="outside format set"):
+            ctor(w, bad, 8)
+    with pytest.raises(ValueError, match="outside format set"):
+        P.map_storage_bytes(bad, 8)
+
+
+# ---------------------------------------------------------------------------
+# plan cache: formats in keys, schema v2, migration, invalidation
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_v1_file_is_migrated(tmp_path):
+    from repro.tune import search as TS
+    v1 = {"version": 1, "plans": {
+        "cpu-interpret|mp_gemm|M64N64K64|t16|50D50S|50D50S|50D50S|a1b1k0p1c12":
+            {"path": "tile", "bm": 16, "bn": 16, "bk": 16,
+             "source": "measured"}}}
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps(v1))
+    cache = TS.PlanCache(str(path))
+    keys = cache.keys()
+    assert len(keys) == 1
+    assert "|fp8_e4m3+bf16+fp32|" in keys[0]
+    assert cache.get(keys[0]).path == "tile"
+    cache.save()
+    saved = json.loads(path.read_text())
+    assert saved["schema"] == 2
+    assert "fp32" in saved["formats"]
+
+
+def test_plan_cache_drops_plans_of_redefined_formats(tmp_path):
+    from repro.tune import search as TS
+    key = ("cpu-interpret|mp_gemm|M64N64K64|t16|fp8_e4m3+bf16+fp32"
+           "|50D50S|50D50S|50D50S|a1b1k0p1c12")
+    stale = {"schema": 2,
+             "formats": {"bf16": "bf16:OLD-DEFINITION"},
+             "plans": {key: {"path": "tile", "bm": 16, "bn": 16, "bk": 16}}}
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps(stale))
+    assert len(TS.PlanCache(str(path))) == 0   # bf16 stamp mismatch → dropped
+
+    fresh = dict(stale)
+    fresh["formats"] = {}   # no stamps recorded → current builtins assumed
+    path.write_text(json.dumps(fresh))
+    assert len(TS.PlanCache(str(path))) == 1
+
+
+def test_plan_cache_shelves_unknown_format_plans_across_save(tmp_path):
+    """Loading before a custom register_format() call must not erase that
+    format's persisted plans on the next save."""
+    from repro.tune import search as TS
+    known = ("cpu-interpret|mp_gemm|M64N64K64|t16|fp8_e4m3+bf16+fp32"
+             "|50D50S|50D50S|50D50S|a1b1k0p1c12")
+    custom = ("cpu-interpret|mp_gemm|M64N64K64|t16|bf16+fp99_custom"
+              "|50D50S|50D50S|50D50S|a1b1k0p1c1")
+    raw = {"schema": 2,
+           "formats": {"fp99_custom": "fp99_custom:some-signature"},
+           "plans": {
+               known: {"path": "tile", "bm": 16, "bn": 16, "bk": 16},
+               custom: {"path": "ref", "bm": 16, "bn": 16, "bk": 16}}}
+    path = tmp_path / "mixed.json"
+    path.write_text(json.dumps(raw))
+    cache = TS.PlanCache(str(path))
+    assert cache.get(known) is not None
+    assert cache.get(custom) is None          # not served in this process
+    cache.save()
+    saved = json.loads(path.read_text())
+    assert custom in saved["plans"]           # ...but preserved on disk
+    assert saved["formats"]["fp99_custom"] == "fp99_custom:some-signature"
+
+
+def test_legacy_tile_kernel_keeps_low8_c_tiles():
+    """The two-buffer mp_gemm_tile entry folds LOW8 C tiles into o_lo
+    instead of dropping them (seed parity)."""
+    import jax.numpy as jnp
+    from repro.kernels.mp_gemm_tile import mp_gemm_tile
+    t = 8
+    a = jax.random.normal(jax.random.PRNGKey(0), (t, t))
+    b = jax.random.normal(jax.random.PRNGKey(1), (t, t))
+    pa = np.full((1, 1), 2, np.int8)
+    pb = np.full((1, 1), 2, np.int8)
+    pc = np.full((1, 1), 0, np.int8)   # LOW8 output tile
+    A = MPMatrix.from_dense(a, pa, t)
+    B = MPMatrix.from_dense(b, pb, t)
+    C = MPMatrix.from_dense(jnp.zeros((t, t)), pc, t)
+    o_hi, o_lo = mp_gemm_tile(A.hi, A.lo, B.hi, B.lo, C.hi, C.lo,
+                              jnp.asarray(pa), jnp.asarray(pb),
+                              jnp.asarray(pc), tile=t, interpret=True)
+    got = np.asarray(o_hi + o_lo.astype(jnp.float32))
+    exp = np.asarray(
+        (jnp.asarray(a).astype(jnp.bfloat16).astype(jnp.float32)
+         @ jnp.asarray(b).astype(jnp.bfloat16).astype(jnp.float32))
+        .astype(jnp.float8_e4m3fn).astype(jnp.float32))
+    np.testing.assert_allclose(got, exp, rtol=2e-1, atol=2e-1)
+    assert np.abs(got).max() > 0.0
+
+
+def test_grouped_gemm_rejects_unknown_c_codes():
+    from repro.kernels.grouped_gemm import grouped_mp_gemm
+    a = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+    A = CompactMPMatrix.from_dense(a, np.full((2, 2), 1, np.int8), 8)
+    with pytest.raises(ValueError, match="outside format set"):
+        grouped_mp_gemm(A, A, np.full((2, 2), 5, np.int8), interpret=True)
+
+
+def test_plan_keys_distinguish_format_sets():
+    from repro.tune import search as TS
+    from repro.tune.costmodel import GemmProblem
+    from repro.tune.device import DEVICE_TABLE
+    dev = DEVICE_TABLE["cpu-interpret"]
+    base = dict(m=64, n=64, k=64, tile=16)
+    k_default = TS.plan_key(dev, GemmProblem(**base))
+    k_e5m2 = TS.plan_key(dev, GemmProblem(**base, formats=E5M2_SET.key()))
+    assert k_default != k_e5m2
+
+
+# ---------------------------------------------------------------------------
+# cost model sees per-format bytes and pass costs
+# ---------------------------------------------------------------------------
+
+def test_cost_model_scores_new_formats():
+    from repro.tune.costmodel import GemmPlan, GemmProblem, predict_time
+    from repro.tune.device import DEVICE_TABLE
+    v5e = DEVICE_TABLE["tpu-v5e"]
+    plan = GemmPlan(path="ksplit_xla")
+    lo = GemmProblem(m=2048, n=2048, k=2048, tile=256, b_k_constant=True,
+                     formats=FP16_SET.key(), b_high=0.0)
+    hi = GemmProblem(m=2048, n=2048, k=2048, tile=256, b_k_constant=True,
+                     formats=FP16_SET.key(), b_high=1.0)
+    t_lo = predict_time(plan, lo, v5e)
+    t_hi = predict_time(plan, hi, v5e)
+    # fp32 B blocks cost 3 MXU passes on v5e vs fp16's 1
+    assert t_hi["compute_s"] / t_lo["compute_s"] == pytest.approx(3.0)
+    # byte model follows the registered formats: fp16 = 2 B, fp32 = 4 B
+    assert lo.bytes_per_elem(0.0, 0.0) == 2.0
+    assert lo.bytes_per_elem(1.0, 0.0) == 4.0
+    assert GemmProblem(m=8, n=8, k=8, tile=8).stream_bytes_per_elem() == 7.0

@@ -64,6 +64,39 @@ def test_low8_maps():
     assert s == "25D:50S:25Q"
 
 
+@settings(max_examples=50, deadline=None)
+@given(n_hi=st.integers(0, 7), n_lo=st.integers(0, 7), n_lo8=st.integers(0, 7))
+def test_ratio_string_components_always_sum_to_100(n_hi, n_lo, n_lo8):
+    """Regression: per-component round() can misallocate percentages on
+    small grids; largest-remainder apportionment must sum to exactly 100
+    with every component within 1 of its exact value."""
+    total = n_hi + n_lo + n_lo8
+    if total == 0:
+        return
+    m = np.array([2] * n_hi + [1] * n_lo + [0] * n_lo8, np.int8)
+    m = m.reshape(1, total)
+    s = P.map_ratio_string(m)
+    parts = {seg[-1]: int(seg[:-1]) for seg in s.split(":")}
+    assert sum(parts.values()) == 100, s
+    exact = {"D": 100 * n_hi / total, "S": 100 * n_lo / total,
+             "Q": 100 * n_lo8 / total}
+    for tag, val in parts.items():
+        assert abs(val - exact[tag]) < 1.0, (s, exact)
+
+
+def test_ratio_string_small_grid_regression():
+    # 1×3 grid, one tile per class: naive rounding gives 33+33+33 = 99
+    m = np.array([[2, 1, 0]], np.int8)
+    s = P.map_ratio_string(m)
+    assert sum(int(seg[:-1]) for seg in s.split(":")) == 100
+
+
+def test_map_storage_bytes_rejects_unknown_class():
+    m = np.array([[0, 1], [2, 5]], np.int8)   # 5 is not a registered code
+    with pytest.raises(ValueError, match="outside format set"):
+        P.map_storage_bytes(m, 8)
+
+
 def test_quantize_tile_roundtrip():
     import jax.numpy as jnp
     x = jnp.asarray(np.random.default_rng(1).normal(size=(8, 8)),
