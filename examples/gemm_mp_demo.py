@@ -14,11 +14,12 @@ import numpy as np
 from repro.core import MPMatrix, mp_gemm_ref, schedule
 from repro.core.precision import PAPER_RATIOS
 from repro.core.summa import summa_collective_bytes, summa_mp_gemm
+from repro.launch.mesh import make_grid_mesh
 
 P = Q = 2
 M = K = N = 128
 T = 16
-mesh = jax.make_mesh((P, Q), ("row", "col"))
+mesh = make_grid_mesh(P, Q)
 a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
 b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
 

@@ -63,6 +63,11 @@ class ArchConfig:
     #: Governs the dense stack (attention / MLP / lm_head); the batched
     #: MoE and Mamba split weights currently stay on the default set.
     mp_formats: str = "fp8_e4m3+bf16+fp32"
+    #: optional (P, Q) device grid for the distributed SUMMA path: when set,
+    #: the train launcher / serve engine run the launch-time SUMMA
+    #: self-check at this config's tile/policy/format set and warm the
+    #: distributed plan key (``--summa PxQ`` overrides from the CLI).
+    summa_grid: Optional[tuple] = None
     # --- training ------------------------------------------------------------
     remat: bool = True
     norm_eps: float = 1e-6

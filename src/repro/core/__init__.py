@@ -13,6 +13,10 @@ from repro.core.mp_gemm import (model_flops, mp_gemm_ref, mp_gemm_tilewise_ref,
                                 mxu_weighted_flops)
 from repro.core.linear import MPLinear, choose_tile, init_mp_linear, split_cls
 from repro.core import schedule
+from repro.core.accuracy import (class_error_bounds, check_against_fp64,
+                                 error_scale, unit_roundoff)
+from repro.core.summa import (config_selfcheck, summa_collective_bytes,
+                              summa_mp_gemm, summa_selfcheck)
 
 __all__ = [
     "DEFAULT_FORMATS", "FormatSet", "PrecisionFormat", "format_set",
@@ -22,4 +26,8 @@ __all__ = [
     "NSplitWeight", "ksplit_matmul", "nsplit_matmul", "model_flops",
     "mp_gemm_ref", "mp_gemm_tilewise_ref", "mxu_weighted_flops", "MPLinear",
     "choose_tile", "init_mp_linear", "split_cls", "schedule",
+    "class_error_bounds", "check_against_fp64", "error_scale",
+    "unit_roundoff",
+    "config_selfcheck", "summa_collective_bytes", "summa_mp_gemm",
+    "summa_selfcheck",
 ]

@@ -1,0 +1,116 @@
+"""Registry-derived forward-error bounds — accuracy oracles for the tests.
+
+HPL-MxP pairs every mixed-precision benchmark number with an explicit
+accuracy-verification story, and SGEMM-cube derives precision-recovery error
+bounds that double as test oracles.  This module does the same for the
+tile-centric GEMM: from nothing but the registered
+:class:`~repro.core.formats.PrecisionFormat` dtypes it derives a per-C-class
+forward-error bound against an fp64 reference that every execution path
+(the five single-device dispatch paths *and* distributed SUMMA) must satisfy.
+
+Model (standard rounding-error analysis, round-to-nearest):
+
+    Ĉ(i,j) = fl_store( Σ_l fl_op(Â(i,l)) · fl_op(B̂(l,j)) )       with
+    Â = fl_storeA(A),  B̂ = fl_storeB(B),  fp32 accumulation.
+
+    |Ĉ - C_fp64|(i,j)  ≤  bound[cls_C(i,j)] · (|A|·|B| + |β|·|C|)(i,j)
+
+    bound[c] = safety · (u_A + u_B + 2·u_op(c) + K·u_fp32 + u_store(c))
+
+where ``u(dtype) = 2^-(mantissa_bits + 1)`` is the unit roundoff, ``u_A``/
+``u_B`` are the worst storage roundoffs over the classes present in the A/B
+maps, and ``u_op(c)`` is the worst operational-precision roundoff the class
+can execute at: its own compute dtype on the C-class-driven paths
+(ref/tile/grouped/SUMMA) or any B-class compute dtype on the K-split paths.
+The ``safety`` factor absorbs higher-order terms and subnormal storage
+rounding; the bound is deliberately conservative — it is an oracle that
+catches mis-dispatch (wrong dtype, wrong precision flag, dropped tiles), not
+a tight estimate.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
+
+#: default slack over the first-order bound (higher-order terms, subnormals)
+DEFAULT_SAFETY = 4.0
+
+
+def unit_roundoff(dtype) -> float:
+    """u = 2^-(p) for a binary float with p = mantissa_bits + 1 significant
+    bits: fp32 → 2^-24, bf16 → 2^-8, fp16 → 2^-11, fp8e4m3 → 2^-4,
+    fp8e5m2 → 2^-3.  Derived from the dtype itself, so any registered
+    format is covered automatically."""
+    info = jnp.finfo(jnp.dtype(dtype))
+    return float(2.0 ** -(int(info.nmant) + 1))
+
+
+def _worst_storage_u(cls_map: np.ndarray, fset: FormatSet) -> float:
+    return max(unit_roundoff(fset.storage_dtype(int(c)))
+               for c in np.unique(np.asarray(cls_map)))
+
+
+def class_error_bounds(pa: np.ndarray, pb: np.ndarray, pc: np.ndarray,
+                       k: int, fset: FormatSet = DEFAULT_FORMATS,
+                       safety: float = DEFAULT_SAFETY) -> dict[int, float]:
+    """Per-C-class relative forward-error bound vs an fp64 reference.
+
+    ``k`` is the contraction extent in *elements*.  Valid for every dispatch
+    path and for distributed SUMMA (whose per-step fp32 partial-sum
+    accumulation is covered by the K·u_fp32 term).
+    """
+    pa, pb, pc = (np.asarray(p) for p in (pa, pb, pc))
+    u32 = unit_roundoff(jnp.float32)
+    u_a = _worst_storage_u(pa, fset)
+    u_b = _worst_storage_u(pb, fset)
+    # K-split paths compute at the B K-block class's precision
+    u_op_b = max(unit_roundoff(fset.fmt(int(c)).compute_dtype)
+                 for c in np.unique(pb))
+    out: dict[int, float] = {}
+    for c in np.unique(pc):
+        fmt = fset.fmt(int(c))
+        u_op = max(unit_roundoff(fmt.compute_dtype), u_op_b)
+        u_store = unit_roundoff(fmt.storage_dtype)
+        out[int(c)] = safety * (u_a + u_b + 2.0 * u_op + k * u32 + u_store)
+    return out
+
+
+def error_scale(a: np.ndarray, b: np.ndarray, c: np.ndarray | None = None,
+                beta: float = 0.0) -> np.ndarray:
+    """Per-element magnitude the relative bounds scale by:
+    (|A|·|B|)(i,j) + |β|·|C|(i,j), computed in fp64."""
+    s = np.abs(np.asarray(a, np.float64)) @ np.abs(np.asarray(b, np.float64))
+    if beta and c is not None:
+        s = s + abs(beta) * np.abs(np.asarray(c, np.float64))
+    return s
+
+
+def check_against_fp64(out_dense, a, b, c, pa: np.ndarray, pb: np.ndarray,
+                       pc: np.ndarray, tile: int,
+                       fset: FormatSet = DEFAULT_FORMATS, *,
+                       alpha: float = 1.0, beta: float = 0.0,
+                       safety: float = DEFAULT_SAFETY) -> dict:
+    """Compare a path's output (dense fp32) against the fp64 reference
+    ``α·A·B + β·C`` under the registry-derived bounds.  ``a``/``b``/``c``
+    are the *exact* (pre-storage-rounding) dense operands.  Returns a report
+    with the worst bound-normalized error per C class (``ok`` iff all ≤ 1)."""
+    a64 = np.asarray(a, np.float64)
+    b64 = np.asarray(b, np.float64)
+    c64 = (np.zeros((a64.shape[0], b64.shape[1])) if c is None
+           else np.asarray(c, np.float64))
+    exact = alpha * (a64 @ b64) + beta * c64
+    err = np.abs(np.asarray(out_dense, np.float64) - exact)
+    scale = abs(alpha) * error_scale(a64, b64, c64, beta) + 1e-30
+    bounds = class_error_bounds(pa, pb, pc, a64.shape[1], fset, safety)
+    sel = np.repeat(np.repeat(np.asarray(pc), tile, 0), tile, 1)
+    sel = sel[: err.shape[0], : err.shape[1]]
+    worst = {}
+    for cls, bound in bounds.items():
+        mask = sel == cls
+        if not mask.any():
+            continue
+        worst[cls] = float((err[mask] / (bound * scale[mask])).max())
+    return {"worst_ratio": worst, "bounds": bounds,
+            "ok": all(v <= 1.0 for v in worst.values())}

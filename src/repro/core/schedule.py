@@ -47,8 +47,10 @@ def balanced_ratio_map(mt: int, nt: int, policy: Policy,
                        fset: FormatSet = DEFAULT_FORMATS) -> np.ndarray:
     """Random map whose class counts are identical in every
     (mt/row_groups × nt/col_groups) group of tiles."""
-    assert mt % row_groups == 0 and nt % col_groups == 0, (
-        f"groups {row_groups}x{col_groups} must divide tile grid {mt}x{nt}")
+    if mt % row_groups or nt % col_groups:
+        raise ValueError(
+            f"shard groups {row_groups}x{col_groups} must divide the tile "
+            f"grid {mt}x{nt}")
     rg, cg = mt // row_groups, nt // col_groups
     n_hi, n_lo, n_lo8 = _exact_counts(rg * cg, *_policy_ratios(policy))
     rng = np.random.default_rng(policy.seed)
@@ -74,7 +76,11 @@ def sorted_balanced_map(mt: int, nt: int, policy: Policy, axis: int,
     independently (so every shard's slice is class-contiguous)."""
     panel_len = mt if axis == 0 else nt
     n_panels = nt if axis == 0 else mt
-    assert panel_len % groups == 0
+    if panel_len % groups:
+        raise ValueError(
+            f"sorted_balanced_map: {groups} shard groups must divide the "
+            f"panel length {panel_len} (axis={axis}); pick a tile grid that "
+            f"is a multiple of the device-grid extent")
     seg = panel_len // groups
     n_hi, n_lo, n_lo8 = _exact_counts(seg, *_policy_ratios(policy))
     col = role_class_vector(n_hi, n_lo, n_lo8, fset)
@@ -96,6 +102,18 @@ def class_counts_per_group(cls_map: np.ndarray, row_groups: int,
             for c in fset.codes:
                 out[i, j, c] = int((blk == c).sum())
     return out
+
+
+def is_shard_balanced(cls_map: np.ndarray, row_groups: int, col_groups: int,
+                      fset: FormatSet = DEFAULT_FORMATS) -> bool:
+    """True when every shard group holds identical per-class tile counts —
+    the invariant the grouped SUMMA local update needs for a static kernel
+    grid (``balanced_ratio_map`` with matching groups guarantees it)."""
+    cls_map = np.asarray(cls_map)
+    if cls_map.shape[0] % row_groups or cls_map.shape[1] % col_groups:
+        return False
+    counts = class_counts_per_group(cls_map, row_groups, col_groups, fset)
+    return bool((counts == counts[0, 0]).all())
 
 
 def shard_costs(cls_map: np.ndarray, row_groups: int, col_groups: int,

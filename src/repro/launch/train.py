@@ -25,6 +25,9 @@ def _parse():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="", help="e.g. 2x2 (data x model)")
+    ap.add_argument("--summa", default="",
+                    help="distributed-SUMMA self-check grid, e.g. 2x2 "
+                         "(defaults to the arch's summa_grid)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--inject-fault", type=int, default=-1)
@@ -48,6 +51,18 @@ def main():
     cfg = get(args.arch)
     if args.smoke:
         cfg = reduced(cfg, tp=2)
+
+    grid = (tuple(int(v) for v in args.summa.lower().split("x"))
+            if args.summa else cfg.summa_grid)
+    if grid:
+        # validate the distributed SUMMA path (and warm its plan key) at
+        # this config's tile/policy/format set before training starts
+        from repro.core.summa import config_selfcheck
+        rep = config_selfcheck(cfg, grid)
+        print(f"SUMMA self-check {rep['grid']} [{rep['formats']}]: "
+              f"local path {rep['local_path']} ({rep['plan_source']}), "
+              f"rel err {rep['rel_err']:.2e}, "
+              f"wire {rep['wire_bytes_per_elem']:.2f} B/elem")
 
     ocfg = adamw.AdamWConfig(lr_peak=args.lr, warmup_steps=min(
         20, args.steps // 5), total_steps=args.steps)

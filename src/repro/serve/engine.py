@@ -49,7 +49,8 @@ def _prefill_with_cache(params, cfg: ArchConfig, tokens, caches):
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
-                 max_seq: int = 256, rng_seed: int = 0):
+                 max_seq: int = 256, rng_seed: int = 0,
+                 summa_grid: Optional[tuple] = None):
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
         # tune-once at setup: resolve a GEMM plan for every mixed-precision
@@ -58,6 +59,14 @@ class Engine:
         from repro.tune import dispatch as _tune
         _tune.warm_registry()
         self.gemm_plans = _tune.tune_linear_params(params, m_hint=max_batch)
+        # distributed SUMMA path (selectable from ArchConfig or explicitly):
+        # validate it against the single-device reference at this config's
+        # tile/policy/format set and warm the distributed plan key.
+        self.summa_report = None
+        grid = summa_grid or cfg.summa_grid
+        if grid:
+            from repro.core.summa import config_selfcheck
+            self.summa_report = config_selfcheck(cfg, grid)
         self._decode = jax.jit(
             lambda p, t, c, pos: T.forward_decode(p, cfg, t, c, pos))
         self._prefill = jax.jit(

@@ -24,7 +24,9 @@ from repro.tune.costmodel import (GemmPlan, GemmProblem, predict_time,
 from repro.tune.search import PlanCache, autotune, measure, candidate_plans
 from repro.tune.dispatch import (mp_matmul, resolve_plan, clear_registry,
                                  register_plan, tune_linear_params,
-                                 warm_registry)
+                                 warm_registry, summa_mp_matmul,
+                                 summa_problem, resolve_summa_plan,
+                                 autotune_summa, SUMMA_PATHS)
 
 __all__ = [
     "DeviceSpec", "detect_device", "device_table",
@@ -33,4 +35,6 @@ __all__ = [
     "PlanCache", "autotune", "measure", "candidate_plans",
     "mp_matmul", "resolve_plan", "clear_registry", "register_plan",
     "tune_linear_params", "warm_registry",
+    "summa_mp_matmul", "summa_problem", "resolve_summa_plan",
+    "autotune_summa", "SUMMA_PATHS",
 ]

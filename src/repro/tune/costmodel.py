@@ -49,6 +49,10 @@ class GemmProblem:
     n: int
     k: int
     tile: int
+    #: operation tag.  ``mp_gemm``/``linear`` are single-device; distributed
+    #: SUMMA problems use ``summa{P}x{Q}`` (the mesh shape is part of the
+    #: plan-cache identity; ``m``/``n`` are then *per-shard* extents, and a
+    #: ``!ub`` suffix marks a C map that is not shard-balanced)
     op: str = "mp_gemm"
     # per-operand role fractions (D and Q; S is the remainder)
     a_high: float = 0.0
@@ -163,6 +167,10 @@ def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
     bad: list[str] = []
     if plan.path not in PATHS:
         return [f"unknown path {plan.path!r}"]
+    is_summa = prob.op.startswith("summa")
+    if is_summa and plan.path not in ("ref", "grouped"):
+        return [f"SUMMA local update supports ref/grouped, not "
+                f"{plan.path!r}"]
     m, n, k, t = prob.m, prob.n, prob.k, prob.tile
     if plan.path == "ref":
         return bad  # always executable (it is the semantic oracle)
@@ -180,7 +188,13 @@ def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
         if k % t:
             bad.append(f"K={k} not a multiple of tile={t}")
     if plan.path == "grouped":
-        if not (prob.alpha_one and prob.beta_zero):
+        if is_summa:
+            # the SUMMA scan applies alpha/beta outside the per-step kernel,
+            # but a static kernel grid needs equal per-shard C class counts
+            if prob.op.endswith("!ub"):
+                bad.append("grouped SUMMA local update needs a "
+                           "shard-balanced C map")
+        elif not (prob.alpha_one and prob.beta_zero):
             bad.append("grouped path computes C=A·B (alpha=1, beta=0)")
     if plan.path == "ksplit_pallas":
         if not prob.beta_zero:

@@ -166,15 +166,13 @@ def execute_plan(plan: GemmPlan, a: MPMatrix, b: MPMatrix, c: MPMatrix,
 # Plan resolution + public entry point
 # ---------------------------------------------------------------------------
 
-def resolve_plan(prob: GemmProblem, dev: DeviceSpec | None = None,
-                 paths: Iterable[str] = PATHS) -> tuple[GemmPlan, str]:
-    """registry > persisted cache > cost-model best.  Returns (plan, source).
-    Never measures — resolution must be cheap enough for trace time."""
-    dev = dev or detect_device()
+def _lookup_plan(prob: GemmProblem, dev: DeviceSpec
+                 ) -> tuple[GemmPlan, str] | None:
+    """Shared registry → persisted-cache lookup.  A stored plan is only
+    served if it is still valid for THIS problem (belt-and-braces on top of
+    the struct_key: registry entries can be hand-registered, and cache
+    files can come from other builds)."""
     key = S.plan_key(dev, prob)
-    # a stored plan is only served if it is still valid for THIS problem
-    # (belt-and-braces on top of the struct_key: registry entries can be
-    # hand-registered, and cache files can come from other builds)
     plan = _REGISTRY.get(key)
     if plan is not None and not validate_plan(plan, prob, dev):
         return plan, "registry"
@@ -182,6 +180,18 @@ def resolve_plan(prob: GemmProblem, dev: DeviceSpec | None = None,
     if plan is not None and not validate_plan(plan, prob, dev):
         _REGISTRY[key] = plan
         return plan, "cache"
+    return None
+
+
+def resolve_plan(prob: GemmProblem, dev: DeviceSpec | None = None,
+                 paths: Iterable[str] = PATHS) -> tuple[GemmPlan, str]:
+    """registry > persisted cache > cost-model best.  Returns (plan, source).
+    Never measures — resolution must be cheap enough for trace time."""
+    dev = dev or detect_device()
+    key = S.plan_key(dev, prob)
+    hit = _lookup_plan(prob, dev)
+    if hit is not None:
+        return hit
     ranked = S.rank_plans(S.candidate_plans(prob, dev, paths), prob, dev)
     if not ranked:
         raise ValueError(f"no valid plan for {key}")
@@ -207,6 +217,92 @@ def mp_matmul(a: MPMatrix, b: MPMatrix, c: MPMatrix | None = None, *,
         if bad:
             raise ValueError(f"plan {plan.key()} invalid: {bad}")
     return execute_plan(plan, a, b, c, alpha=alpha, beta=beta)
+
+
+# ---------------------------------------------------------------------------
+# Distributed SUMMA integration (op = "summa{P}x{Q}")
+# ---------------------------------------------------------------------------
+
+#: local-update paths of the distributed SUMMA rank-update
+SUMMA_PATHS = ("ref", "grouped")
+
+
+def summa_problem_from_maps(pa, pb, pc, tile: int, P: int, Q: int,
+                            fset=None, *, alpha: float = 1.0,
+                            beta: float = 0.0,
+                            pad_free: bool = True) -> GemmProblem:
+    """Distributed plan-key problem from raw class maps (benchmarks lower
+    SUMMA from maps without materializing operands).
+
+    The key carries the mesh shape (in the op tag), the *per-shard* M/N
+    extents (tile counts × tile), the full K, and the format-set tag, so a
+    plan tuned for one grid/shape/format combination is never served to
+    another.  A ``!ub`` op suffix marks C maps that are not shard-balanced
+    (the grouped local path is invalid for those)."""
+    from repro.core import schedule
+    from repro.core.formats import DEFAULT_FORMATS
+    fset = fset or DEFAULT_FORMATS
+    prob = GemmProblem.from_maps(pa, pb, pc, tile, alpha=alpha, beta=beta,
+                                 pad_free=pad_free, fset=fset)
+    balanced = schedule.is_shard_balanced(pc, P, Q, fset)
+    op = f"summa{P}x{Q}" + ("" if balanced else "!ub")
+    return dataclasses.replace(prob, op=op, m=prob.m // P, n=prob.n // Q)
+
+
+def summa_problem(a: MPMatrix, b: MPMatrix, c: MPMatrix, mesh,
+                  axes=("row", "col"), *, alpha: float = 1.0,
+                  beta: float = 0.0) -> GemmProblem:
+    """Distributed plan-key problem for a SUMMA GEMM on ``mesh``
+    (see summa_problem_from_maps for the key anatomy)."""
+    row_ax, col_ax = tuple(axes)
+    P, Q = mesh.shape[row_ax], mesh.shape[col_ax]
+    base = problem_of(a, b, c, alpha=alpha, beta=beta)
+    return summa_problem_from_maps(
+        a.cls.arr, b.cls.arr, c.cls.arr, a.tile, P, Q, a.fset,
+        alpha=alpha, beta=beta, pad_free=base.pad_free)
+
+
+def resolve_summa_plan(prob: GemmProblem, dev: DeviceSpec | None = None
+                       ) -> tuple[GemmPlan, str]:
+    """registry > persisted cache > reference path.
+
+    Unlike single-device resolution there is no cost-model fallback: the
+    grouped Pallas local update runs only when a tuned plan exists for this
+    (mesh, per-shard shape, format set) key; otherwise the reference
+    one-dot-per-C-class update is used."""
+    dev = dev or detect_device()
+    hit = _lookup_plan(prob, dev)
+    if hit is not None:
+        return hit
+    t = prob.tile
+    return GemmPlan(path="ref", bm=t, bn=t, bk=t), "default"
+
+
+def summa_mp_matmul(a: MPMatrix, b: MPMatrix, c: MPMatrix | None = None, *,
+                    mesh, axes=("row", "col"), alpha: float = 1.0,
+                    beta: float = 0.0, plan: GemmPlan | None = None
+                    ) -> MPMatrix:
+    """Distributed twin of :func:`mp_matmul`: C ← α·A·B + β·C over ``mesh``
+    with the local rank-update routed through the plan registry/cache."""
+    from repro.core.summa import summa_mp_gemm
+    return summa_mp_gemm(a, b, c, mesh=mesh, axes=axes, alpha=alpha,
+                         beta=beta, plan=plan)
+
+
+def autotune_summa(a: MPMatrix, b: MPMatrix, c: MPMatrix | None = None, *,
+                   mesh, axes=("row", "col"), alpha: float = 1.0,
+                   beta: float = 0.0, **kw) -> GemmPlan:
+    """Measure the SUMMA local-update candidates (ref vs grouped) on this
+    mesh and persist the winner under the distributed plan key."""
+    from repro.core.summa import summa_mp_gemm
+    a, b, c = canonical_operands(a, b, c)
+    prob = summa_problem(a, b, c, mesh, axes, alpha=alpha, beta=beta)
+    plan, _ = S.autotune_problem(
+        prob,
+        lambda p: summa_mp_gemm(a, b, c, mesh=mesh, axes=axes, alpha=alpha,
+                                beta=beta, plan=p).bufs,
+        paths=SUMMA_PATHS, **kw)
+    return plan
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,16 @@
-"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device;
-multi-device tests spawn subprocesses that set the flag themselves."""
+"""Shared test fixtures.
+
+Multi-device policy: this conftest forces 4 host CPU devices through
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (jax reads the flag
+lazily, at first backend initialization) so the distributed SUMMA tests can
+run in-process on 2×2 / 1×4 / 4×1 grids.  Single-device semantics are
+unchanged — unsharded ops still run on device 0 — and subprocess-based
+tests (checkpoint, legacy summa) set their own flags.  When the flag cannot
+take effect (the backend was already initialized with fewer devices, or an
+explicit XLA_FLAGS pinned another count), multi-device tests auto-skip via
+the ``host_grid_devices`` fixture; ``launch.mesh`` raises a descriptive
+error instead of jax's opaque one.
+"""
 import os
 import sys
 
@@ -8,7 +19,38 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+HOST_DEVICES = 4
+_FLAG = f"--xla_force_host_platform_device_count={HOST_DEVICES}"
+
+
+def _force_host_devices() -> None:
+    if "xla_force_host_platform_device_count" in os.environ.get(
+            "XLA_FLAGS", ""):
+        return  # respect an explicit setting (e.g. the CI multi-device lane)
+    try:
+        from jax._src import xla_bridge as xb
+        initialized = xb.backends_are_initialized()
+    except Exception:  # private API moved — don't guess, leave env alone
+        return
+    if not initialized:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+
+_force_host_devices()
+
 import jax  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def host_grid_devices() -> int:
+    """≥ 4 host devices, else skip (the force flag must land before jax's
+    backend initializes; it cannot be applied retroactively)."""
+    if jax.device_count() < HOST_DEVICES:
+        pytest.skip(
+            f"needs {HOST_DEVICES} host devices — run with XLA_FLAGS="
+            f"{_FLAG} set before jax initializes")
+    return jax.device_count()
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,244 @@
+"""fp64-reference error-bound oracle (HPL-MxP / SGEMM-cube style).
+
+``repro.core.accuracy`` derives a per-FormatSet forward-error bound from
+nothing but the registered dtypes; these tests assert that all five
+single-device dispatch paths *and* distributed SUMMA stay within it across
+sizes and D/S/Q ratios (property-style loops via tests/_hypothesis_compat,
+since hypothesis is unavailable), and that the oracle actually rejects a
+mis-dispatched result.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import MPMatrix, format_set, schedule
+from repro.core.accuracy import (DEFAULT_SAFETY, check_against_fp64,
+                                 class_error_bounds, unit_roundoff)
+from repro.core.formats import DEFAULT_FORMATS
+from repro.core.precision import Policy, make_map
+from repro.tune import GemmPlan
+from repro.tune import dispatch as TD
+
+T = 8
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_tune(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    TD.clear_registry()
+    yield
+    TD.clear_registry()
+
+
+# ---------------------------------------------------------------------------
+# the bound itself
+# ---------------------------------------------------------------------------
+
+def test_unit_roundoff_from_registry_dtypes():
+    assert unit_roundoff(jnp.float32) == 2.0 ** -24
+    assert unit_roundoff(jnp.bfloat16) == 2.0 ** -8
+    assert unit_roundoff(jnp.float16) == 2.0 ** -11
+    assert unit_roundoff(jnp.float8_e4m3fn) == 2.0 ** -4
+    assert unit_roundoff(jnp.float8_e5m2) == 2.0 ** -3
+
+
+def test_bounds_order_follows_storage_precision():
+    fset = DEFAULT_FORMATS
+    pa = np.full((4, 4), fset.high, np.int8)
+    pb = np.full((4, 4), fset.high, np.int8)
+    pc = np.array([[0, 1], [2, 2]], np.int8)
+    b = class_error_bounds(pa, pb, pc, k=32, fset=fset)
+    assert b[fset.high] < b[fset.low] < b[fset.low8]
+
+
+def test_bounds_scale_with_k_and_operand_storage():
+    fset = DEFAULT_FORMATS
+    hi = np.full((4, 4), fset.high, np.int8)
+    lo8 = np.full((4, 4), fset.low8, np.int8)
+    pc = np.full((4, 4), fset.high, np.int8)
+    tight = class_error_bounds(hi, hi, pc, k=32, fset=fset)[fset.high]
+    loose = class_error_bounds(lo8, hi, pc, k=32, fset=fset)[fset.high]
+    assert tight < loose            # fp8-stored A widens the bound
+    k_big = class_error_bounds(hi, hi, pc, k=4096, fset=fset)[fset.high]
+    assert tight < k_big            # fp32 accumulation term grows with K
+
+
+def test_oracle_rejects_misdispatch():
+    """Negative control: a uniform-HIGH map computed at bf16 must violate
+    the fp32-class bound — the oracle catches wrong-precision routing."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    pc = np.full((8, 8), DEFAULT_FORMATS.high, np.int8)
+    wrong = (jnp.asarray(a).astype(jnp.bfloat16)
+             @ jnp.asarray(b).astype(jnp.bfloat16)).astype(jnp.float32)
+    rep = check_against_fp64(np.asarray(wrong), a, b, np.zeros_like(a),
+                             pc, pc, pc, T, DEFAULT_FORMATS)
+    assert not rep["ok"]
+
+
+# ---------------------------------------------------------------------------
+# all five dispatch paths stay inside the bound
+# ---------------------------------------------------------------------------
+
+def _general_problem(size, ratio, ratio8, seed, fset):
+    pol = Policy(kind="ratio", ratio_high=ratio, ratio_low8=ratio8,
+                 seed=seed)
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (size, size))
+    b = jax.random.normal(kb, (size, size))
+    mt = size // T
+    pa = make_map((size, size), T, pol, fset=fset)
+    pb = make_map((size, size), T, pol, fset=fset)
+    pc = make_map((size, size), T, pol, fset=fset)
+    A = MPMatrix.from_dense(a, pa, T, fset)
+    B = MPMatrix.from_dense(b, pb, T, fset)
+    C = MPMatrix.from_dense(jnp.zeros((size, size)), pc, T, fset)
+    return a, b, A, B, C, (pa, pb, pc)
+
+
+def _check_path(path, size, ratio, ratio8=0.0, seed=0,
+                fset=DEFAULT_FORMATS):
+    a, b, A, B, C, (pa, pb, pc) = _general_problem(
+        size, ratio, ratio8, seed, fset)
+    out = TD.execute_plan(GemmPlan(path=path, bm=T, bn=T, bk=T), A, B, C,
+                          alpha=1.0, beta=0.0)
+    rep = check_against_fp64(
+        np.asarray(out.to_dense()), a, b, np.zeros((size, size)),
+        pa, pb, pc, T, fset)
+    assert rep["ok"], (path, size, ratio, ratio8, rep["worst_ratio"])
+
+
+@settings(max_examples=8, deadline=None)
+@given(size=st.sampled_from([32, 64]),
+       ratio=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+       ratio8=st.sampled_from([0.0, 0.25]), seed=st.integers(0, 3))
+def test_ref_path_within_bound(size, ratio, ratio8, seed):
+    _check_path("ref", size, ratio, ratio8, seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(size=st.sampled_from([32, 64]),
+       ratio=st.sampled_from([0.0, 0.5, 1.0]),
+       ratio8=st.sampled_from([0.0, 0.25]))
+def test_tile_path_within_bound(size, ratio, ratio8):
+    _check_path("tile", size, ratio, ratio8)
+
+
+@settings(max_examples=6, deadline=None)
+@given(size=st.sampled_from([32, 64]),
+       ratio=st.sampled_from([0.0, 0.5, 1.0]),
+       ratio8=st.sampled_from([0.0, 0.25]))
+def test_grouped_path_within_bound(size, ratio, ratio8):
+    _check_path("grouped", size, ratio, ratio8)
+
+
+def _ksplit_problem(size, ratio, seed, fset):
+    """K-split applicability: B map constant along N (class-sorted along
+    K), uniform-LOW C map."""
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (size, size))
+    b = jax.random.normal(kb, (size, size))
+    kt = size // T
+    n_hi = int(round(ratio * kt))
+    kcls = np.concatenate([np.full(n_hi, fset.high, np.int8),
+                           np.full(kt - n_hi, fset.low, np.int8)])
+    pa = np.full((kt, kt), fset.low, np.int8)
+    pb = np.tile(kcls[:, None], (1, kt)).astype(np.int8)
+    pc = np.full((kt, kt), fset.low, np.int8)
+    A = MPMatrix.from_dense(a, pa, T, fset)
+    B = MPMatrix.from_dense(b, pb, T, fset)
+    C = MPMatrix.from_dense(jnp.zeros((size, size)), pc, T, fset)
+    return a, b, A, B, C, (pa, pb, pc)
+
+
+@settings(max_examples=6, deadline=None)
+@given(size=st.sampled_from([32, 64]),
+       ratio=st.sampled_from([0.0, 0.5, 1.0]), seed=st.integers(0, 3))
+def test_ksplit_xla_path_within_bound(size, ratio, seed):
+    a, b, A, B, C, maps = _ksplit_problem(size, ratio, seed, DEFAULT_FORMATS)
+    out = TD.execute_plan(GemmPlan(path="ksplit_xla", bm=T, bn=T, bk=T),
+                          A, B, C, alpha=1.0, beta=0.0)
+    rep = check_against_fp64(np.asarray(out.to_dense()), a, b,
+                             np.zeros((size, size)), *maps, T,
+                             DEFAULT_FORMATS)
+    assert rep["ok"], (size, ratio, seed, rep["worst_ratio"])
+
+
+@settings(max_examples=4, deadline=None)
+@given(size=st.sampled_from([32, 64]), ratio=st.sampled_from([0.0, 0.5]))
+def test_ksplit_pallas_path_within_bound(size, ratio):
+    a, b, A, B, C, maps = _ksplit_problem(size, ratio, 1, DEFAULT_FORMATS)
+    out = TD.execute_plan(GemmPlan(path="ksplit_pallas", bm=T, bn=T, bk=T),
+                          A, B, C, alpha=1.0, beta=0.0)
+    rep = check_against_fp64(np.asarray(out.to_dense()), a, b,
+                             np.zeros((size, size)), *maps, T,
+                             DEFAULT_FORMATS)
+    assert rep["ok"], (size, ratio, rep["worst_ratio"])
+
+
+# ---------------------------------------------------------------------------
+# distributed SUMMA stays inside the same bound
+# ---------------------------------------------------------------------------
+
+def _summa_within_bound(P, Q, fset, ratio=0.5, ratio8=0.0, seed=0):
+    from repro.core.summa import summa_mp_gemm
+    size = 64
+    pol = Policy(kind="ratio", ratio_high=ratio, ratio_low8=ratio8,
+                 seed=seed)
+    mt = size // T
+    pa = schedule.sorted_balanced_map(mt, mt, pol, axis=0, groups=P,
+                                      fset=fset)
+    pb = schedule.sorted_balanced_map(mt, mt, pol, axis=1, groups=Q,
+                                      fset=fset)
+    pc = schedule.balanced_ratio_map(mt, mt, pol, P, Q, fset=fset)
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (size, size))
+    b = jax.random.normal(kb, (size, size))
+    A = MPMatrix.from_dense(a, pa, T, fset)
+    B = MPMatrix.from_dense(b, pb, T, fset)
+    C = MPMatrix.from_dense(jnp.zeros((size, size)), pc, T, fset)
+    mesh = jax.make_mesh((P, Q), ("row", "col"))
+    out = summa_mp_gemm(A, B, C, mesh=mesh)
+    rep = check_against_fp64(np.asarray(out.to_dense()), a, b,
+                             np.zeros((size, size)), pa, pb, pc, T, fset)
+    assert rep["ok"], (P, Q, fset.key(), rep["worst_ratio"])
+
+
+@settings(max_examples=6, deadline=None)
+@given(ratio=st.sampled_from([0.0, 0.5, 1.0]),
+       ratio8=st.sampled_from([0.0, 0.25]), seed=st.integers(0, 2))
+def test_summa_1x1_within_bound(ratio, ratio8, seed):
+    """SUMMA semantics are mesh-size independent; a 1×1 grid runs the full
+    slab/scan machinery on a single device."""
+    _summa_within_bound(1, 1, DEFAULT_FORMATS, ratio, ratio8, seed)
+
+
+@pytest.mark.parametrize("fs", ["fp8_e4m3+bf16+fp32", "fp8_e5m2+fp16+fp32",
+                                "fp16+fp32"])
+def test_summa_multi_device_within_bound(host_grid_devices, fs):
+    fset = format_set(*fs.split("+"))
+    ratio8 = 0.25 if fset.low8 is not None else 0.0
+    _summa_within_bound(2, 2, fset, 0.5, ratio8)
+
+
+def test_safety_factor_is_load_bearing():
+    """The default bound is conservative but not vacuous: with safety
+    shrunk 100×, at least one real path/ratio violates it."""
+    rng_violated = False
+    fset = DEFAULT_FORMATS
+    for seed in range(3):
+        a, b, A, B, C, (pa, pb, pc) = _general_problem(
+            64, 0.0, 0.0, seed, fset)
+        out = TD.execute_plan(GemmPlan(path="ref", bm=T, bn=T, bk=T),
+                              A, B, C)
+        rep = check_against_fp64(
+            np.asarray(out.to_dense()), a, b, np.zeros((64, 64)),
+            pa, pb, pc, T, fset, safety=DEFAULT_SAFETY / 100.0)
+        rng_violated = rng_violated or not rep["ok"]
+    assert rng_violated

@@ -47,6 +47,68 @@ def test_sorted_balanced_map_properties(axis, groups, ratio):
     assert len(counts) == 1  # identical per panel per segment
 
 
+@settings(max_examples=16, deadline=None)
+@given(axis=st.sampled_from([0, 1]), groups=st.sampled_from([1, 2, 4]),
+       ratio=st.sampled_from([0.0, 0.25, 0.5]),
+       ratio8=st.sampled_from([0.0, 0.25, 0.5]))
+def test_sorted_balanced_map_n_class_invariants(axis, groups, ratio, ratio8):
+    """N-class generalization (the SUMMA slab protocol's contract): every
+    segment-panel has identical per-class counts for EVERY class, and
+    classes appear in descending storage cost (fset.class_order) — i.e.
+    each format's tiles occupy the lowest indices after the pricier ones."""
+    from repro.core.formats import DEFAULT_FORMATS as fset
+    pol = Policy(kind="ratio", ratio_high=ratio, ratio_low8=ratio8)
+    m = schedule.sorted_balanced_map(16, 8, pol, axis=axis, groups=groups)
+    mm = m if axis == 0 else m.T
+    seg = mm.shape[0] // groups
+    counts = set()
+    for g in range(groups):
+        blk = mm[g * seg:(g + 1) * seg]
+        for j in range(mm.shape[1]):
+            col = blk[:, j]
+            per_class = tuple(int((col == c).sum()) for c in fset.codes)
+            counts.add(per_class)
+            canon = np.concatenate(
+                [np.full(int((col == c).sum()), c, np.int8)
+                 for c in fset.class_order])
+            assert np.array_equal(col, canon)   # class_order sortedness
+    assert len(counts) == 1   # identical counts per panel per segment
+
+
+def test_sorted_balanced_map_indivisible_groups_raises():
+    pol = Policy(kind="ratio", ratio_high=0.5)
+    with pytest.raises(ValueError, match="must divide"):
+        schedule.sorted_balanced_map(15, 8, pol, axis=0, groups=4)
+    with pytest.raises(ValueError, match="must divide"):
+        schedule.balanced_ratio_map(15, 8, pol, 4, 1)
+
+
+def test_panel_owner_steps_raises_instead_of_bad_slicing():
+    """K/tile panels that don't divide over the grid used to silently
+    mis-slice; now a descriptive ValueError."""
+    from repro.core.summa import _panel_owner_steps
+    with pytest.raises(ValueError, match="divide evenly"):
+        _panel_owner_steps(K=48, tile=8, P=4, Q=2)   # kt=6, 6 % 4 != 0
+    with pytest.raises(ValueError, match="multiple of tile"):
+        _panel_owner_steps(K=50, tile=8, P=1, Q=1)
+    qa, la, pb, lb = _panel_owner_steps(K=64, tile=8, P=2, Q=4)
+    # owner/local indices reconstruct each global panel position
+    kloc_a, kloc_b = 64 // 4, 64 // 2
+    for step in range(8):
+        assert qa[step] * (kloc_a // 8) + la[step] == step
+        assert pb[step] * (kloc_b // 8) + lb[step] == step
+
+
+def test_is_shard_balanced():
+    pol = Policy(kind="ratio", ratio_high=0.5, seed=2)
+    bal = schedule.balanced_ratio_map(8, 8, pol, 2, 2)
+    assert schedule.is_shard_balanced(bal, 2, 2)
+    unbal = np.full((8, 8), 1, np.int8)
+    unbal[0, 0] = 2
+    assert not schedule.is_shard_balanced(unbal, 2, 2)
+    assert not schedule.is_shard_balanced(bal, 3, 2)   # indivisible grid
+
+
 def test_shard_costs_reflect_mxu_model():
     pol = Policy(kind="uniform_high")
     m = schedule.balanced_ratio_map(8, 8, pol, 2, 2)

@@ -23,8 +23,12 @@ _SCRIPT = textwrap.dedent("""
     a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
     b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
     c0 = jax.random.normal(jax.random.PRNGKey(2), (M, N))
-    for ratio, beta in ((0.5, 0.5), (1.0, 0.0), (0.0, 1.0), (0.25, 0.0)):
-        pol = Policy(kind="ratio", ratio_high=ratio)
+    # (ratio_high, ratio_low8, beta) — the low8 case exercises the
+    # three-slab wire protocol (fp8 panels ship in storage precision)
+    for ratio, r8, beta in ((0.5, 0.0, 0.5), (1.0, 0.0, 0.0),
+                            (0.0, 0.0, 1.0), (0.25, 0.0, 0.0),
+                            (0.25, 0.5, 0.5)):
+        pol = Policy(kind="ratio", ratio_high=ratio, ratio_low8=r8)
         pa = schedule.sorted_balanced_map(M//T, K//T, pol, axis=0, groups=P)
         pb = schedule.sorted_balanced_map(K//T, N//T, pol, axis=1, groups=Q)
         pc = schedule.balanced_ratio_map(M//T, N//T, pol, P, Q)
@@ -36,7 +40,7 @@ _SCRIPT = textwrap.dedent("""
         err = np.abs(np.asarray(out.to_dense())
                      - np.asarray(ref.to_dense())).max()
         scale = np.abs(np.asarray(ref.to_dense())).max()
-        assert err / scale < 2e-2, (ratio, beta, err, scale)
+        assert err / scale < 2e-2, (ratio, r8, beta, err, scale)
     # analytic byte model sanity: 50% HIGH = 3 B/elem panels
     model = summa_collective_bytes(M, N, K, T, P, Q, 0.5)
     assert model["bytes_per_elem_model"] == 3.0

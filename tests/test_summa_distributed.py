@@ -1,0 +1,284 @@
+"""Multi-device SUMMA parity battery (in-process host mesh).
+
+The dedicated conftest fixture (``host_grid_devices``) forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before jax's backend
+initializes and skips these tests when the count could not be forced.
+
+Covers: 2×2 / 1×4 / 4×1 grids × every registered format-set flavour
+(default fp8_e4m3+bf16+fp32, fp8_e5m2+fp16+fp32, 2-format fp16+fp32),
+tolerance parity against single-device ``mp_matmul`` under the
+registry-derived error bounds, bitwise parity of the grouped-kernel local
+update against the single-device grouped path, distributed plan keys, and
+the descriptive errors for indivisible grids / unsorted maps / missing
+devices.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MPMatrix, format_set, mp_gemm_ref, schedule
+from repro.core.accuracy import class_error_bounds, error_scale
+from repro.core.formats import DEFAULT_FORMATS
+from repro.core.precision import Policy
+from repro.core.summa import (_panel_owner_steps, summa_collective_bytes,
+                              summa_mp_gemm, summa_selfcheck)
+from repro.tune import GemmPlan
+from repro.tune import dispatch as TD
+from repro.tune import search as TS
+
+M = K = N = 64
+T = 8
+
+GRIDS = [(2, 2), (1, 4), (4, 1)]
+FSETS = {
+    "default": ("fp8_e4m3", "bf16", "fp32"),
+    "fp8_e5m2": ("fp8_e5m2", "fp16", "fp32"),
+    "fp16": ("fp16", "fp32"),
+}
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_tune(tmp_path, monkeypatch):
+    """Isolate the plan registry/cache per test."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    TD.clear_registry()
+    yield
+    TD.clear_registry()
+
+
+def _mesh(P, Q):
+    return jax.make_mesh((P, Q), ("row", "col"))
+
+
+def _operands(P, Q, fset, *, seed=0, ratio=0.5, ratio8=None):
+    if ratio8 is None:
+        ratio8 = 0.25 if fset.low8 is not None else 0.0
+    pol = Policy(kind="ratio", ratio_high=ratio, ratio_low8=ratio8,
+                 seed=seed)
+    pa = schedule.sorted_balanced_map(M // T, K // T, pol, axis=0, groups=P,
+                                      fset=fset)
+    pb = schedule.sorted_balanced_map(K // T, N // T, pol, axis=1, groups=Q,
+                                      fset=fset)
+    pc = schedule.balanced_ratio_map(M // T, N // T, pol, P, Q, fset=fset)
+    key = jax.random.PRNGKey(seed)
+    ka, kb, kc = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (M, K))
+    b = jax.random.normal(kb, (K, N))
+    c = jax.random.normal(kc, (M, N))
+    return (a, b, c,
+            MPMatrix.from_dense(a, pa, T, fset),
+            MPMatrix.from_dense(b, pb, T, fset),
+            MPMatrix.from_dense(c, pc, T, fset))
+
+
+def _assert_parity(out, ref, A, B, a, b, c, *, beta, fset):
+    """Tolerance parity under the registry-derived per-class bounds (each
+    side carries an independent rounding-error budget → factor 2)."""
+    bounds = class_error_bounds(A.cls.arr, B.cls.arr, out.cls.arr, K, fset)
+    scale = error_scale(a, b, c, beta)
+    err = np.abs(np.asarray(out.to_dense(), np.float64)
+                 - np.asarray(ref.to_dense(), np.float64))
+    sel = np.repeat(np.repeat(out.cls.arr, T, 0), T, 1)
+    for cls, bound in bounds.items():
+        mask = sel == cls
+        if mask.any():
+            assert (err[mask] <= 2 * bound * scale[mask] + 1e-6).all(), (
+                cls, float(err[mask].max()),
+                float((2 * bound * scale[mask]).min()))
+
+
+@pytest.mark.parametrize("grid", GRIDS, ids=[f"{p}x{q}" for p, q in GRIDS])
+@pytest.mark.parametrize("fs", sorted(FSETS))
+def test_summa_matches_single_device(host_grid_devices, grid, fs):
+    """SUMMA output ≍ single-device mp_matmul on the same tile maps, for
+    every grid × format set, within the registry-derived error bounds."""
+    P, Q = grid
+    fset = format_set(*FSETS[fs])
+    a, b, c, A, B, C = _operands(P, Q, fset)
+    beta = 0.5
+    out = summa_mp_gemm(A, B, C, mesh=_mesh(P, Q), alpha=1.0, beta=beta)
+    single = TD.mp_matmul(A, B, C, alpha=1.0, beta=beta)
+    assert out.fset == fset and out.cls == C.cls
+    _assert_parity(out, single, A, B, a, b, c, beta=beta, fset=fset)
+
+
+@pytest.mark.parametrize("fs", sorted(FSETS))
+def test_grouped_local_update_bitwise_vs_single_grouped(
+        host_grid_devices, fs):
+    """With a tuned grouped plan the SUMMA local update is the grouped
+    Pallas kernel — bitwise-identical to the single-device grouped path
+    (same per-step dots, same fp32 accumulation order, one storage
+    rounding)."""
+    fset = format_set(*FSETS[fs])
+    P, Q = 2, 2
+    mesh = _mesh(P, Q)
+    _, _, _, A, B, _ = _operands(P, Q, fset)
+    C = MPMatrix.from_dense(
+        jnp.zeros((M, N)),
+        schedule.balanced_ratio_map(
+            M // T, N // T,
+            Policy(kind="ratio", ratio_high=0.5,
+                   ratio_low8=0.25 if fset.low8 is not None else 0.0),
+            P, Q, fset=fset),
+        T, fset)
+    prob = TD.summa_problem(A, B, C, mesh)
+    key = TS.plan_key(TS.detect_device(), prob)
+    TD.register_plan(key, GemmPlan(path="grouped", bm=T, bn=T, bk=T))
+    plan, source = TD.resolve_summa_plan(prob)
+    assert (plan.path, source) == ("grouped", "registry")
+    out = summa_mp_gemm(A, B, C, mesh=mesh)
+    single = TD.execute_plan(GemmPlan(path="grouped", bm=T, bn=T, bk=T),
+                             A, B, C)
+    for got, want in zip(out.bufs, single.bufs):
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+
+
+def test_grouped_plan_rejected_for_unbalanced_c_map(host_grid_devices):
+    """A C map with unequal per-shard class counts cannot run the grouped
+    local update (non-static kernel grid): resolution falls back to ref and
+    the result is still correct."""
+    P, Q = 2, 2
+    mesh = _mesh(P, Q)
+    fset = DEFAULT_FORMATS
+    a, b, c, A, B, _ = _operands(P, Q, fset)
+    pc = np.full((M // T, N // T), fset.low, np.int8)
+    pc[0, 0] = fset.high          # one HIGH tile on one shard only
+    C = MPMatrix.from_dense(jnp.asarray(c), pc, T, fset)
+    prob = TD.summa_problem(A, B, C, mesh)
+    assert prob.op.endswith("!ub")
+    key = TS.plan_key(TS.detect_device(), prob)
+    TD.register_plan(key, GemmPlan(path="grouped", bm=T, bn=T, bk=T))
+    plan, source = TD.resolve_summa_plan(prob)
+    assert (plan.path, source) == ("ref", "default")
+    out = summa_mp_gemm(A, B, C, mesh=mesh)
+    _assert_parity(out, mp_gemm_ref(A, B, C), A, B, a, b, c,
+                   beta=0.0, fset=fset)
+    # and an explicit grouped plan is refused loudly, not mis-executed
+    with pytest.raises(ValueError, match="shard-balanced"):
+        summa_mp_gemm(A, B, C, mesh=mesh,
+                      plan=GemmPlan(path="grouped", bm=T, bn=T, bk=T))
+
+
+def test_alpha_beta_general(host_grid_devices):
+    P, Q = 2, 2
+    fset = DEFAULT_FORMATS
+    a, b, c, A, B, C = _operands(P, Q, fset, seed=3)
+    out = summa_mp_gemm(A, B, C, mesh=_mesh(P, Q), alpha=2.0, beta=-0.5)
+    ref = mp_gemm_ref(A, B, C, alpha=2.0, beta=-0.5)
+    err = float(jnp.abs(out.to_dense() - ref.to_dense()).max())
+    scale = float(jnp.abs(ref.to_dense()).max())
+    assert err / scale < 2e-2
+
+
+def test_default_c_is_uniform_low(host_grid_devices):
+    P, Q = 2, 2
+    fset = DEFAULT_FORMATS
+    _, _, _, A, B, _ = _operands(P, Q, fset)
+    out = summa_mp_gemm(A, B, mesh=_mesh(P, Q))
+    assert set(np.unique(out.cls.arr)) == {fset.low}
+
+
+def test_plan_key_carries_mesh_shape_and_formats(host_grid_devices):
+    fset = format_set("fp8_e5m2", "fp16", "fp32")
+    _, _, _, A, B, C = _operands(2, 2, fset)
+    dev = TS.detect_device()
+    keys = set()
+    for P, Q in GRIDS:
+        prob = TD.summa_problem(A, B, C, _mesh(P, Q))
+        key = TS.plan_key(dev, prob)
+        assert f"summa{P}x{Q}" in key
+        assert f"M{M // P}N{N // Q}K{K}" in key      # per-shard extents
+        assert "fp8_e5m2+fp16+fp32" in key           # format-set tag
+        keys.add(key)
+    assert len(keys) == len(GRIDS)   # one plan identity per grid
+
+
+def test_indivisible_k_panels_raise(host_grid_devices):
+    """kt=6 panels over a 4-column grid: a descriptive ValueError, not the
+    silent bad slicing _panel_owner_steps used to do."""
+    with pytest.raises(ValueError, match="divide evenly"):
+        _panel_owner_steps(48, 8, 1, 4)
+    # and end-to-end through the public API
+    fset = DEFAULT_FORMATS
+    pol = Policy(kind="ratio", ratio_high=0.5)
+    Mx = Nx = 64
+    Kx = 24   # kt=3 not divisible by Q=2
+    pa = schedule.sorted_balanced_map(Mx // T, Kx // T, pol, 0, 2, fset=fset)
+    pb = schedule.sorted_balanced_map(Kx // T, Nx // T, pol, 1, 2, fset=fset)
+    A = MPMatrix.from_dense(jnp.ones((Mx, Kx)), pa, T, fset)
+    B = MPMatrix.from_dense(jnp.ones((Kx, Nx)), pb, T, fset)
+    with pytest.raises(ValueError, match="divide evenly"):
+        summa_mp_gemm(A, B, mesh=_mesh(2, 2))
+
+
+def test_unsorted_map_raises(host_grid_devices):
+    fset = DEFAULT_FORMATS
+    pol = Policy(kind="ratio", ratio_high=0.5, seed=1)
+    pa = schedule.balanced_ratio_map(M // T, K // T, pol, 2, 1, fset=fset)
+    pb = schedule.sorted_balanced_map(K // T, N // T, pol, 1, 2, fset=fset)
+    A = MPMatrix.from_dense(jnp.ones((M, K)), pa, T, fset)
+    B = MPMatrix.from_dense(jnp.ones((K, N)), pb, T, fset)
+    with pytest.raises(ValueError, match="class-sorted"):
+        summa_mp_gemm(A, B, mesh=_mesh(2, 2))
+
+
+def test_make_host_mesh_descriptive_error(host_grid_devices):
+    from repro.launch.mesh import make_grid_mesh, make_host_mesh
+    with pytest.raises(RuntimeError, match="XLA_FLAGS"):
+        make_host_mesh(64, 64)
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_grid_mesh(64, 64)
+    assert make_grid_mesh(2, 2).shape == {"row": 2, "col": 2}
+
+
+def test_collective_bytes_follow_format_set():
+    # default set, 50D:25S:25Q → 4·.5 + 2·.25 + 1·.25 = 2.75 B/elem
+    model = summa_collective_bytes(M, N, K, T, 2, 2, 0.5, 0.25)
+    assert model["bytes_per_elem_model"] == pytest.approx(2.75)
+    # 2-format fp16+fp32, 50D:50S → 4·.5 + 2·.5 = 3.0 B/elem
+    fs = format_set("fp16", "fp32")
+    model = summa_collective_bytes(M, N, K, T, 2, 2, 0.5, 0.0, fs)
+    assert model["bytes_per_elem_model"] == pytest.approx(3.0)
+
+
+def test_summa_selfcheck_report(host_grid_devices):
+    rep = summa_selfcheck(_mesh(2, 2), tile=8)
+    assert rep["grid"] == "2x2" and rep["local_path"] == "ref"
+    assert rep["rel_err"] < 1e-2
+    rep16 = summa_selfcheck(_mesh(1, 4), tile=8,
+                            fset=format_set("fp16", "fp32"))
+    assert rep16["formats"] == "fp16+fp32" and rep16["rel_err"] < 1e-2
+
+
+def test_engine_summa_grid_wiring(host_grid_devices):
+    """ArchConfig.summa_grid threads the distributed self-check through the
+    serve engine setup."""
+    from repro.configs import load_all, reduced
+    from repro.models import transformer as Tm
+    from repro.serve.engine import Engine
+    cfg = dataclasses.replace(reduced(load_all()["internlm2-1.8b"], tp=2),
+                              summa_grid=(2, 2))
+    params = Tm.init_model(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_batch=1, max_seq=16)
+    assert eng.summa_report is not None
+    assert eng.summa_report["grid"] == "2x2"
+    assert eng.summa_report["rel_err"] < 1e-2
+
+
+def test_autotune_summa_persists_winner(host_grid_devices, tmp_path):
+    """autotune_summa measures ref vs grouped and persists the winner under
+    the distributed key; the next resolve serves it from the cache."""
+    fset = DEFAULT_FORMATS
+    _, _, _, A, B, _ = _operands(2, 2, fset)
+    mesh = _mesh(2, 2)
+    A2, B2, C2 = TD.canonical_operands(A, B, None)
+    plan = TD.autotune_summa(A, B, mesh=mesh, warmup=1, iters=1)
+    assert plan.path in TD.SUMMA_PATHS
+    TD.clear_registry()
+    prob = TD.summa_problem(A2, B2, C2, mesh)
+    got, source = TD.resolve_summa_plan(prob)
+    assert source == "cache" and got.path == plan.path
