@@ -1,0 +1,63 @@
+"""Bench-result schema + writer shared by every benchmark entry point.
+
+The CI ``perf-trajectory`` lane runs the benchmarks in smoke mode and
+persists ``BENCH_gemm.json`` / ``BENCH_serve.json`` as workflow artifacts,
+so the repo accumulates a perf trajectory instead of point-in-time stdout.
+
+Schema (version 1)::
+
+    {
+      "schema": 1,
+      "suite": "gemm" | "serve" | ...,
+      "meta":  {"smoke": bool, "device": str, ...},
+      "rows":  [{"name": str, "us_per_call": float, "derived": str}, ...],
+      "errors": [{"name": str, "error": str}, ...]
+    }
+
+``rows`` mirrors the long-standing ``name,us_per_call,derived`` CSV the
+benchmarks print; ``errors`` records sub-benchmarks that raised (the
+harness runs everything before failing).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+BENCH_SCHEMA = 1
+
+
+def rows_to_dicts(rows: list[tuple]) -> list[dict]:
+    return [{"name": name, "us_per_call": float(us), "derived": str(derived)}
+            for name, us, derived in rows]
+
+
+def write_bench(path: str, suite: str, rows: list[tuple], *,
+                meta: dict | None = None,
+                errors: list[dict] | None = None) -> dict:
+    """Write a bench-schema JSON file (sorted keys, trailing newline) and
+    return the payload."""
+    payload = {
+        "schema": BENCH_SCHEMA,
+        "suite": suite,
+        "meta": dict(meta or {}),
+        "rows": rows_to_dicts(rows),
+        "errors": list(errors or []),
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return payload
+
+
+def read_bench(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"{path}: unknown bench schema "
+                         f"{payload.get('schema')!r}")
+    return payload

@@ -43,13 +43,15 @@ def run(matrix: int = 102_400, tile: int = 1_024):
     return rows
 
 
-def bench():
-    """CSV row for benchmarks.run."""
+def bench(smoke: bool = False):
+    """CSV row for benchmarks.run (smoke: 4,096² at tile 256 — same map
+    machinery, CI-sized)."""
+    matrix, tile = (4_096, 256) if smoke else (102_400, 1_024)
     t0 = time.perf_counter()
-    m = make_map((102_400, 102_400), 1_024, PAPER_RATIOS["50D:50S"])
+    m = make_map((matrix, matrix), tile, PAPER_RATIOS["50D:50S"])
     us = (time.perf_counter() - t0) * 1e6
-    return [("fig2_map_102400_t1024", us,
-             f"bytes/elem={map_storage_bytes(m, 1024)/102_400**2:.2f}")]
+    return [(f"fig2_map_{matrix}_t{tile}", us,
+             f"bytes/elem={map_storage_bytes(m, tile)/matrix**2:.2f}")]
 
 
 if __name__ == "__main__":

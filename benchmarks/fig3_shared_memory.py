@@ -85,8 +85,11 @@ def run():
     return rows
 
 
-def bench():
-    rows = measure_cpu(iters=2)
+def bench(smoke: bool = False):
+    if smoke:
+        rows = measure_cpu(M=256, K=256, N=256, tile=32, iters=1)
+    else:
+        rows = measure_cpu(iters=2)
     return [(f"fig3_{r['config'].replace(':', '_')}",
              r["cpu_ms"] * 1e3,
              f"projTF/s={r['proj_v5e_tflops']:.1f}") for r in rows]

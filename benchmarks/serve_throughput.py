@@ -1,0 +1,137 @@
+"""Serve-throughput microbench: the scheduler acceptance gate.
+
+Drives a mixed-shape, mixed-format request stream through the
+shape-bucketed continuous-batching engine (warmed) and through the
+unbatched reference, reporting tokens/s, microbatch occupancy, bucket hit
+rate, padding waste, post-warmup recompiles, and batched-vs-unbatched
+parity.  The CI ``perf-trajectory`` lane runs ``--smoke`` and records the
+rows to ``BENCH_serve.json`` (see ``bench_io``).
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py --smoke \
+        --out BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+
+def _requests(vocab: int, *, n: int, alt_tag: str | None, seed: int = 0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    lens = [2, 3, 4, 6, 7, 8, 12, 3]
+    reqs = []
+    for i in range(n):
+        L = lens[i % len(lens)]
+        prompt = (rng.integers(1, vocab, size=L)).astype(np.int32)
+        fset = alt_tag if (alt_tag and i % 3 == 2) else "default"
+        reqs.append((prompt, fset))
+    return reqs
+
+
+def bench(smoke: bool = True, n_requests: int = 12, max_new: int = 4
+          ) -> list[tuple]:
+    import jax
+    import numpy as np
+
+    if not smoke:      # full mode: a longer stream, longer generations
+        n_requests, max_new = n_requests * 4, max_new * 2
+
+    from repro.configs import get, load_all, reduced
+    from repro.models import transformer as T
+    from repro.serve.engine import Engine, Request
+
+    load_all()
+    cfg = reduced(get("llama3-8b"), tp=2)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    alt_tag = "fp8_e5m2+fp16+fp32"
+    alt_params = T.init_model(
+        jax.random.PRNGKey(0),
+        dataclasses.replace(cfg, mp_formats=alt_tag))
+
+    eng = Engine(cfg, params, max_batch=4, max_seq=64,
+                 variants={alt_tag: alt_params})
+    t0 = time.perf_counter()
+    eng.warmup()
+    warmup_s = time.perf_counter() - t0
+
+    stream = _requests(cfg.vocab, n=n_requests, alt_tag=alt_tag)
+    reqs = [Request(p, max_new_tokens=max_new, fset=f) for p, f in stream]
+    t0 = time.perf_counter()
+    eng.generate(reqs)
+    serve_s = time.perf_counter() - t0
+    st = eng.stats()
+
+    refs = eng.generate_reference(
+        [Request(np.asarray(p), max_new_tokens=max_new, fset=f)
+         for p, f in stream])
+    t0 = time.perf_counter()
+    eng.generate_reference(
+        [Request(np.asarray(p), max_new_tokens=max_new, fset=f)
+         for p, f in stream])
+    unbatched_s = time.perf_counter() - t0
+    parity = all(r.out_tokens == ref.out_tokens
+                 for r, ref in zip(reqs, refs))
+
+    gen = st["tokens"]["generated"]
+    rows = [
+        ("serve_warmup", warmup_s * 1e6,
+         f"buckets={len([b for b in eng.scheduler.buckets.values() if b.warmed])};"
+         f"traces={st['compile']['warmup_traces']}"),
+        ("serve_stream_batched", serve_s * 1e6,
+         f"requests={st['requests']['served']};tokens_per_s="
+         f"{gen / serve_s:.1f};microbatches={st['microbatches']['total']};"
+         f"multi={st['microbatches']['multi_request']};"
+         f"mean_mb={st['microbatches']['mean_size']:.2f}"),
+        ("serve_stream_unbatched", unbatched_s * 1e6,
+         f"tokens_per_s={gen / unbatched_s:.1f};"
+         f"speedup={unbatched_s / serve_s:.2f}x"),
+        ("serve_bucket_hit_rate", 0.0,
+         f"rate={st['bucket_hit_rate']:.2f};hits={st['bucket_hits']};"
+         f"misses={st['bucket_misses']}"),
+        ("serve_padding_waste", 0.0,
+         f"waste={st['padding_waste']:.3f};"
+         f"padded={st['tokens']['padded']};real={st['tokens']['prompt']}"),
+        ("serve_post_warmup_recompiles", 0.0,
+         f"n={st['compile']['post_warmup_recompiles']};"
+         f"parity={'ok' if parity else 'MISMATCH'};mode={eng.mode}"),
+    ]
+    # acceptance gate: the plan-warmed scheduler must batch, must not
+    # recompile, and must match the unbatched engine per request
+    assert st["compile"]["post_warmup_recompiles"] == 0, st["compile"]
+    assert st["microbatches"]["multi_request"] >= 1, st["microbatches"]
+    assert parity, "batched outputs diverged from the unbatched reference"
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--out", default="",
+                    help="write rows to this bench-schema JSON path")
+    args = ap.parse_args(argv)
+
+    rows = bench(smoke=args.smoke, n_requests=args.requests,
+                 max_new=args.max_new)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.out:
+        from benchmarks.bench_io import write_bench
+        write_bench(args.out, "serve", rows,
+                    meta={"smoke": args.smoke,
+                          "requests": args.requests,
+                          "max_new": args.max_new})
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    raise SystemExit(main())

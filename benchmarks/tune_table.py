@@ -44,7 +44,7 @@ def _mk_problem(M, K, N, T, ratio, *, b_kconst=False, c_uniform=False,
     return A, B, C
 
 
-def bench() -> list[tuple]:
+def bench(smoke: bool = False) -> list[tuple]:
     os.environ.setdefault("REPRO_TUNE_CACHE", os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "results", "tune_cache.json"))
@@ -62,7 +62,9 @@ def bench() -> list[tuple]:
     # -- part 1: cost-model-predicted vs measured plan ranking --------------
     A, B, C = _mk_problem(M, K, N, T, 0.5, b_kconst=True, c_uniform=True)
     prob = TD.problem_of(A, B, C)
-    ranked = TS.rank_plans(candidate_plans(prob, dev), prob, dev)[:8]
+    # smoke: measure fewer ranked candidates (shapes are already CI-sized)
+    ranked = TS.rank_plans(candidate_plans(prob, dev), prob,
+                           dev)[: 4 if smoke else 8]
     scored = []
     for plan, pred_d in ranked:
         pred = pred_d["total_s"]

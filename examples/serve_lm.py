@@ -1,7 +1,15 @@
-"""Serve a small model with batched requests through the engine.
+"""Serve a mixed-shape, mixed-format request stream through the
+shape-bucketed continuous-batching scheduler.
 
     PYTHONPATH=src python examples/serve_lm.py
+
+Demonstrates: warmup pre-resolves GEMM plans and pre-compiles every
+configured bucket, the mixed stream batches into multi-request
+microbatches, steady state records ZERO post-warmup recompiles, and the
+batched outputs are bit-exact with the unbatched reference.
 """
+import dataclasses
+
 import numpy as np
 
 import jax
@@ -11,19 +19,43 @@ from repro.models import transformer as T
 from repro.serve.engine import Engine, Request
 
 load_all()
-cfg = reduced(get("gemma3-4b"), tp=2)   # local:global attention family
+cfg = reduced(get("llama3-8b"), tp=2)      # full-attention → "masked" mode
 params = T.init_model(jax.random.PRNGKey(0), cfg)
-eng = Engine(cfg, params, max_batch=3, max_seq=64)
+# a second weight variant on another precision format set (same shapes)
+alt_cfg = dataclasses.replace(cfg, mp_formats="fp8_e5m2+fp16+fp32")
+alt_params = T.init_model(jax.random.PRNGKey(0), alt_cfg)
 
-reqs = [
+eng = Engine(cfg, params, max_batch=3, max_seq=64,
+             variants={"fp8_e5m2+fp16+fp32": alt_params})
+rep = eng.warmup()
+print(f"warmup: {rep.pop('traces')} traces across "
+      f"{len(rep)} buckets (plans + executables pre-resolved)")
+
+mixed = [
     Request(np.array([5, 9, 2, 7], np.int32), max_new_tokens=6),
-    Request(np.array([3, 3], np.int32), max_new_tokens=6,
-            temperature=0.8),
-    Request(np.array([1, 2, 3, 4, 5, 6], np.int32), max_new_tokens=4),
+    Request(np.array([3, 3], np.int32), max_new_tokens=6),
+    Request(np.array([1, 2, 3, 4, 5, 6], np.int32), max_new_tokens=4,
+            fset="fp8_e5m2+fp16+fp32"),
     Request(np.array([11, 13], np.int32), max_new_tokens=5),
+    Request(np.array([4, 4, 4], np.int32), max_new_tokens=5,
+            fset="fp8_e5m2+fp16+fp32"),
 ]
-for i, r in enumerate(eng.generate(reqs)):
-    mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
-    print(f"req {i} ({mode}): {list(r.prompt)} → {r.out_tokens}")
-print("all requests served (fixed-slot continuous batching, "
-      f"{cfg.name})")
+eng.generate(mixed)
+refs = eng.generate_reference(
+    [Request(np.asarray(r.prompt), max_new_tokens=r.max_new_tokens,
+             fset=r.fset) for r in mixed])
+for i, (r, ref) in enumerate(zip(mixed, refs)):
+    tag = "==" if r.out_tokens == ref.out_tokens else "!="
+    print(f"req {i} [{r.fset:>20s} {r.bucket:>8s}]: "
+          f"{np.asarray(r.prompt).tolist()} → "
+          f"{r.out_tokens}  ({tag} unbatched)")
+
+st = eng.stats()
+print(f"microbatches={st['microbatches']['total']} "
+      f"(multi-request={st['microbatches']['multi_request']}), "
+      f"bucket hit rate={st['bucket_hit_rate']:.2f}, "
+      f"padding waste={st['padding_waste']:.2f}, "
+      f"post-warmup recompiles={st['compile']['post_warmup_recompiles']}")
+assert st["compile"]["post_warmup_recompiles"] == 0
+assert all(r.out_tokens == ref.out_tokens for r, ref in zip(mixed, refs))
+print(f"all requests served, zero recompiles ({cfg.name})")

@@ -68,6 +68,12 @@ class ArchConfig:
     #: self-check at this config's tile/policy/format set and warm the
     #: distributed plan key (``--summa PxQ`` overrides from the CLI).
     summa_grid: Optional[tuple] = None
+    #: padded-prompt-length shape buckets of the serve scheduler (None →
+    #: ``serve.engine.DEFAULT_PAD_LENS``).  Every bucket is plan-warmed and
+    #: pre-compiled by ``Engine.warmup()`` so steady-state serving never
+    #: recompiles; prompts that fit no bucket within the waste cap are
+    #: served through dynamically-created cold buckets (recorded misses).
+    serve_buckets: Optional[tuple] = None
     # --- training ------------------------------------------------------------
     remat: bool = True
     norm_eps: float = 1e-6
@@ -225,6 +231,7 @@ def reduced(cfg: ArchConfig, tp: int = 2) -> ArchConfig:
         mp_tile=16,
         tp=tp,
         mamba_d_state=4,
+        serve_buckets=(4, 8, 16, 32),
     )
     return dataclasses.replace(cfg, **kw)
 

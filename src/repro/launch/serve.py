@@ -1,9 +1,15 @@
-"""Serving launcher: load (or init) a model and serve batched requests.
+"""Serving launcher: load (or init) a model and serve batched requests
+through the shape-bucketed scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --prompts "1 2 3" "4 5" --max-new 8
+        --prompts "1 2 3" "4 5" --max-new 8 --buckets 8,16,32
+
+The engine warms every configured bucket (plan resolution + compile) before
+serving unless ``--no-warmup`` is passed; ``--stats`` dumps the scheduler /
+compile counters after the stream drains.
 """
 import argparse
+import json
 
 
 def main():
@@ -15,7 +21,19 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--buckets", default="",
+                    help="comma-separated padded prompt lengths "
+                         "(default: ArchConfig.serve_buckets)")
+    ap.add_argument("--waste-cap", type=float, default=0.75,
+                    help="max padding-waste fraction before a request is "
+                         "redirected to a cold exact-length bucket")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip plan/compile warmup (cold buckets record "
+                         "misses instead)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print Engine.stats() JSON after serving")
     args = ap.parse_args()
 
     import jax
@@ -24,6 +42,7 @@ def main():
     from repro.configs import get, load_all, reduced
     from repro.models import transformer as T
     from repro.serve.engine import Engine, Request
+    from repro.serve.scheduler import SchedulerConfig
 
     load_all()
     cfg = get(args.arch)
@@ -39,15 +58,46 @@ def main():
         params = restored["params"]
         print(f"loaded checkpoint step {man['step']}")
 
-    eng = Engine(cfg, params, max_batch=4, max_seq=args.max_seq,
-                 rng_seed=args.seed)
+    sched = None
+    pad_lens = (tuple(int(b) for b in args.buckets.split(","))
+                if args.buckets else cfg.serve_buckets)
+    if pad_lens:
+        sched = SchedulerConfig(pad_lens=pad_lens, waste_cap=args.waste_cap,
+                                max_batch=args.max_batch)
+    eng = Engine(cfg, params, max_batch=args.max_batch,
+                 max_seq=args.max_seq, rng_seed=args.seed, scheduler=sched)
+    print(f"engine mode={eng.mode} buckets="
+          f"{sorted(k.pad_len for k in eng.scheduler.buckets)}")
+    if not args.no_warmup:
+        rep = eng.warmup()
+        print(f"warmup: {rep.pop('traces')} traces; "
+              f"paths={ {k: v['paths'] for k, v in rep.items()} }")
     reqs = [Request(np.array([int(t) % cfg.vocab for t in p.split()],
                              np.int32),
                     max_new_tokens=args.max_new,
                     temperature=args.temperature)
             for p in args.prompts]
+    rejected = 0
     for i, r in enumerate(eng.generate(reqs)):
-        print(f"request {i}: prompt={list(r.prompt)} → out={r.out_tokens}")
+        if r.error:
+            rejected += 1
+            print(f"request {i}: prompt={np.asarray(r.prompt).tolist()} "
+                  f"REJECTED — {r.error}")
+            continue
+        print(f"request {i}: prompt={np.asarray(r.prompt).tolist()} "
+              f"→ out={r.out_tokens}  "
+              f"[bucket={r.bucket} padded_to={r.padded_to} "
+              f"cold={r.cold} latency={r.latency_s * 1e3:.0f}ms]")
+    st = eng.stats()
+    print(f"served={st['requests']['served']} "
+          f"microbatches={st['microbatches']['total']} "
+          f"(multi={st['microbatches']['multi_request']}) "
+          f"hit_rate={st['bucket_hit_rate']:.2f} "
+          f"post_warmup_recompiles={st['compile']['post_warmup_recompiles']}")
+    if args.stats:
+        print(json.dumps(st, indent=1, sort_keys=True))
+    if rejected:
+        raise SystemExit(f"{rejected} request(s) rejected at admission")
 
 
 if __name__ == "__main__":

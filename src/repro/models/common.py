@@ -240,16 +240,31 @@ def attention_block(params, x, dims: AttnDims, *, positions, causal=True,
 
 def decode_attention(params, x, dims: AttnDims, cache_k, cache_v, *,
                      position, rope_theta=10000.0, window: int | None = None,
-                     use_rope: bool = True):
+                     use_rope: bool = True, slot: Optional[jax.Array] = None,
+                     kv_valid: Optional[jax.Array] = None):
     """One-token decode.  x: [B, 1, d]; cache_k/v: [B, S_max, n_kv, dh]
     (possibly sequence-sharded — XLA inserts the two-pass softmax combine).
-    Returns (out [B, 1, d], new_k, new_v)."""
+    Returns (out [B, 1, d], new_k, new_v).
+
+    ``position`` may be per-request ([B] or [B, 1]) — it then feeds RoPE
+    only, and the shared scalar cache ``slot`` plus an explicit ``kv_valid``
+    [B, S_max] visibility mask must be supplied (the serve scheduler's
+    right-padded microbatches: each request attends its own real prefix
+    plus the generated suffix, never another request's padding)."""
     B = x.shape[0]
     nq, nkv, dh = dims.n_q, dims.n_kv, dims.head_dim
     S_max = cache_k.shape[1]
-    pos = jnp.full((B, 1), position) if jnp.ndim(position) == 0 else position
+    batched_pos = jnp.ndim(position) != 0
+    if batched_pos and (slot is None or kv_valid is None):
+        raise ValueError("per-request position needs explicit slot+kv_valid")
+    if kv_valid is not None and window is not None:
+        raise ValueError("kv_valid masking is full-attention only")
+    pos = position.reshape(B, 1) if batched_pos else jnp.full(
+        (B, 1), position)
     q, k, v = _qkv(params, x, dims, pos, rope_theta, use_rope)
-    slot = position % S_max if window is not None else position
+    if slot is None:
+        slot = position
+    slot = slot % S_max if window is not None else slot
     cache_k = jax.lax.dynamic_update_slice_in_dim(
         cache_k, k.astype(cache_k.dtype), slot, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(
@@ -260,14 +275,17 @@ def decode_attention(params, x, dims: AttnDims, cache_k, cache_v, *,
     s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32) * scale,
                    kk.astype(jnp.float32))
     kv_pos = jnp.arange(S_max)
-    if window is not None:
-        valid = (kv_pos[None, :] <= slot) | (slot + 1 > S_max)  # ring full
+    if kv_valid is not None:
+        valid = kv_valid
+    elif window is not None:
         # in a ring buffer every slot is within the window once full
         filled = jnp.minimum(position + 1, S_max)
         valid = kv_pos[None, :] < filled
     else:
         valid = kv_pos[None, :] <= position
-    s = jnp.where(valid[None, None], s, -1e30)
+    if valid.ndim == 1:
+        valid = valid[None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", p, vv.astype(jnp.float32))
     out = out.reshape(B, 1, nq * dh).astype(ACT_DTYPE)

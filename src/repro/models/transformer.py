@@ -69,7 +69,8 @@ def _init_layer(key, cfg: ArchConfig, mixer: str, ffn: str) -> dict:
 
 
 def _apply_layer(params, x, cfg: ArchConfig, mixer: str, ffn: str, *,
-                 positions, cache=None, position=None):
+                 positions, cache=None, position=None, slot=None,
+                 kv_valid=None):
     """Pre-norm residual block.  Returns (x, aux_loss, new_cache)."""
     dims = C.attn_dims(cfg.n_heads, cfg.n_kv_heads, cfg.d_model, cfg.tp,
                        cfg.head_dim, cfg.kv_dup_to_tp)
@@ -87,7 +88,7 @@ def _apply_layer(params, x, cfg: ArchConfig, mixer: str, ffn: str, *,
             att, ck, cv = C.decode_attention(
                 params["attn"], h, dims, cache["k"], cache["v"],
                 position=position, rope_theta=cfg.rope_theta, window=window,
-                use_rope=cfg.use_rope)
+                use_rope=cfg.use_rope, slot=slot, kv_valid=kv_valid)
             new_cache = {"k": ck, "v": cv}
         x = x + att
     elif mixer == "mamba":
@@ -334,12 +335,22 @@ def forward_prefill(params, cfg: ArchConfig, batch: dict):
     return params["lm_head"](x)
 
 
-def forward_decode(params, cfg: ArchConfig, tokens, caches, position):
+def forward_decode(params, cfg: ArchConfig, tokens, caches, position, *,
+                   slot=None, kv_valid=None):
     """One-token decode step.  tokens: [B, 1]; caches from init_cache.
-    Returns (logits [B, 1, V], new_caches)."""
+    Returns (logits [B, 1, V], new_caches).
+
+    ``position`` is normally a shared scalar.  The serve scheduler's
+    right-padded microbatches pass a per-request [B] position vector (true
+    token positions for RoPE) together with the shared scalar cache ``slot``
+    and a [B, S_max] ``kv_valid`` visibility mask; full-attention layers
+    then stay bit-exact with unbatched decoding despite padding."""
     x = C.embed(params["embed"], tokens)
     B = x.shape[0]
-    positions = jnp.full((B, 1), position)
+    if jnp.ndim(position) != 0:
+        positions = jnp.reshape(position, (B, 1))
+    else:
+        positions = jnp.full((B, 1), position)
     if cfg.encoder_only:
         raise ValueError("encoder-only arch has no decode step")
     new_caches = []
@@ -356,7 +367,7 @@ def forward_decode(params, cfg: ArchConfig, tokens, caches, position):
                 x, _, nc = _apply_layer(
                     layer_params[f"pos{pi}"], x, cfg, mixer, ffn,
                     positions=positions, cache=layer_cache[f"pos{pi}"],
-                    position=position)
+                    position=position, slot=slot, kv_valid=kv_valid)
                 new_cache[f"pos{pi}"] = nc
             return x.astype(ACT_DTYPE), new_cache
 

@@ -1,40 +1,70 @@
-"""Serving engine: batched prefill + decode with KV caches.
+"""Serving engine: shape-bucketed continuous batching with plan-warmed
+dispatch.
 
-Fixed-slot continuous batching: ``max_batch`` request slots; each request is
-prefilling once then decoded token-by-token; finished slots are refilled
-from the queue.  Prefill runs the full forward and *materializes* the KV
-caches; decode is the one-token step (the dry-run's ``serve_step``).
+Requests are admitted into :class:`repro.serve.scheduler.ShapeBucketScheduler`
+and drained as fixed-shape microbatches — (bucket batch, padded length,
+format-set tag) — so the steady state re-uses pre-compiled executables and
+pre-resolved GEMM plans (``tune.resolve_plans_for_buckets``) and never
+recompiles or re-plans.  ``Engine.stats()`` exposes the counters CI and the
+serve-throughput benchmark assert on (bucket hits/misses, post-warmup
+recompiles, microbatch occupancy, per-request latency).
+
+Exactness: microbatches are *right*-padded, so under causal attention a
+request's real tokens never attend padding; decode threads per-request
+positions (RoPE) plus a KV visibility mask through ``forward_decode``.
+Full-attention, non-MoE families are therefore bit-exact with unbatched
+serving ("masked" mode).  State-carrying mixers (Mamba/xLSTM), sliding
+windows, and MoE capacity routing cannot mask padding out of their state,
+so those families run in "equal" mode — a bucket only batches requests of
+one exact length (rows are then independent, still exact).
+
+Format-set variants: ``Engine(..., variants={tag: params})`` serves a
+mixed-format request stream — each request carries a tag and is bucketed by
+(shape, tag), dispatching to that tag's weights.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import common as C
 from repro.models import transformer as T
+from repro.serve.scheduler import (AdmissionError, BucketKey, QueueFullError,
+                                   SchedulerConfig, ShapeBucketScheduler)
+
+DEFAULT_PAD_LENS = (16, 32, 64, 128)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     prompt: np.ndarray            # int32 [S]
     max_new_tokens: int = 16
     temperature: float = 0.0      # 0 → greedy
+    fset: str = "default"         # format-set tag (weight variant)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # --- per-request accounting (filled by the engine) -------------------
+    bucket: str = ""              # bucket key that served it
+    padded_to: int = 0            # right-padded prompt length
+    cold: bool = False            # served through an unwarmed bucket
+    latency_s: float = 0.0        # admit → retire wall-clock
+    dispatch_paths: tuple = ()    # GEMM paths resolved for its bucket
+    error: str = ""               # admission failure (generate() sets it)
 
 
-def _prefill_with_cache(params, cfg: ArchConfig, tokens, caches):
-    """Run the prompt through the model while writing KV caches.
+def _prefill_collect(params, cfg: ArchConfig, tokens, caches):
+    """Scan the prompt through the decode step, writing KV caches and
+    collecting *every* step's logits ([S, B, V]) so the engine can read
+    each request's last real position in a right-padded microbatch.
 
-    Reuses the decode path positionally for correctness on all families by
-    feeding the prompt one token at a time under lax.scan (CPU-scale
-    serving; the TPU bulk-prefill path is forward_prefill + cache writes
-    fused by XLA)."""
+    Scalar per-step positions are exact here: with right-padding, causal
+    attention means a real token at step s only ever attends steps < s of
+    its own row, which are all real (padding is a suffix)."""
     B, S = tokens.shape
 
     def step(carry, s):
@@ -44,19 +74,23 @@ def _prefill_with_cache(params, cfg: ArchConfig, tokens, caches):
         return caches, logits[:, 0]
 
     caches, logits = jax.lax.scan(step, caches, jnp.arange(S))
-    return logits[-1], caches       # last-position logits [B, V]
+    return logits, caches
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
                  max_seq: int = 256, rng_seed: int = 0,
-                 summa_grid: Optional[tuple] = None):
+                 summa_grid: Optional[tuple] = None,
+                 variants: Optional[dict] = None,
+                 scheduler: Optional[SchedulerConfig] = None):
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
+        self.variants = {"default": params, **(variants or {})}
         # tune-once at setup: resolve a GEMM plan for every mixed-precision
         # layer at the decode batch size, so the jitted decode/prefill
         # traces route through fixed, cached dispatch decisions.
         from repro.tune import dispatch as _tune
+        self._tune = _tune
         _tune.warm_registry()
         self.gemm_plans = _tune.tune_linear_params(params, m_hint=max_batch)
         # distributed SUMMA path (selectable from ArchConfig or explicitly):
@@ -67,11 +101,139 @@ class Engine:
         if grid:
             from repro.core.summa import config_selfcheck
             self.summa_report = config_selfcheck(cfg, grid)
-        self._decode = jax.jit(
-            lambda p, t, c, pos: T.forward_decode(p, cfg, t, c, pos))
-        self._prefill = jax.jit(
-            lambda p, t, c: _prefill_with_cache(p, cfg, t, c))
+
+        self.mode = ("masked" if (cfg.block_type == "attn"
+                                  and cfg.attn_pattern == "full"
+                                  and not cfg.encoder_only
+                                  and cfg.n_experts == 0
+                                  and cfg.frontend == "none")
+                     else "equal")
+        sched_cfg = scheduler or SchedulerConfig(
+            pad_lens=tuple(cfg.serve_buckets or DEFAULT_PAD_LENS),
+            max_batch=max_batch)
+        # drop configured buckets that cannot decode even one token within
+        # the KV cache (pad_len + 1 > max_seq) instead of crashing warmup
+        fitting = tuple(p for p in sched_cfg.pad_lens
+                        if p + 1 <= max_seq)
+        if not fitting:
+            raise ValueError(
+                f"no serve bucket fits max_seq={max_seq} "
+                f"(pad_lens={sched_cfg.pad_lens})")
+        if fitting != sched_cfg.pad_lens:
+            sched_cfg = dataclasses.replace(sched_cfg, pad_lens=fitting)
+        # prompts longer than every bucket are still admissible up to the
+        # KV-cache bound — they serve through exact-length cold buckets
+        self.scheduler = ShapeBucketScheduler(
+            sched_cfg, fsets=tuple(self.variants), mode=self.mode,
+            max_prompt=max_seq - 1)
+
+        # --- compile counters (incremented at jit *trace* time only) -----
+        self._warmup_active = False
+        self._ref_active = False
+        self._counters = {"warmup_traces": 0, "steady_traces": 0,
+                          "reference_traces": 0,
+                          "post_warmup_recompiles": 0}
+        self._warmed_once = False
+
+        def note():
+            if self._warmup_active:
+                self._counters["warmup_traces"] += 1
+            elif self._ref_active:
+                self._counters["reference_traces"] += 1
+            else:
+                self._counters["steady_traces"] += 1
+                if self._warmed_once:
+                    self._counters["post_warmup_recompiles"] += 1
+
+        def prefill_fn(p, toks, caches, lengths):
+            # gather each request's last-real-position logits on device so
+            # only [B, V] (not [S, B, V]) crosses to host per prefill
+            note()
+            all_logits, caches = _prefill_collect(p, cfg, toks, caches)
+            last = all_logits[lengths - 1, jnp.arange(toks.shape[0])]
+            return last, caches
+
+        def decode_fn(p, tok, caches, pos):
+            note()
+            return T.forward_decode(p, cfg, tok, caches, pos)
+
+        def decode_masked_fn(p, tok, caches, lengths, t, pad_len):
+            note()
+            slot = jnp.int32(pad_len) + t - 1
+            positions = lengths + t - 1
+            kv_pos = jnp.arange(max_seq)
+            kv_valid = ((kv_pos[None, :] < lengths[:, None])
+                        | ((kv_pos[None, :] >= pad_len)
+                           & (kv_pos[None, :] <= slot)))
+            return T.forward_decode(p, cfg, tok, caches, positions,
+                                    slot=slot, kv_valid=kv_valid)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self._decode_masked = jax.jit(decode_masked_fn,
+                                      static_argnums=(5,))
         self.rng = np.random.default_rng(rng_seed)
+        self._served: list[Request] = []
+        self._mb_sizes: list[int] = []
+        self._decode_steps = 0
+        self._decode_time_s = 0.0
+
+    # ------------------------------------------------------------------
+    # warmup: pre-resolve tune plans + pre-compile every configured bucket
+    # ------------------------------------------------------------------
+
+    def warmup(self, keys=None) -> dict:
+        """Pre-resolve GEMM plans and pre-compile the prefill/decode
+        executables for every configured bucket (or the given keys), so
+        steady-state serving never recompiles.  Returns a report."""
+        keys = list(keys) if keys is not None else [
+            k for k, b in self.scheduler.buckets.items() if b.configured]
+        plan_table = self._tune.resolve_plans_for_buckets(
+            self.variants,
+            [(k.fset, self.scheduler.cfg.max_batch, k.pad_len)
+             for k in keys])
+        report = {}
+        self._warmup_active = True
+        try:
+            for key in keys:
+                bucket = self.scheduler.buckets[key]
+                if bucket.warmed:
+                    continue
+                if key.pad_len + 1 > self.max_seq:
+                    raise AdmissionError(
+                        f"bucket {key} does not fit max_seq {self.max_seq}")
+                self._compile_bucket(key, bucket.batch)
+                bucket.warmed = True
+                plans = plan_table.get((key.fset, bucket.batch), {})
+                bucket.paths = tuple({p.path for p in plans.values()})
+                report[str(key)] = {"paths": sorted(bucket.paths)}
+        finally:
+            self._warmup_active = False
+            self._warmed_once = True
+        report["traces"] = self._counters["warmup_traces"]
+        return report
+
+    def _compile_bucket(self, key: BucketKey, batch: int) -> None:
+        """Trace+compile the bucket's prefill and first decode step on
+        dummy data (jit caches both; steady state is pure cache hits)."""
+        params = self.variants[key.fset]
+        S = key.pad_len
+        toks = jnp.zeros((batch, S), jnp.int32)
+        caches = T.init_cache(self.cfg, batch, self.max_seq)
+        logits, caches = self._prefill(params, toks, caches,
+                                       jnp.full((batch,), S, jnp.int32))
+        tok = jnp.zeros((batch, 1), jnp.int32)
+        if self.mode == "masked":
+            lengths = jnp.full((batch,), S, jnp.int32)
+            out = self._decode_masked(params, tok, caches, lengths,
+                                      jnp.int32(1), S)
+        else:
+            out = self._decode(params, tok, caches, jnp.int32(S))
+        jax.block_until_ready(out[0])
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
 
     def _sample(self, logits: np.ndarray, temps: np.ndarray) -> np.ndarray:
         greedy = logits.argmax(-1)
@@ -82,34 +244,207 @@ class Engine:
                 out[i] = self.rng.choice(len(p), p=np.asarray(p))
         return out.astype(np.int32)
 
+    def submit(self, req: Request) -> BucketKey:
+        """Admit one request (raises AdmissionError / QueueFullError).
+
+        KV head-room: the last cache slot a microbatch writes is
+        ``pad_len + max_new − 2`` (the final sampled token is never written
+        back), and every co-batched request passed this same check, so the
+        per-request bound ``pad_len + max_new − 1 ≤ max_seq`` covers the
+        batch maximum too.  A request whose *padded* length breaks the
+        bound but whose exact length fits falls back to an exact-length
+        (cold) bucket instead of being rejected.
+
+        All checks run against a *prospective* (commit=False) bucket key,
+        so a rejected request never creates/evicts buckets or skews the
+        redirect counters as a side effect."""
+        L = len(req.prompt)
+        if self.scheduler.pending() >= self.scheduler.cfg.max_queue:
+            self.scheduler.rejected += 1
+            raise QueueFullError(
+                f"admission queue full "
+                f"({self.scheduler.cfg.max_queue} pending)")
+        try:
+            key = self.scheduler.bucket_for(L, req.fset, commit=False)
+        except AdmissionError:
+            self.scheduler.rejected += 1
+            raise
+        use_exact = False
+        if key.pad_len + req.max_new_tokens - 1 > self.max_seq:
+            if L + req.max_new_tokens - 1 <= self.max_seq:
+                use_exact = True
+            else:
+                self.scheduler.rejected += 1
+                raise AdmissionError(
+                    f"prompt {L} (padded {key.pad_len}) + "
+                    f"{req.max_new_tokens} new tokens exceeds max_seq "
+                    f"{self.max_seq}")
+        # definitely admissible — commit the bucket choice
+        key = (self.scheduler.exact_bucket(L, req.fset) if use_exact
+               else self.scheduler.bucket_for(L, req.fset))
+        req._t_admit = time.perf_counter()
+        return self.scheduler.admit(req, L, req.fset, key=key)
+
     def generate(self, requests: list[Request]) -> list[Request]:
-        """Serve a list of requests with fixed-slot batching."""
-        queue = list(requests)
-        while queue:
-            batch = queue[: self.max_batch]
-            queue = queue[self.max_batch:]
-            S = max(len(r.prompt) for r in batch)
-            B = len(batch)
-            toks = np.zeros((B, S), np.int32)
-            for i, r in enumerate(batch):
-                toks[i, S - len(r.prompt):] = r.prompt  # left-pad
-            caches = T.init_cache(self.cfg, B, self.max_seq)
-            logits, caches = self._prefill(self.params, jnp.asarray(toks),
-                                           caches)
-            temps = np.array([r.temperature for r in batch])
-            cur = self._sample(np.asarray(logits), temps)
-            for i, r in enumerate(batch):
-                r.out_tokens.append(int(cur[i]))
-            max_new = max(r.max_new_tokens for r in batch)
-            for step in range(1, max_new):
+        """Admit a list of requests and drain the queue to completion.
+
+        Inadmissible requests never strand the admissible ones: they are
+        returned with ``error`` set (and ``done`` False) while the rest of
+        the stream is served; callers needing the exception use
+        :meth:`submit` directly."""
+        for r in requests:
+            try:
+                self.submit(r)
+            except (AdmissionError, QueueFullError) as e:
+                r.error = f"{type(e).__name__}: {e}"
+        self.run()
+        return requests
+
+    def run(self) -> None:
+        """Drain the admission queue, one microbatch at a time."""
+        while True:
+            mb = self.scheduler.next_microbatch()
+            if mb is None:
+                return
+            bucket, reqs = mb
+            if reqs:
+                self._serve_microbatch(bucket, reqs)
+
+    def _serve_microbatch(self, bucket, reqs: list[Request]) -> None:
+        key = bucket.key
+        params = self.variants[key.fset]
+        S = key.pad_len
+        B = bucket.batch
+        n_real = len(reqs)
+        # fixed-shape microbatch: right-pad prompts to the bucket length and
+        # duplicate the last request into unused slots (outputs discarded)
+        toks = np.zeros((B, S), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for i in range(B):
+            r = reqs[min(i, n_real - 1)]
+            toks[i, : len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+        was_warm = bucket.warmed
+        if was_warm:
+            bucket.hits += 1
+        else:
+            bucket.misses += 1
+        t0 = time.perf_counter()
+        caches = T.init_cache(self.cfg, B, self.max_seq)
+        lengths_j = jnp.asarray(lengths)
+        logits, caches = self._prefill(params, jnp.asarray(toks), caches,
+                                       lengths_j)
+        logits = np.asarray(logits)                      # [B, V]
+        temps = np.array([reqs[min(i, n_real - 1)].temperature
+                          for i in range(B)])
+        cur = self._sample(logits, temps)
+        for i, r in enumerate(reqs):
+            r.out_tokens.append(int(cur[i]))
+        max_new = max(r.max_new_tokens for r in reqs)
+        for step in range(1, max_new):
+            if self.mode == "masked":
+                logits, caches = self._decode_masked(
+                    params, jnp.asarray(cur[:, None]), caches, lengths_j,
+                    jnp.int32(step), S)
+            else:
                 pos = S + step - 1
                 logits, caches = self._decode(
-                    self.params, jnp.asarray(cur[:, None]), caches,
+                    params, jnp.asarray(cur[:, None]), caches,
+                    jnp.int32(pos))
+            cur = self._sample(np.asarray(logits[:, 0]), temps)
+            for i, r in enumerate(reqs):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(cur[i]))
+        dt = time.perf_counter() - t0
+        bucket.warmed = True        # compiled now — next time is a hit
+        bucket.served += n_real
+        bucket.real_tokens += int(lengths[:n_real].sum())
+        # waste = pad suffixes of real rows + entire filler (duplicate)
+        # rows, so the metric reflects all non-useful prefill compute
+        bucket.padded_tokens += int(B * S - lengths[:n_real].sum())
+        self._mb_sizes.append(n_real)
+        for r in reqs:
+            r.done = True
+            r.bucket = str(key)
+            r.padded_to = S
+            r.cold = not was_warm
+            r.dispatch_paths = bucket.paths
+            r.latency_s = time.perf_counter() - getattr(r, "_t_admit", t0)
+            self._served.append(r)
+        self._decode_steps += max_new
+        self._decode_time_s += dt
+
+    # ------------------------------------------------------------------
+    # unbatched reference (ground truth for parity tests / debugging)
+    # ------------------------------------------------------------------
+
+    def generate_reference(self, requests: list[Request]) -> list[Request]:
+        """Serve requests one at a time with no padding — the semantic
+        baseline the scheduler path must match (masked/equal modes are
+        bit-exact for greedy decoding).  Its compiles are counted under
+        ``reference_traces``, not as recompiles of the serving path."""
+        self._ref_active = True
+        try:
+            return self._generate_reference(requests)
+        finally:
+            self._ref_active = False
+
+    def _generate_reference(self, requests: list[Request]) -> list[Request]:
+        for r in requests:
+            params = self.variants[r.fset]
+            L = len(r.prompt)
+            toks = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
+            caches = T.init_cache(self.cfg, 1, self.max_seq)
+            logits, caches = self._prefill(params, toks, caches,
+                                           jnp.full((1,), L, jnp.int32))
+            temps = np.array([r.temperature])
+            cur = self._sample(np.asarray(logits), temps)
+            r.out_tokens.append(int(cur[0]))
+            for step in range(1, r.max_new_tokens):
+                pos = L + step - 1
+                logits, caches = self._decode(
+                    params, jnp.asarray(cur[:, None]), caches,
                     jnp.int32(pos))
                 cur = self._sample(np.asarray(logits[:, 0]), temps)
-                for i, r in enumerate(batch):
-                    if len(r.out_tokens) < r.max_new_tokens:
-                        r.out_tokens.append(int(cur[i]))
-            for r in batch:
-                r.done = True
+                r.out_tokens.append(int(cur[0]))
+            r.done = True
         return requests
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Counters for benchmarks / CI assertions."""
+        served = self._served
+        mbs = self._mb_sizes
+        totals = self.scheduler.totals()   # eviction-proof bucket counters
+        hits, misses = totals["hits"], totals["misses"]
+        real, padded = totals["real_tokens"], totals["padded_tokens"]
+        gen = sum(len(r.out_tokens) for r in served)
+        return {
+            "mode": self.mode,
+            "requests": {"served": len(served),
+                         "rejected": self.scheduler.rejected},
+            "tokens": {"prompt": real, "padded": padded, "generated": gen},
+            "padding_waste": padded / (real + padded) if real + padded
+            else 0.0,
+            "microbatches": {
+                "total": len(mbs),
+                "multi_request": sum(1 for n in mbs if n > 1),
+                "mean_size": float(np.mean(mbs)) if mbs else 0.0,
+                "max_size": max(mbs) if mbs else 0,
+            },
+            "bucket_hits": hits, "bucket_misses": misses,
+            "bucket_hit_rate": hits / (hits + misses) if hits + misses
+            else 0.0,
+            "compile": dict(self._counters),
+            "decode_steps": self._decode_steps,
+            "decode_time_s": self._decode_time_s,
+            "latency_s": {
+                "mean": float(np.mean([r.latency_s for r in served]))
+                if served else 0.0,
+                "max": max((r.latency_s for r in served), default=0.0),
+            },
+            "scheduler": self.scheduler.stats(),
+        }

@@ -379,6 +379,36 @@ def linear_matmul(x, w: KSplitWeight):
     return ksplit_matmul(x, w)
 
 
+def resolve_plans_for_buckets(params_by_tag: dict, buckets, *,
+                              measure: bool = False,
+                              cache: S.PlanCache | None = None
+                              ) -> dict[tuple, dict[str, GemmPlan]]:
+    """Plan-prefetch for the serve scheduler's shape buckets.
+
+    ``buckets`` is an iterable of ``(tag, batch, pad_len)`` where ``tag``
+    names a weight variant in ``params_by_tag`` (format-set variants of the
+    same architecture).  The serve engine prefills by scanning the decode
+    step, so every linear in a bucket runs at ``m = batch`` — one
+    resolution per distinct (tag, batch) covers prefill and decode alike
+    (``pad_len`` is accepted so a future bulk-prefill path can add its
+    ``batch * pad_len`` hint without changing callers).
+
+    Returns ``{(tag, batch): {plan_cache_key: GemmPlan}}``; every resolved
+    plan is also loaded into the in-memory registry, so the engine's traces
+    hit fixed dispatch decisions and never fall back mid-serve."""
+    out: dict[tuple, dict[str, GemmPlan]] = {}
+    for tag, batch, _pad_len in buckets:
+        hint = (tag, int(batch))
+        if hint in out:
+            continue
+        if tag not in params_by_tag:
+            raise KeyError(f"unknown weight-variant tag {tag!r} "
+                           f"(have {sorted(params_by_tag)})")
+        out[hint] = tune_linear_params(params_by_tag[tag], m_hint=batch,
+                                       measure=measure, cache=cache)
+    return out
+
+
 def tune_linear_params(params, m_hint: int, *, measure: bool = False,
                        cache: S.PlanCache | None = None,
                        warmup: int = 1, iters: int = 3) -> dict[str, GemmPlan]:

@@ -1,0 +1,125 @@
+"""Plan-cache hygiene: validate a persisted ``tune_cache.json``.
+
+The CI ``tune-cache-hygiene`` step runs this against the checked-in
+``results/tune_cache.json`` and fails on drift, so the cache the cache-only
+CI mode serves from can never silently rot.  Checks:
+
+* **schema** — the file declares ``CACHE_SCHEMA`` (2) and carries the
+  per-format registry stamps targeted invalidation needs;
+* **no stale v1 keys** — every plan key has the full 9-segment v2 anatomy
+  ``dev|op|MNK|tile|formats|ratioA|ratioB|ratioC|struct`` with a real
+  format-set segment at index 4 (v1 keys predate format sets);
+* **deterministic ordering** — the file is byte-identical to its own
+  canonical re-dump (``indent=1, sort_keys=True`` — what ``PlanCache.save``
+  emits), so diffs stay reviewable and caches merge cleanly;
+* **round-trip** — loading through :class:`repro.tune.search.PlanCache`
+  and saving again preserves every plan and stamp (shelving included).
+
+CLI::
+
+    python -m repro.tune.hygiene results/tune_cache.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+import tempfile
+
+from repro.tune.search import CACHE_SCHEMA, PlanCache
+
+#: ``dev|op|MNK|tile|formats|ratio…`` — segment count of a v2 plan key
+V2_SEGMENTS = 9
+_RATIO_SEG = re.compile(r"^\d+D\d+S(\d+Q)?$")   # what sits at idx 4 in v1
+_MNK_SEG = re.compile(r"^M\d+N\d+K\d+$")
+_TILE_SEG = re.compile(r"^t\d+$")
+
+
+def _canonical(payload: dict) -> str:
+    return json.dumps(payload, indent=1, sort_keys=True)
+
+
+def validate_cache(path: str) -> list[str]:
+    """Return a list of human-readable problems (empty == clean)."""
+    problems: list[str] = []
+    if not os.path.exists(path):
+        return [f"{path}: missing"]
+    with open(path) as f:
+        text = f.read()
+    try:
+        payload = json.loads(text)
+    except json.JSONDecodeError as e:
+        return [f"{path}: invalid JSON ({e})"]
+
+    schema = payload.get("schema", payload.get("version", 1))
+    if schema != CACHE_SCHEMA:
+        problems.append(f"schema is {schema!r}, expected {CACHE_SCHEMA}")
+    stamps = payload.get("formats")
+    if not isinstance(stamps, dict) or not stamps:
+        problems.append("missing per-format registry stamps ('formats')")
+        stamps = {}
+
+    plans = payload.get("plans", {})
+    for key, ent in plans.items():
+        segs = key.split("|")
+        if len(segs) != V2_SEGMENTS:
+            problems.append(f"key has {len(segs)} segments (v1-era?): {key}")
+            continue
+        if not _MNK_SEG.match(segs[2]) or not _TILE_SEG.match(segs[3]):
+            problems.append(f"malformed shape/tile segments: {key}")
+        if _RATIO_SEG.match(segs[4]):
+            problems.append(f"stale v1 key (ratio where the format-set "
+                            f"segment belongs): {key}")
+            continue
+        unknown = [n for n in segs[4].split("+") if n not in stamps]
+        if unknown:
+            problems.append(f"key references unstamped formats {unknown}: "
+                            f"{key}")
+        missing = [f for f in ("path", "bm", "bn", "bk") if f not in ent]
+        if missing:
+            problems.append(f"entry missing fields {missing}: {key}")
+
+    canon = _canonical(payload)
+    if text.rstrip("\n") != canon:
+        problems.append("file is not its own canonical dump "
+                        "(indent=1, sort_keys) — non-deterministic writer?")
+
+    # PlanCache round-trip: load → save must preserve plans + stamps
+    # (shelved unknown-format entries included)
+    if not problems:
+        cache = PlanCache(path)
+        fd, tmp = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        try:
+            cache.save_as(tmp)
+            with open(tmp) as f:
+                rt = json.load(f)
+            if rt.get("plans") != plans:
+                lost = sorted(set(plans) ^ set(rt.get("plans", {})))
+                problems.append(f"round-trip changed the plan set: {lost}")
+            for name, stamp in stamps.items():
+                if rt.get("formats", {}).get(name, stamp) != stamp:
+                    problems.append(f"round-trip changed stamp for {name}")
+        finally:
+            os.unlink(tmp)
+    return problems
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    path = args[0] if args else "results/tune_cache.json"
+    problems = validate_cache(path)
+    if problems:
+        print(f"{path}: {len(problems)} problem(s)", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    with open(path) as f:
+        n = len(json.load(f).get("plans", {}))
+    print(f"{path}: clean ({n} plans, schema {CACHE_SCHEMA})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -158,6 +158,20 @@ class PlanCache:
                        "plans": plans}, f, indent=1, sort_keys=True)
         os.replace(tmp, self.path)
 
+    def save_as(self, path: str) -> "PlanCache":
+        """Write this cache's full contents — plans, meta, shelved
+        unknown-format entries and their stamps — to another path (the
+        hygiene validator's round-trip check).  Returns the new cache."""
+        self._ensure_loaded()
+        out = PlanCache(path)
+        out._loaded = True
+        out._mem = dict(self._mem)
+        out._meta = {k: dict(v) for k, v in self._meta.items()}
+        out._shelved = {k: dict(v) for k, v in self._shelved.items()}
+        out._shelved_stamps = dict(self._shelved_stamps)
+        out.save()
+        return out
+
     def __len__(self) -> int:
         self._ensure_loaded()
         return len(self._mem)

@@ -1,0 +1,67 @@
+"""Benchmark harness: error collection (run-all-then-fail) + bench schema."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import bench_io                      # noqa: E402
+from benchmarks.run import run_benches               # noqa: E402
+
+
+def test_run_benches_collects_errors_and_keeps_going():
+    calls = []
+
+    def ok(smoke):
+        calls.append("ok")
+        return [("ok_bench", 1.0, "fine")]
+
+    def boom(smoke):
+        calls.append("boom")
+        raise RuntimeError("kaput")
+
+    def late(smoke):
+        calls.append("late")
+        return [("late_bench", 2.0, f"smoke={smoke}")]
+
+    rows, errors = run_benches(
+        [("ok", ok), ("boom", boom), ("late", late)], smoke=True)
+    # every bench ran despite the failure in the middle
+    assert calls == ["ok", "boom", "late"]
+    assert [r[0] for r in rows] == ["ok_bench", "boom", "late_bench"]
+    assert rows[1][2].startswith("FAILED:RuntimeError")
+    assert errors == [{"name": "boom", "error": "RuntimeError: kaput"}]
+    # smoke flag reaches the benches
+    assert rows[2][2] == "smoke=True"
+
+
+def test_run_benches_clean_run_has_no_errors():
+    rows, errors = run_benches([("a", lambda s: [("a", 0.0, "x")])])
+    assert errors == [] and rows == [("a", 0.0, "x")]
+
+
+def test_bench_io_round_trip(tmp_path):
+    path = str(tmp_path / "BENCH_test.json")
+    rows = [("serve_stream", 123.4, "tokens_per_s=10"),
+            ("gemm", 5.0, "ok")]
+    payload = bench_io.write_bench(
+        path, "serve", rows, meta={"smoke": True},
+        errors=[{"name": "x", "error": "E: y"}])
+    loaded = bench_io.read_bench(path)
+    assert loaded == payload
+    assert loaded["schema"] == bench_io.BENCH_SCHEMA
+    assert loaded["suite"] == "serve"
+    assert loaded["rows"][0] == {"name": "serve_stream",
+                                 "us_per_call": 123.4,
+                                 "derived": "tokens_per_s=10"}
+    assert loaded["meta"] == {"smoke": True}
+    assert loaded["errors"] == [{"name": "x", "error": "E: y"}]
+
+
+def test_bench_io_rejects_unknown_schema(tmp_path):
+    path = str(tmp_path / "BENCH_bad.json")
+    with open(path, "w") as f:
+        f.write('{"schema": 99, "rows": []}')
+    with pytest.raises(ValueError):
+        bench_io.read_bench(path)

@@ -237,3 +237,84 @@ def test_tune_linear_params_fills_registry():
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(ksplit_matmul(x, lin.w)),
                                rtol=2e-2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# plan-cache hygiene (CI tune-cache-hygiene step)
+# ---------------------------------------------------------------------------
+
+def test_hygiene_checked_in_cache_is_clean():
+    from repro.tune.hygiene import validate_cache
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results", "tune_cache.json")
+    assert validate_cache(path) == []
+
+
+def test_hygiene_detects_drift(tmp_path):
+    import json
+
+    from repro.tune.hygiene import validate_cache
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results", "tune_cache.json")
+    with open(path) as f:
+        payload = json.load(f)
+
+    # stale v1 key (ratio segment where the format set belongs)
+    bad = dict(payload)
+    key = next(iter(payload["plans"]))
+    v1_key = "|".join(k for i, k in enumerate(key.split("|")) if i != 4)
+    bad["plans"] = {**payload["plans"],
+                    v1_key: payload["plans"][key]}
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps(bad, indent=1, sort_keys=True))
+    assert any("v1" in msg for msg in validate_cache(str(p)))
+
+    # wrong schema
+    bad = {**payload, "schema": 1}
+    p = tmp_path / "schema.json"
+    p.write_text(json.dumps(bad, indent=1, sort_keys=True))
+    assert any("schema" in msg for msg in validate_cache(str(p)))
+
+    # non-canonical ordering / formatting
+    p = tmp_path / "order.json"
+    p.write_text(json.dumps(payload, indent=2, sort_keys=False))
+    assert any("canonical" in msg for msg in validate_cache(str(p)))
+
+    # missing format stamps
+    bad = {k: v for k, v in payload.items() if k != "formats"}
+    p = tmp_path / "stamps.json"
+    p.write_text(json.dumps(bad, indent=1, sort_keys=True))
+    assert any("stamps" in msg for msg in validate_cache(str(p)))
+
+
+def test_hygiene_writer_emits_canonical_file(tmp_path):
+    from repro.tune.costmodel import GemmPlan
+    from repro.tune.hygiene import validate_cache
+
+    path = str(tmp_path / "cache.json")
+    cache = TS.PlanCache(path)
+    A, B, C = _operands(64, 64, 64, 16)
+    prob = TD.problem_of(*TD.canonical_operands(A, B, C))
+    key = TS.plan_key(TS.detect_device(), prob)
+    # insertion order deliberately unsorted: z-device first
+    cache.put("z" + key, GemmPlan(path="ref", bm=16, bn=16, bk=16))
+    cache.put(key, GemmPlan(path="ref", bm=16, bn=16, bk=16))
+    assert validate_cache(path) == []
+
+
+def test_resolve_plans_for_buckets():
+    from repro.core.linear import init_mp_linear
+    lin = init_mp_linear(jax.random.PRNGKey(0), 64, 32,
+                         Policy(kind="ratio", ratio_high=0.5), tile=8)
+    params = {"lin": lin}
+    table = TD.resolve_plans_for_buckets(
+        {"default": params, "alt": params},
+        [("default", 4, 8), ("default", 4, 16), ("alt", 4, 8)])
+    # deduped on (tag, batch): two tags x one batch size
+    assert set(table) == {("default", 4), ("alt", 4)}
+    for plans in table.values():
+        assert all(p.path in ("ksplit_xla", "ksplit_pallas")
+                   for p in plans.values())
+    with pytest.raises(KeyError):
+        TD.resolve_plans_for_buckets({"default": params},
+                                     [("missing", 4, 8)])
