@@ -1,0 +1,194 @@
+"""In-repo bench-baseline regression gate.
+
+Diffs fresh ``BENCH_<suite>.json`` runs (``bench_io`` schema) against the
+checked-in baselines in ``results/bench_baseline/`` and fails on
+regression, so the perf-trajectory CI lane finally *gates* instead of only
+archiving artifacts.
+
+What is compared — and deliberately not compared:
+
+* **wall-clock is never gated** (``us_per_call``, throughput/speedup keys):
+  shared CI runners make timing noise, not signal;
+* **counters and derived metrics are gated** with tolerance bands: every
+  ``key=value`` pair in a row's ``derived`` string is compared — numeric
+  values within ``max(rel_tol·|baseline|, abs_slack)`` (error-like keys on
+  a log scale), non-numeric values exactly;
+* **row coverage is gated**: a baseline row missing from the fresh run, a
+  ``FAILED:`` marker row, or a non-empty ``errors`` list fails the gate
+  (new rows are reported but allowed — the trajectory is expected to grow).
+
+Re-blessing baselines (see ARCHITECTURE.md "CI notes"): run the smoke
+benchmarks locally and copy the fresh files over
+``results/bench_baseline/`` in the same PR that changes the numbers.
+
+    PYTHONPATH=src python benchmarks/compare.py \
+        --baseline results/bench_baseline --fresh . --suites gemm,serve,solve
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.bench_io import read_bench  # noqa: E402
+
+#: wall-clock-derived keys — reported, never gated
+IGNORE_KEYS = {"tokens_per_s", "speedup", "gemm_frac", "cache", "final"}
+#: audit counters that must match exactly (no band)
+EXACT_KEYS = {"conv", "fresh"}
+#: error-magnitude keys compared on a log scale (within one decade);
+#: keys prefixed ``log10_`` are already logs and band on the raw value
+LOG_KEYS = {"rel_err"}
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    """'a=1;b=x;flag' → {'a': '1', 'b': 'x', 'flag': ''}."""
+    out: dict[str, str] = {}
+    for seg in str(derived).split(";"):
+        if not seg:
+            continue
+        key, _, val = seg.partition("=")
+        out[key.strip()] = val.strip()
+    return out
+
+
+def _numeric(v: str) -> float | None:
+    """Leading float of a value ('0.67x' → 0.67), or None."""
+    for end in range(len(v), 0, -1):
+        try:
+            return float(v[:end])
+        except ValueError:
+            continue
+    return None
+
+
+def compare_values(key: str, base: str, fresh: str, *, rel_tol: float,
+                   abs_slack: float) -> str | None:
+    """None when acceptable, else a human-readable reason."""
+    if key in IGNORE_KEYS:
+        return None
+    if base == fresh:
+        return None
+    nb, nf = _numeric(base), _numeric(fresh)
+    if key in EXACT_KEYS:
+        return f"{key}: {base} -> {fresh} (must match exactly)"
+    if nb is None or nf is None:
+        return f"{key}: {base!r} -> {fresh!r} (non-numeric mismatch)"
+    if key.startswith("log10_"):
+        # already in log space: a decade is one unit of the raw value
+        if nf - nb > 1.0:                      # only worse errors regress
+            return f"{key}: {base} -> {fresh} (>1 decade worse)"
+        return None
+    if key in LOG_KEYS or "err" in key:
+        import math
+        lb = math.log10(max(abs(nb), 1e-30))
+        lf = math.log10(max(abs(nf), 1e-30))
+        if lf - lb > 1.0:                      # only worse errors regress
+            return f"{key}: {base} -> {fresh} (>1 decade worse)"
+        return None
+    if abs(nf - nb) > max(rel_tol * abs(nb), abs_slack):
+        return f"{key}: {base} -> {fresh} (band ±max({rel_tol:.0%}, "\
+               f"{abs_slack:g}))"
+    return None
+
+
+def compare_suite(base: dict, fresh: dict, *, rel_tol: float,
+                  abs_slack: float) -> tuple[list[str], list[str]]:
+    """(regressions, notes) for one suite payload pair."""
+    regressions: list[str] = []
+    notes: list[str] = []
+    if bool(base["meta"].get("smoke")) != bool(fresh["meta"].get("smoke")):
+        regressions.append("smoke-mode mismatch between baseline and fresh "
+                           "run — compare like with like")
+        return regressions, notes
+    if fresh.get("errors"):
+        for e in fresh["errors"]:
+            regressions.append(f"{e.get('name')}: errored — {e.get('error')}")
+    brows = {r["name"]: r for r in base.get("rows", [])}
+    frows = {r["name"]: r for r in fresh.get("rows", [])}
+    for name in sorted(set(frows) - set(brows)):
+        notes.append(f"new row {name} (not yet in baseline)")
+    for name, brow in sorted(brows.items()):
+        frow = frows.get(name)
+        if frow is None:
+            regressions.append(f"{name}: row disappeared from the fresh run")
+            continue
+        if str(frow["derived"]).startswith("FAILED"):
+            regressions.append(f"{name}: {frow['derived']}")
+            continue
+        bd = parse_derived(brow["derived"])
+        fd = parse_derived(frow["derived"])
+        for key in bd:
+            if key not in fd:
+                regressions.append(f"{name}: derived key {key!r} vanished")
+                continue
+            why = compare_values(key, bd[key], fd[key], rel_tol=rel_tol,
+                                 abs_slack=abs_slack)
+            if why:
+                regressions.append(f"{name}: {why}")
+    return regressions, notes
+
+
+def _delta_table(base: dict, fresh: dict) -> list[str]:
+    brows = {r["name"]: r for r in base.get("rows", [])}
+    lines = []
+    for r in fresh.get("rows", []):
+        b = brows.get(r["name"])
+        mark = " " if b else "+"
+        bd = b["derived"] if b else "-"
+        lines.append(f" {mark} {r['name']:38s} {bd}")
+        if b and b["derived"] != r["derived"]:
+            lines.append(f"   {'':38s} -> {r['derived']}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="results/bench_baseline")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the fresh BENCH_<suite>.json")
+    ap.add_argument("--suites", default="gemm,serve,solve")
+    ap.add_argument("--rel-tol", type=float, default=0.5)
+    ap.add_argument("--abs-slack", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    all_reg: list[str] = []
+    for suite in args.suites.split(","):
+        suite = suite.strip()
+        bpath = os.path.join(args.baseline, f"BENCH_{suite}.json")
+        fpath = os.path.join(args.fresh, f"BENCH_{suite}.json")
+        if not os.path.exists(bpath):
+            all_reg.append(f"{suite}: no baseline at {bpath} — bless one "
+                           "(see ARCHITECTURE.md CI notes)")
+            continue
+        if not os.path.exists(fpath):
+            all_reg.append(f"{suite}: fresh run {fpath} missing")
+            continue
+        base, fresh = read_bench(bpath), read_bench(fpath)
+        reg, notes = compare_suite(base, fresh, rel_tol=args.rel_tol,
+                                   abs_slack=args.abs_slack)
+        print(f"== {suite} ({len(fresh.get('rows', []))} rows vs baseline "
+              f"{len(base.get('rows', []))}) ==")
+        for line in _delta_table(base, fresh):
+            print(line)
+        for n in notes:
+            print(f"  note: {n}")
+        for r in reg:
+            print(f"  REGRESSION: {r}")
+        all_reg += [f"{suite}: {r}" for r in reg]
+
+    if all_reg:
+        print(f"\n{len(all_reg)} regression(s) vs {args.baseline}",
+              file=sys.stderr)
+        return 1
+    print("\nbench baselines: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -77,7 +77,8 @@ def bench(smoke: bool = True, n_requests: int = 12, max_new: int = 4
     gen = st["tokens"]["generated"]
     rows = [
         ("serve_warmup", warmup_s * 1e6,
-         f"buckets={len([b for b in eng.scheduler.buckets.values() if b.warmed])};"
+         "buckets="
+         f"{len([b for b in eng.scheduler.buckets.values() if b.warmed])};"
          f"traces={st['compile']['warmup_traces']}"),
         ("serve_stream_batched", serve_s * 1e6,
          f"requests={st['requests']['served']};tokens_per_s="

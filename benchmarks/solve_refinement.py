@@ -1,0 +1,97 @@
+"""Refinement-solver benchmark: iterations-to-converge × final precision
+mix × GEMM fraction for paper-style starting D:S:Q ratios.
+
+Each case solves an ill-conditioned graded-SPD system from a different
+starting map and reports the adaptive-precision outcome: sweeps and
+escalations to convergence, the final map composition (D/Q percent and
+storage relative to uniform-HIGH), the HPL-MxP metric, the share of solve
+time spent in tile-centric GEMMs, and the zero-mid-solve-retune audit.
+
+    PYTHONPATH=src python benchmarks/solve_refinement.py --smoke \
+        --out BENCH_solve.json
+
+The CI ``perf-trajectory`` lane runs ``--smoke`` and the nightly lane runs
+the full 512×512 acceptance shape; rows land in ``BENCH_solve.json``
+(``bench_io`` schema) and are regression-gated by ``benchmarks/compare.py``
+against ``results/bench_baseline/``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+#: paper-style starting maps (name, ratio_high, ratio_low8)
+CASES = [
+    ("0D100S", 0.0, 0.0),
+    ("20D80S", 0.2, 0.0),
+    ("0D80S20Q", 0.0, 0.2),
+]
+
+
+def _derived(rep, fset) -> str:
+    import numpy as np
+    d_pct = 100.0 * float((rep.final_map == fset.high).mean())
+    q_pct = (100.0 * float((rep.final_map == fset.low8).mean())
+             if fset.low8 is not None else 0.0)
+    bytes_pct = 100.0 * rep.storage_bytes / rep.uniform_high_bytes
+    log_metric = float(np.log10(max(rep.metric, 1e-30)))
+    return (f"conv={int(rep.converged)};sweeps={rep.sweeps};"
+            f"esc={rep.escalations};D_pct={d_pct:.1f};Q_pct={q_pct:.1f};"
+            f"bytes_pct={bytes_pct:.1f};log10_metric={log_metric:.1f};"
+            f"fresh={rep.fresh_resolutions};"
+            f"gemm_frac={rep.gemm_fraction:.2f};final={rep.final_ratio}")
+
+
+def bench(smoke: bool = True) -> list[tuple]:
+    from repro.core.formats import DEFAULT_FORMATS
+    from repro.solve import SolveConfig, graded_spd, rhs_for_solution, solve
+
+    n, rho = (128, 0.8) if smoke else (512, 0.9)
+    a = graded_spd(n, cond=1e4, rho=rho, seed=0)
+    _xt, b = rhs_for_solution(a, seed=1)
+    rows = []
+    for name, hi, lo8 in CASES:
+        rep = solve(a, b, SolveConfig(
+            tile=16, ratio_high=hi, ratio_low8=lo8, max_sweeps=40))
+        rows.append((f"solve_lu_{n}_{name}", rep.total_seconds * 1e6,
+                     _derived(rep, DEFAULT_FORMATS)))
+    # the CG path on the same operator (SPD), default start
+    rep = solve(a, b, SolveConfig(tile=16, ratio_high=0.0, method="cg",
+                                  max_sweeps=40))
+    rows.append((f"solve_cg_{n}_0D100S", rep.total_seconds * 1e6,
+                 _derived(rep, DEFAULT_FORMATS)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    rows = bench(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    bad = []
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+        if "conv=0" in derived or "fresh=0" not in derived:
+            bad.append(name)
+    if args.out:
+        from benchmarks.bench_io import write_bench
+        write_bench(args.out, "solve", rows, meta={"smoke": args.smoke},
+                    errors=[{"name": n, "error": "not converged or "
+                             "mid-solve retune"} for n in bad])
+        print(f"wrote {args.out}")
+    if bad:
+        print(f"FAILED cases: {bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -144,3 +144,23 @@ print(f"served {st['requests']['served']} mixed-shape requests in "
       f"bucket hit rate {st['bucket_hit_rate']:.2f}, "
       f"post-warmup recompiles: {st['compile']['post_warmup_recompiles']}")
 assert st["compile"]["post_warmup_recompiles"] == 0
+
+# --- 8. adaptive-precision iterative refinement (repro.solve) ---------------
+# The precision map as a CONTROL VARIABLE: solve an ill-conditioned system
+# starting all-bf16 (0D:100S).  Refinement stalls at bf16 accuracy, the
+# residual is attributed to the tiles whose storage rounding caused it,
+# those tiles are promoted one role and re-quantized from the exact
+# operator, and the solve converges to the fp32 backward-stability bound —
+# with the final map still far cheaper than uniform-fp32.  Every plan the
+# escalation ladder can need is prefetched: zero mid-solve retunes.
+from repro.solve import SolveConfig, graded_spd, rhs_for_solution, solve  # noqa: E402
+
+a_ill = graded_spd(128, cond=1e4, rho=0.8, seed=0)
+x_true, b_rhs = rhs_for_solution(a_ill, seed=1)
+rep = solve(a_ill, b_rhs, SolveConfig(tile=16, ratio_high=0.0))
+print(f"solve: {' -> '.join(rep.ratio_history)} in {rep.sweeps} sweeps "
+      f"({rep.escalations} escalations), metric {rep.metric:.2g}, "
+      f"storage {rep.storage_bytes}/{rep.uniform_high_bytes} B of "
+      f"uniform-HIGH, mid-solve retunes {rep.fresh_resolutions}")
+assert rep.converged and rep.fresh_resolutions == 0
+assert rep.storage_bytes < rep.uniform_high_bytes

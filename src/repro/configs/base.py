@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Optional
+from typing import Optional
 
 from repro.core.precision import Policy
 
@@ -45,7 +45,7 @@ class ArchConfig:
     top_k: int = 0
     n_shared: int = 0
     shared_d_ff: int = 0
-    moe_every: int = 1           # apply MoE at layers i % moe_every == moe_offset
+    moe_every: int = 1       # apply MoE at layers i % moe_every == moe_offset
     moe_offset: int = 0
     capacity_factor: float = 1.25
     # --- hybrid / ssm ------------------------------------------------------
@@ -82,7 +82,7 @@ class ArchConfig:
     fsdp: bool = False   # shard params over "data" too (ZeRO-3 / FSDP)
     remat_group: int = 1  # checkpoint every g scan steps (residual stack /g)
     kv_dup_to_tp: bool = False  # duplicate kv heads so the cache TP-shards
-    # --- reduced smoke override -----------------------------------------------
+    # --- reduced smoke override -------------------------------------------
     notes: str = ""
 
     # ---------------------------------------------------------------------

@@ -87,6 +87,85 @@ def error_scale(a: np.ndarray, b: np.ndarray, c: np.ndarray | None = None,
     return s
 
 
+def hpl_mxp_metric(a_exact: np.ndarray, x: np.ndarray, b: np.ndarray,
+                   fset: FormatSet = DEFAULT_FORMATS) -> float:
+    """HPL-MxP acceptance metric ``||Ax-b||_inf / (||A||_inf·||x||_inf·n·u)``
+    computed in fp64 against the *exact* (pre-quantization) operator.
+
+    ``u`` is the unit roundoff of the HIGH role's storage dtype, so a
+    converged solve is one whose residual is indistinguishable from a
+    uniform-HIGH direct solve (HPL-MxP accepts values below 16).
+    """
+    a64 = np.asarray(a_exact, np.float64)
+    x64 = np.asarray(x, np.float64)
+    b64 = np.asarray(b, np.float64)
+    r = np.abs(a64 @ x64 - b64).max()
+    u = unit_roundoff(fset.storage_dtype(fset.high))
+    denom = (np.abs(a64).sum(axis=1).max()
+             * np.abs(x64).max() * a64.shape[0] * u)
+    return float(r / max(denom, 1e-300))
+
+
+def tile_rounding_contribution(a_exact: np.ndarray, a_stored: np.ndarray,
+                               x: np.ndarray, tile: int) -> np.ndarray:
+    """Per-tile contribution to the residual from storage rounding.
+
+    For ``r = (A - Â)·x`` the rows of tile-row ``i`` receive
+    ``Σ_j |A-Â|[ti, tj] · |x|[tj]``; the returned ``[mt, nt]`` matrix holds
+    each tile's worst-row share of that sum — the quantity the refinement
+    solver attributes residual stagnation to (fp64, exact arithmetic).
+    """
+    d = np.abs(np.asarray(a_exact, np.float64)
+               - np.asarray(a_stored, np.float64))
+    # a tile whose storage format overflowed/NaNed (e.g. fp8 on a loud
+    # tile) has effectively infinite rounding error — make it finite-huge
+    # so it dominates every budget without poisoning the dot products
+    d = np.nan_to_num(d, nan=1e300, posinf=1e300)
+    xa = np.abs(np.asarray(x, np.float64))
+    if xa.ndim == 1:
+        xa = xa[:, None]
+    m, n = d.shape
+    mt, nt = m // tile, n // tile
+    # per-row, per-tile-column partial sums |ΔA|·|x|; worst RHS column, then
+    # worst row within each tile row
+    per_row = np.empty((m, nt))
+    for j in range(nt):
+        per_row[:, j] = (d[:, j * tile:(j + 1) * tile]
+                         @ xa[j * tile:(j + 1) * tile]).max(axis=1)
+    return per_row.reshape(mt, tile, nt).max(axis=1)
+
+
+def escalation_threshold(a_exact: np.ndarray, x: np.ndarray, tile: int,
+                         fset: FormatSet = DEFAULT_FORMATS,
+                         safety: float = DEFAULT_SAFETY) -> np.ndarray:
+    """Per-tile residual budget ``safety · u_high · (|A|·|x|)/nt`` — the fair
+    share of the HIGH-format rounding budget each tile may contribute before
+    the refinement solver promotes it one role (registry-derived: ``u_high``
+    is the HIGH storage dtype's unit roundoff)."""
+    a64 = np.abs(np.asarray(a_exact, np.float64))
+    xa = np.abs(np.asarray(x, np.float64))
+    if xa.ndim == 1:
+        xa = xa[:, None]
+    m, n = a64.shape
+    mt, nt = m // tile, n // tile
+    u_high = unit_roundoff(fset.storage_dtype(fset.high))
+    row_scale = (a64 @ xa).max(axis=1)          # |A|·|x| per row, worst RHS
+    tile_rows = row_scale.reshape(mt, tile).max(axis=1)
+    return safety * u_high * np.repeat(tile_rows[:, None], nt, axis=1) / nt
+
+
+def promotion_mask(a_exact: np.ndarray, a_stored: np.ndarray, x: np.ndarray,
+                   cls_map: np.ndarray, tile: int,
+                   fset: FormatSet = DEFAULT_FORMATS,
+                   safety: float = DEFAULT_SAFETY) -> np.ndarray:
+    """Boolean ``[mt, nt]`` mask of tiles whose storage-rounding residual
+    contribution exceeds their registry-derived budget AND that still have a
+    higher role to escalate to."""
+    contrib = tile_rounding_contribution(a_exact, a_stored, x, tile)
+    budget = escalation_threshold(a_exact, x, tile, fset, safety)
+    return (contrib > budget) & (np.asarray(cls_map) < fset.high)
+
+
 def check_against_fp64(out_dense, a, b, c, pa: np.ndarray, pb: np.ndarray,
                        pc: np.ndarray, tile: int,
                        fset: FormatSet = DEFAULT_FORMATS, *,

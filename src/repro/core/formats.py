@@ -69,7 +69,8 @@ class PrecisionFormat:
     def signature(self) -> str:
         """Stable signature for cache invalidation: changing any operational
         fact of a format must retire plans tuned against the old definition."""
-        costs = ",".join(f"{k}={v:g}" for k, v in sorted(self.pass_cost.items()))
+        costs = ",".join(f"{k}={v:g}"
+                         for k, v in sorted(self.pass_cost.items()))
         return (f"{self.name}:{jnp.dtype(self.storage_dtype).name}"
                 f">{jnp.dtype(self.compute_dtype).name}"
                 f":{self.bytes_per_elem}B:{self.dot_precision.name}"

@@ -133,6 +133,24 @@ class MPMatrix:
         return cls(bufs, _HashableMap(cls_map), tile,
                    (w.shape[0], w.shape[1]), fset)
 
+    def requantize(self, new_map: np.ndarray,
+                   dense: jax.Array | None = None) -> "MPMatrix":
+        """Re-quantize this matrix under a new class map (same tile grid /
+        format set) — the precision-escalation primitive of the refinement
+        solver (``repro.solve``).
+
+        ``dense`` is the exact (pre-rounding) source values; promoting a
+        tile then *recovers* the precision its old storage format dropped.
+        Without ``dense`` the current storage-rounded values are re-tiled
+        (promotion keeps the rounded values; demotion rounds further).
+        """
+        new_map = _check_codes(new_map, self.fset)
+        if new_map.shape != self.cls.arr.shape:
+            raise ValueError(
+                f"new map {new_map.shape} != tile grid {self.cls.arr.shape}")
+        src = self.to_dense() if dense is None else dense
+        return MPMatrix.from_dense(src, new_map, self.tile, self.fset)
+
     # -- views ----------------------------------------------------------------
     def padded_dense(self) -> jax.Array:
         """Padded dense fp32 view with per-tile storage rounding applied
@@ -312,7 +330,8 @@ class KSplitWeight:
         out = []
         for code in fset.class_order:
             blocks = np.nonzero(np.asarray(k_cls) == code)[0]
-            rows = (blocks[:, None] * tile + np.arange(tile)[None, :]).reshape(-1)
+            rows = (blocks[:, None] * tile
+                    + np.arange(tile)[None, :]).reshape(-1)
             out.append(rows.astype(np.int32))
         return tuple(out)
 

@@ -173,7 +173,13 @@ def _role_counts(n: int, p: Policy, fset: FormatSet) -> tuple[int, int, int]:
             f"policy {p} requests a Q fraction but format set {fset.names} "
             "has no low8 role")
     n_lo = n - n_hi - n_lo8
-    assert n_lo >= 0, f"ratio_high + ratio_low8 > 1 ({p})"
+    if n_lo < 0:
+        # a bare assert here was stripped under `python -O` and opaque to
+        # callers; over-unity role fractions are a caller error
+        raise ValueError(
+            f"ratio_high + ratio_low8 = {p.ratio_high} + {p.ratio_low8} "
+            f"exceeds 1 (policy {p.name()!r}): the D/Q role fractions must "
+            "leave a non-negative S remainder")
     return n_hi, n_lo, n_lo8
 
 

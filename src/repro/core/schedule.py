@@ -38,7 +38,10 @@ def _exact_counts(n: int, ratio_high: float, ratio_low8: float = 0.0
     n_hi = int(round(ratio_high * n))
     n_lo8 = int(round(ratio_low8 * n))
     n_lo = n - n_hi - n_lo8
-    assert n_lo >= 0
+    if n_lo < 0:
+        raise ValueError(
+            f"ratio_high + ratio_low8 = {ratio_high} + {ratio_low8} exceeds "
+            "1: the D/Q role fractions must leave a non-negative S remainder")
     return n_hi, n_lo, n_lo8
 
 

@@ -11,7 +11,6 @@ TP plan (DESIGN.md §5/§6):
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import numpy as np

@@ -11,7 +11,6 @@ checkpoint-restore path from the CLI.
 """
 import argparse
 import os
-import sys
 
 
 def _parse():
@@ -38,8 +37,10 @@ def _parse():
 def main():
     args = _parse()
     if args.devices:
+        # append, don't overwrite: the user's other XLA flags must survive
         os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}")
+            os.environ.get("XLA_FLAGS", "") + " "
+            f"--xla_force_host_platform_device_count={args.devices}").strip()
     import jax
 
     from repro.configs import get, load_all, reduced

@@ -12,7 +12,6 @@ size; MLP column-parallel then row-parallel; vocab sharded over "model".
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -47,10 +46,12 @@ def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
     dh = x.shape[-1]
     half = dh // 2
     freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
-    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    # [..., S, half]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs
     cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
     sin = jnp.sin(angles)[..., None, :]
-    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
     return out.astype(x.dtype)
 

@@ -14,7 +14,6 @@ Mixed precision at two granularities (DESIGN.md §5/§6):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

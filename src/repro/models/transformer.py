@@ -14,7 +14,6 @@ mixed-precision GEMM is the matmul substrate of every architecture.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

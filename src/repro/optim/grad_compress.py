@@ -59,7 +59,8 @@ def accumulate(acc, grads, err):
 def cross_pod_mean(grads, err, mesh, axis: str = "pod"):
     """Hierarchical DP: mean the (already pod-locally-reduced) gradients
     across pods in bf16 with error feedback.  Specs: grads replicated within
-    the scope of their existing sharding; only the '{axis}' dim participates."""
+    the scope of their existing sharding; only the '{axis}' dim
+    participates."""
     npods = mesh.shape[axis]
     gc, err = compress(grads, err)
 

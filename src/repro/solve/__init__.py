@@ -1,0 +1,15 @@
+"""repro.solve — mixed-precision iterative-refinement linear solvers.
+
+The first workload that *adapts* tile precision at runtime: blocked LU (or
+Jacobi-CG for SPD operators) over :class:`~repro.core.layout.MPMatrix`
+operands, inner GEMMs through ``tune.mp_matmul``/SUMMA, and residual-driven
+escalation of the per-tile precision map until the HPL-MxP acceptance
+metric reaches the HIGH-format bound.  See ``refine.py`` for the design.
+"""
+from repro.solve.matrices import diag_dominant, graded_spd, rhs_for_solution
+from repro.solve.refine import SolveConfig, SolveReport, solve
+
+__all__ = [
+    "SolveConfig", "SolveReport", "solve",
+    "graded_spd", "diag_dominant", "rhs_for_solution",
+]

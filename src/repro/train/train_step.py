@@ -8,7 +8,6 @@ peak activation memory is one microbatch.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,12 @@ from repro.tune.dispatch import (mp_matmul, resolve_plan, clear_registry,
                                  register_plan, tune_linear_params,
                                  warm_registry, summa_mp_matmul,
                                  summa_problem, resolve_summa_plan,
-                                 autotune_summa, SUMMA_PATHS)
+                                 autotune_summa, SUMMA_PATHS,
+                                 resolve_plans_for_buckets,
+                                 resolve_solve_plans, solve_gemm_problem,
+                                 resolution_counters,
+                                 reset_resolution_counters,
+                                 fresh_resolutions, SOLVE_PATHS)
 
 __all__ = [
     "DeviceSpec", "detect_device", "device_table",
@@ -34,7 +39,10 @@ __all__ = [
     "plan_vmem_bytes",
     "PlanCache", "autotune", "measure", "candidate_plans",
     "mp_matmul", "resolve_plan", "clear_registry", "register_plan",
-    "tune_linear_params", "warm_registry",
+    "tune_linear_params", "warm_registry", "resolve_plans_for_buckets",
     "summa_mp_matmul", "summa_problem", "resolve_summa_plan",
     "autotune_summa", "SUMMA_PATHS",
+    "resolve_solve_plans", "solve_gemm_problem", "SOLVE_PATHS",
+    "resolution_counters", "reset_resolution_counters",
+    "fresh_resolutions",
 ]

@@ -35,6 +35,34 @@ from repro.tune import search as S
 #: in-memory plan registry: plan-cache key -> GemmPlan
 _REGISTRY: dict[str, GemmPlan] = {}
 
+#: plan-resolution event counts by source ("registry"/"cache"/"model"/
+#: "default", prefixed "summa_" for distributed resolutions).  The
+#: refinement solver (repro.solve) resets these after its ladder prefetch
+#: and asserts that no "model"/"default" resolution — i.e. no retune or
+#: un-prefetched fallback — happens mid-solve.
+_RESOLUTIONS: dict[str, int] = {}
+
+
+def _count_resolution(source: str) -> None:
+    _RESOLUTIONS[source] = _RESOLUTIONS.get(source, 0) + 1
+
+
+def resolution_counters() -> dict[str, int]:
+    return dict(_RESOLUTIONS)
+
+
+def reset_resolution_counters() -> None:
+    _RESOLUTIONS.clear()
+
+
+def fresh_resolutions(counters: dict[str, int] | None = None) -> int:
+    """Number of resolutions since the last reset that did *fresh* work
+    (cost-model ranking or un-prefetched fallback) rather than serving a
+    registry/cache hit — the quantity that must be zero mid-solve."""
+    c = resolution_counters() if counters is None else counters
+    return sum(v for k, v in c.items()
+               if k.split("summa_")[-1] in ("model", "default"))
+
 
 def clear_registry() -> None:
     _REGISTRY.clear()
@@ -191,12 +219,14 @@ def resolve_plan(prob: GemmProblem, dev: DeviceSpec | None = None,
     key = S.plan_key(dev, prob)
     hit = _lookup_plan(prob, dev)
     if hit is not None:
+        _count_resolution(hit[1])
         return hit
     ranked = S.rank_plans(S.candidate_plans(prob, dev, paths), prob, dev)
     if not ranked:
         raise ValueError(f"no valid plan for {key}")
     plan = ranked[0][0]
     _REGISTRY[key] = plan
+    _count_resolution("model")
     return plan, "model"
 
 
@@ -273,8 +303,10 @@ def resolve_summa_plan(prob: GemmProblem, dev: DeviceSpec | None = None
     dev = dev or detect_device()
     hit = _lookup_plan(prob, dev)
     if hit is not None:
+        _count_resolution("summa_" + hit[1])
         return hit
     t = prob.tile
+    _count_resolution("summa_default")
     return GemmPlan(path="ref", bm=t, bn=t, bk=t), "default"
 
 
@@ -407,6 +439,96 @@ def resolve_plans_for_buckets(params_by_tag: dict, buckets, *,
         out[hint] = tune_linear_params(params_by_tag[tag], m_hint=batch,
                                        measure=measure, cache=cache)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Refinement-solver integration (op = "solve")
+# ---------------------------------------------------------------------------
+
+#: GEMM paths valid for every map structure the solver can produce (ksplit
+#: paths need a K-constant B map, which trailing updates never have)
+SOLVE_PATHS = ("ref", "tile", "grouped")
+
+
+def solve_gemm_problem(pa: np.ndarray, tile: int, nrhs_t: int,
+                       fset) -> GemmProblem:
+    """Plan-key problem of the refinement residual GEMM ``A·X``: A carries
+    the (escalating) map ``pa``; X and the output are uniform-HIGH
+    ``[kt, nrhs_t]`` / ``[mt, nrhs_t]`` (the solution/product must not take
+    extra storage rounding).  Solver problems carry ``op="solve"`` so their
+    registry entries never collide with ``mp_gemm`` keys."""
+    pa = np.asarray(pa)
+    pb = np.full((pa.shape[1], nrhs_t), fset.high, np.int8)
+    pc = np.full((pa.shape[0], pb.shape[1]), fset.high, np.int8)
+    return dataclasses.replace(
+        GemmProblem.from_maps(pa, pb, pc, tile, fset=fset), op="solve")
+
+
+def resolve_solve_plans(a_maps, tile: int, fset, *, nrhs: int,
+                        summa_grid: tuple[int, int] | None = None,
+                        local_path: str = "ref",
+                        paths: Iterable[str] = SOLVE_PATHS,
+                        dev: DeviceSpec | None = None) -> dict:
+    """Escalation-ladder plan prefetch for the refinement solver
+    (``resolve_plans_for_buckets``' twin for ``repro.solve``).
+
+    ``a_maps`` is the ladder of A-matrix class maps the solve can escalate
+    through (rung 0 = the starting map).  For every rung this resolves —
+    cost model only, never measuring — a plan for the residual GEMM ``A·X``
+    and for each blocked-LU trailing-update shape, loads them into the
+    in-memory registry under ``op="solve"`` keys, and (with ``summa_grid``)
+    registers the distributed residual GEMM under its real
+    ``summa{P}x{Q}`` plan key so mid-solve promotion never triggers a
+    retune, an un-prefetched fallback, or a recompile.
+
+    Returns ``{("residual", rung): plan, ("trail", step, rung): plan,
+    ("summa", rung): plan, "keys": [...]}`` — the solver passes these plans
+    explicitly, so a solve issues zero fresh resolutions
+    (``fresh_resolutions()``) after this call.
+    """
+    dev = dev or detect_device()
+    if nrhs % tile:
+        raise ValueError(f"nrhs={nrhs} must be a multiple of tile={tile}")
+    rt = nrhs // tile
+    book: dict = {}
+    keys: list[str] = []
+    for rung, pa in enumerate(a_maps):
+        pa = np.asarray(pa)
+        mt, kt = pa.shape
+        prob = solve_gemm_problem(pa, tile, rt, fset)
+        plan, _src = resolve_plan(prob, dev, paths)
+        book[("residual", rung)] = plan
+        keys.append(S.plan_key(dev, prob))
+        # blocked-LU trailing updates: step k multiplies L21 (map column k)
+        # by U12 (map row k) into the [mt-k-1, kt-k-1] trailing block
+        for k in range(min(mt, kt) - 1):
+            pl = pa[k + 1:, k:k + 1]
+            pu = pa[k:k + 1, k + 1:]
+            tprob = dataclasses.replace(
+                GemmProblem.from_maps(
+                    pl, pu, np.full((pl.shape[0], pu.shape[1]), fset.high,
+                                    np.int8), tile, fset=fset),
+                op="solve")
+            tplan, _src = resolve_plan(tprob, dev, paths)
+            book[("trail", k, rung)] = tplan
+            keys.append(S.plan_key(dev, tprob))
+        if summa_grid is not None:
+            P, Q = summa_grid
+            pb = np.full((kt, rt), fset.high, np.int8)
+            pc = np.full((mt, rt), fset.high, np.int8)
+            sprob = summa_problem_from_maps(pa, pb, pc, tile, P, Q, fset)
+            splan = GemmPlan(path=local_path, bm=tile, bn=tile, bk=tile)
+            bad = validate_plan(splan, sprob, dev)
+            if bad:
+                raise ValueError(
+                    f"solver SUMMA local path {local_path!r} invalid for "
+                    f"rung {rung}: {bad}")
+            skey = S.plan_key(dev, sprob)
+            register_plan(skey, splan)
+            book[("summa", rung)] = splan
+            keys.append(skey)
+    book["keys"] = keys
+    return book
 
 
 def tune_linear_params(params, m_hint: int, *, measure: bool = False,

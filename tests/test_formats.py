@@ -182,7 +182,6 @@ def test_tune_linear_params_keys_carry_format_set():
 def test_model_config_formats_knob():
     """ArchConfig.mp_formats threads a FormatSet through attention/MLP/head
     weight construction."""
-    import dataclasses
     from repro.configs.base import ArchConfig
     from repro.models import common as C
     cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=32,

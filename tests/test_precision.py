@@ -4,7 +4,15 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import precision as P
+from repro.core.formats import format_set
 from repro.core.precision import PAPER_RATIOS, Policy, PrecClass
+
+#: every registered format-set flavour the property tests sweep
+FSETS = {
+    "default": ("fp8_e4m3", "bf16", "fp32"),
+    "fp8_e5m2": ("fp8_e5m2", "fp16", "fp32"),
+    "fp16": ("fp16", "fp32"),
+}
 
 
 def test_paper_ratio_endpoints():
@@ -20,7 +28,8 @@ def test_ratio_exact(name, frac):
     m = P.make_map((320, 320), 16, PAPER_RATIOS[name])
     got = (m == int(PrecClass.HIGH)).mean()
     assert got == pytest.approx(frac, abs=1e-6)
-    assert P.map_ratio_string(m) == f"{round(frac*100)}D:{round((1-frac)*100)}S"
+    want = f"{round(frac * 100)}D:{round((1 - frac) * 100)}S"
+    assert P.map_ratio_string(m) == want
 
 
 @settings(max_examples=25, deadline=None)
@@ -95,6 +104,103 @@ def test_map_storage_bytes_rejects_unknown_class():
     m = np.array([[0, 1], [2, 5]], np.int8)   # 5 is not a registered code
     with pytest.raises(ValueError, match="outside format set"):
         P.map_storage_bytes(m, 8)
+
+
+def test_role_counts_over_unity_raises_value_error():
+    """Regression: `_role_counts` guarded over-unity D+Q fractions with a
+    bare assert — stripped under `python -O`, opaque to callers.  It must
+    be a descriptive ValueError on every map-building path."""
+    pol = Policy(kind="ratio", ratio_high=0.8, ratio_low8=0.5)
+    with pytest.raises(ValueError, match="exceeds 1"):
+        P.make_map((64, 64), 16, pol)
+    # the schedule builders share the invariant
+    from repro.core import schedule
+    with pytest.raises(ValueError, match="exceeds 1"):
+        schedule.balanced_ratio_map(4, 4, pol)
+    with pytest.raises(ValueError, match="exceeds 1"):
+        schedule.sorted_balanced_map(4, 4, pol, axis=0)
+
+
+def test_role_counts_q_without_low8_role_raises():
+    """The other `_role_counts` failure path: requesting a Q fraction on a
+    2-format set has no role to place it in."""
+    fs = format_set("fp16", "fp32")
+    pol = Policy(kind="ratio", ratio_high=0.25, ratio_low8=0.25)
+    with pytest.raises(ValueError, match="no low8 role"):
+        P.make_map((64, 64), 16, pol, fset=fs)
+    # boundary: an over-unity sum still raises the descriptive error even
+    # when the set has a low8 role to absorb part of it
+    with pytest.raises(ValueError, match="exceeds 1"):
+        P.make_map((64, 64), 16,
+                   Policy(kind="ratio", ratio_high=1.0, ratio_low8=0.25))
+
+
+# ---------------------------------------------------------------------------
+# Property tests (via the optional-hypothesis shim) — map invariants across
+# random grids and every registered format-set flavour.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(mt=st.integers(1, 10), nt=st.integers(1, 10),
+       hi=st.floats(0.0, 1.0), q=st.floats(0.0, 1.0),
+       fs=st.sampled_from(sorted(FSETS)), seed=st.integers(0, 999))
+def test_make_map_exact_role_counts_property(mt, nt, hi, q, fs, seed):
+    """make_map's ratio policy places *exactly* round(frac·n) tiles of each
+    role for any grid, ratio pair, and format set."""
+    fset = format_set(*FSETS[fs])
+    lo8 = min(q, 1.0 - hi) if fset.low8 is not None else 0.0
+    n = mt * nt
+    if round(hi * n) + round(lo8 * n) > n:
+        return   # over-unity after rounding: covered by the ValueError test
+    pol = Policy(kind="ratio", ratio_high=hi, ratio_low8=lo8, seed=seed)
+    t = 8
+    m = P.make_map((mt * t, nt * t), t, pol, fset=fset)
+    assert m.shape == (mt, nt)
+    assert (m == fset.high).sum() == round(hi * n)
+    if fset.low8 is not None:
+        assert (m == fset.low8).sum() == round(lo8 * n)
+    assert set(np.unique(m)) <= set(fset.codes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_hi=st.integers(0, 9), n_lo=st.integers(0, 9),
+       n_lo8=st.integers(0, 9), fs=st.sampled_from(sorted(FSETS)))
+def test_role_class_vector_and_ratio_string_property(n_hi, n_lo, n_lo8, fs):
+    """role_class_vector emits exactly the requested counts and
+    map_ratio_string's percentages always sum to 100."""
+    fset = format_set(*FSETS[fs])
+    if n_lo8 and fset.low8 is None:
+        with pytest.raises(ValueError, match="no low8 role"):
+            P.role_class_vector(n_hi, n_lo, n_lo8, fset)
+        return
+    vec = P.role_class_vector(n_hi, n_lo, n_lo8, fset)
+    assert len(vec) == n_hi + n_lo + n_lo8
+    assert (vec == fset.high).sum() == n_hi
+    if n_hi + n_lo + n_lo8 == 0:
+        return
+    s = P.map_ratio_string(vec.reshape(1, -1), fset)
+    parts = [int(seg[:-1]) for seg in s.split(":")]
+    assert sum(parts) == 100, s
+
+
+@settings(max_examples=40, deadline=None)
+@given(mt=st.integers(1, 8), nt=st.integers(1, 8), hi=st.floats(0.0, 1.0),
+       fs=st.sampled_from(sorted(FSETS)), tile=st.sampled_from([4, 8, 16]))
+def test_storage_bytes_round_trip_property(mt, nt, hi, fs, tile):
+    """map_storage_bytes equals the sum of per-class counts × registered
+    bytes — and round-trips through the MPMatrix layout's accounting."""
+    import jax.numpy as jnp
+
+    from repro.core.layout import MPMatrix
+    fset = format_set(*FSETS[fs])
+    pol = Policy(kind="ratio", ratio_high=hi, seed=7)
+    m = P.make_map((mt * tile, nt * tile), tile, pol, fset=fset)
+    want = sum(int((m == c).sum()) * fset.bytes_of(c) * tile * tile
+               for c in fset.codes)
+    assert P.map_storage_bytes(m, tile, fset) == want
+    mat = MPMatrix.from_dense(jnp.ones((mt * tile, nt * tile)), m, tile,
+                              fset)
+    assert mat.storage_bytes() == want
 
 
 def test_quantize_tile_roundtrip():

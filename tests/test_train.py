@@ -1,5 +1,4 @@
 """Training loop: loss goes down, microbatch equivalence, fault/restart."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
