@@ -9,21 +9,70 @@ Schema (version 1)::
     {
       "schema": 1,
       "suite": "gemm" | "serve" | ...,
-      "meta":  {"smoke": bool, "device": str, ...},
+      "meta":  {"smoke": bool, "device": str, ...,
+                "git_sha": str, "timestamp_utc": str,
+                "device_kind": str, "formats_hash": str},
       "rows":  [{"name": str, "us_per_call": float, "derived": str}, ...],
       "errors": [{"name": str, "error": str}, ...]
     }
 
 ``rows`` mirrors the long-standing ``name,us_per_call,derived`` CSV the
 benchmarks print; ``errors`` records sub-benchmarks that raised (the
-harness runs everything before failing).
+harness runs everything before failing).  ``write_bench`` stamps every
+payload with :func:`provenance` — git SHA, UTC timestamp, device kind and
+the format-registry hash — so ``benchmarks/trajectory.py`` can join bench
+generations across commits; explicit ``meta`` keys win over the stamp.
 """
 from __future__ import annotations
 
+import datetime
+import hashlib
 import json
 import os
+import subprocess
 
 BENCH_SCHEMA = 1
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def _formats_hash() -> str:
+    """Short digest of the format-registry signatures: two bench files
+    disagreeing here were measured against different numerics."""
+    try:
+        from repro.core.formats import registry_signatures
+        blob = json.dumps(registry_signatures(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:12]
+    except Exception:
+        return "unknown"
+
+
+def _device_kind() -> str:
+    try:
+        from repro.tune.device import detect_device
+        return detect_device().kind
+    except Exception:
+        return "unknown"
+
+
+def provenance() -> dict:
+    """Provenance stamp merged into every bench payload's ``meta``."""
+    return {
+        "git_sha": _git_sha(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "device_kind": _device_kind(),
+        "formats_hash": _formats_hash(),
+    }
 
 
 def rows_to_dicts(rows: list[tuple]) -> list[dict]:
@@ -39,7 +88,7 @@ def write_bench(path: str, suite: str, rows: list[tuple], *,
     payload = {
         "schema": BENCH_SCHEMA,
         "suite": suite,
-        "meta": dict(meta or {}),
+        "meta": {**provenance(), **(meta or {})},
         "rows": rows_to_dicts(rows),
         "errors": list(errors or []),
     }

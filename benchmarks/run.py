@@ -91,6 +91,39 @@ def _bench_kernel_micro(smoke: bool) -> list[tuple]:
              (time.perf_counter() - t0) * 1e6, "interpret-mode")]
 
 
+def _bench_obs_overhead(smoke: bool) -> list[tuple]:
+    # zero-cost-when-disabled audit: the per-dispatch obs cost (one
+    # labeled registry counter inc + one null span) vs one warm dispatch
+    # through tune.mp_matmul — the acceptance bar is <1% overhead
+    import jax
+    import jax.numpy as jnp
+    from repro import obs
+    from repro.core import MPMatrix, make_map
+    from repro.core.precision import Policy
+    from repro.obs.metrics import MetricsRegistry
+    from repro.tune import dispatch as TD
+    reg = MetricsRegistry()
+    n_ops = 20_000 if smoke else 100_000
+    t0 = time.perf_counter()
+    for _ in range(n_ops):
+        reg.counter("dispatch.calls", path="grouped", op="nn").inc()
+        with obs.span("gemm.dispatch", "gemm"):
+            pass
+    per_us = (time.perf_counter() - t0) / n_ops * 1e6
+    n, t = 32, 16
+    a = jax.random.normal(jax.random.PRNGKey(0), (n, n))
+    pa = make_map((n, n), t, Policy(kind="ratio", ratio_high=0.5))
+    A = MPMatrix.from_dense(a, pa, t)
+    C = MPMatrix.from_dense(jnp.zeros((n, n)), pa, t)
+    TD.mp_matmul(A, A, C)               # warm the dispatch path
+    t0 = time.perf_counter()
+    TD.mp_matmul(A, A, C)
+    disp_us = (time.perf_counter() - t0) * 1e6
+    pct = 100.0 * per_us / max(disp_us, 1e-9)
+    return [("obs_disabled_overhead", per_us,
+             f"dispatch_us={disp_us:.0f};overhead={pct:.4f}%")]
+
+
 def _bench_tune_table(smoke: bool) -> list[tuple]:
     # tune table: cost-model vs measured plan ranking + cache-routed
     # dispatch vs reference (the autotuner acceptance gate)
@@ -122,6 +155,7 @@ BENCHES = [
     ("fig3_shared_memory", _bench_fig3),
     ("fig4_scaling", _bench_fig4),
     ("kernel_micro", _bench_kernel_micro),
+    ("obs_overhead", _bench_obs_overhead),
     ("tune_table", _bench_tune_table),
     ("roofline", _bench_roofline),
 ]

@@ -1,0 +1,296 @@
+"""Perf-trajectory analytics over stamped bench-schema JSON files.
+
+Every ``BENCH_*.json`` the harnesses write is stamped with provenance
+(``bench_io.provenance``: git SHA, UTC timestamp, device kind, format-
+registry hash).  This tool collects bench *generations* from any mix of
+
+* ``--dir PATH`` (repeatable) — a directory of ``BENCH_*.json`` files
+  (the blessed ``results/bench_baseline/`` and a fresh CI run are the two
+  generations every CI build has);
+* ``--git-history N`` — best-effort walk of the last N commits, reading
+  ``results/bench_baseline/BENCH_*.json`` out of each via ``git show``
+  (shallow CI clones simply contribute fewer generations);
+
+joins rows by (suite, name) across generations, and renders:
+
+* ``TRAJECTORY.md`` — one markdown table per suite: µs/call per
+  generation plus the delta of the newest vs the oldest generation;
+* ``TRAJECTORY.svg`` — a dependency-free SVG chart of per-row timings
+  normalized to the oldest generation (1.0 = no change; >1 = slower).
+
+``--smoke`` is the CI gate: it fails unless at least two generations
+joined on at least one row (the trajectory exists and is renderable).
+
+    python benchmarks/trajectory.py --dir results/bench_baseline \
+        --dir results/ci_fresh --git-history 20 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.bench_io import BENCH_SCHEMA  # noqa: E402
+
+
+def _payload_ok(payload: dict) -> bool:
+    return (isinstance(payload, dict)
+            and payload.get("schema") == BENCH_SCHEMA
+            and isinstance(payload.get("rows"), list))
+
+
+def _label(meta: dict, fallback: str) -> str:
+    sha = str(meta.get("git_sha", ""))
+    if sha and sha != "unknown":
+        return sha[:8]
+    return fallback
+
+
+class Generation:
+    """One bench generation: every suite payload measured together."""
+
+    def __init__(self, label: str, source: str):
+        self.label = label
+        self.source = source
+        self.timestamp = ""
+        #: (suite, row name) -> us_per_call
+        self.rows: dict[tuple[str, str], float] = {}
+
+    def add_payload(self, payload: dict) -> None:
+        meta = payload.get("meta", {})
+        self.timestamp = max(self.timestamp,
+                             str(meta.get("timestamp_utc", "")))
+        for row in payload["rows"]:
+            self.rows[(payload["suite"], row["name"])] = float(
+                row["us_per_call"])
+
+
+def load_dir(path: str) -> Generation | None:
+    """One generation from a directory of BENCH_*.json files."""
+    gen = None
+    for f in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        try:
+            with open(f) as fh:
+                payload = json.load(fh)
+        except (OSError, ValueError):
+            continue
+        if not _payload_ok(payload):
+            continue
+        if gen is None:
+            gen = Generation(_label(payload.get("meta", {}),
+                                    os.path.basename(path.rstrip("/"))),
+                             path)
+        gen.add_payload(payload)
+    return gen
+
+
+def load_git_history(n: int, rel_dir: str = "results/bench_baseline"
+                     ) -> list[Generation]:
+    """Best-effort generations from the last ``n`` commits' blessed
+    baselines (a shallow clone yields fewer — never an error)."""
+    try:
+        out = subprocess.run(
+            ["git", "log", "-n", str(n), "--format=%H"], cwd=_ROOT,
+            capture_output=True, text=True, timeout=30)
+        shas = out.stdout.split() if out.returncode == 0 else []
+    except OSError:
+        return []
+    gens = []
+    for sha in shas:
+        gen = None
+        when = subprocess.run(
+            ["git", "show", "-s", "--format=%cI", sha], cwd=_ROOT,
+            capture_output=True, text=True, timeout=30)
+        commit_ts = when.stdout.strip() if when.returncode == 0 else ""
+        ls = subprocess.run(
+            ["git", "ls-tree", "--name-only", sha, rel_dir + "/"],
+            cwd=_ROOT, capture_output=True, text=True, timeout=30)
+        names = [p for p in ls.stdout.split()
+                 if os.path.basename(p).startswith("BENCH_")
+                 and p.endswith(".json")] if ls.returncode == 0 else []
+        for p in names:
+            show = subprocess.run(["git", "show", f"{sha}:{p}"], cwd=_ROOT,
+                                  capture_output=True, text=True,
+                                  timeout=30)
+            if show.returncode != 0:
+                continue
+            try:
+                payload = json.loads(show.stdout)
+            except ValueError:
+                continue
+            if not _payload_ok(payload):
+                continue
+            if gen is None:
+                gen = Generation(sha[:8], f"git:{sha[:8]}")
+            gen.add_payload(payload)
+        if gen is not None:
+            # un-stamped payloads (pre-provenance commits) order by the
+            # commit date instead
+            gen.timestamp = gen.timestamp or commit_ts
+            gens.append(gen)
+    return gens
+
+
+def dedupe(gens: list[Generation]) -> list[Generation]:
+    """Drop generations with identical labels (a fresh checkout's baseline
+    dir duplicates HEAD in --git-history), oldest first."""
+    seen: set[str] = set()
+    out = []
+    for g in sorted(gens, key=lambda g: (g.timestamp, g.label)):
+        if g.label in seen:
+            continue
+        seen.add(g.label)
+        out.append(g)
+    return out
+
+
+def joined_rows(gens: list[Generation]) -> list[tuple[str, str]]:
+    """(suite, name) keys present in at least two generations."""
+    count: dict[tuple[str, str], int] = {}
+    for g in gens:
+        for k in g.rows:
+            count[k] = count.get(k, 0) + 1
+    return sorted(k for k, c in count.items() if c >= 2)
+
+
+def render_markdown(gens: list[Generation],
+                    keys: list[tuple[str, str]]) -> str:
+    lines = ["# Perf trajectory", "",
+             f"{len(gens)} generations, {len(keys)} joined rows "
+             "(µs/call; Δ = newest vs oldest)", ""]
+    suites = sorted({s for s, _ in keys})
+    for suite in suites:
+        lines += [f"## {suite}", ""]
+        head = ["name"] + [g.label for g in gens] + ["Δ"]
+        lines.append("| " + " | ".join(head) + " |")
+        lines.append("|" + "---|" * len(head))
+        for s, name in keys:
+            if s != suite:
+                continue
+            vals = [g.rows.get((s, name)) for g in gens]
+            cells = [f"{v:.1f}" if v is not None else "—" for v in vals]
+            present = [v for v in vals if v is not None]
+            first, last = present[0], present[-1]
+            delta = (f"{100 * (last - first) / first:+.0f}%"
+                     if first > 0 else "n/a")
+            lines.append("| " + " | ".join([name] + cells + [delta])
+                         + " |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def render_svg(gens: list[Generation], keys: list[tuple[str, str]],
+               width: int = 720, height: int = 360,
+               max_series: int = 12) -> str:
+    """Dependency-free SVG: per-row µs/call normalized to the oldest
+    generation with that row (1.0 = flat)."""
+    pal = ["#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd",
+           "#8c564b", "#e377c2", "#7f7f7f", "#bcbd22", "#17becf"]
+    ml, mr, mt, mb = 50, 170, 24, 40
+    pw, ph = width - ml - mr, height - mt - mb
+    series = []
+    for s, name in keys[:max_series]:
+        pts = [(i, g.rows[(s, name)]) for i, g in enumerate(gens)
+               if (s, name) in g.rows]
+        base = next((v for _, v in pts if v > 0), 0.0)
+        if base <= 0 or len(pts) < 2:
+            continue
+        series.append((f"{s}:{name}", [(i, v / base) for i, v in pts]))
+    ymax = max((r for _, pts in series for _, r in pts), default=1.0)
+    ymax = max(ymax * 1.1, 1.2)
+    nx = max(len(gens) - 1, 1)
+
+    def X(i):
+        return ml + pw * i / nx
+
+    def Y(r):
+        return mt + ph * (1.0 - r / ymax)
+
+    el = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+          f'height="{height}" font-family="monospace" font-size="10">',
+          f'<rect width="{width}" height="{height}" fill="white"/>',
+          f'<line x1="{ml}" y1="{mt + ph}" x2="{ml + pw}" y2="{mt + ph}" '
+          'stroke="#333"/>',
+          f'<line x1="{ml}" y1="{mt}" x2="{ml}" y2="{mt + ph}" '
+          'stroke="#333"/>',
+          f'<line x1="{ml}" y1="{Y(1.0):.1f}" x2="{ml + pw}" '
+          f'y2="{Y(1.0):.1f}" stroke="#bbb" stroke-dasharray="4 3"/>',
+          f'<text x="{ml - 44}" y="{Y(1.0):.1f}">1.0x</text>',
+          f'<text x="{ml - 44}" y="{mt + 8}">{ymax:.1f}x</text>']
+    for i, g in enumerate(gens):
+        el.append(f'<text x="{X(i):.1f}" y="{height - 18}" '
+                  f'text-anchor="middle">{g.label}</text>')
+    for j, (name, pts) in enumerate(series):
+        color = pal[j % len(pal)]
+        d = " ".join(f"{X(i):.1f},{Y(r):.1f}" for i, r in pts)
+        el.append(f'<polyline points="{d}" fill="none" '
+                  f'stroke="{color}" stroke-width="1.5"/>')
+        ly = mt + 12 * j
+        el.append(f'<line x1="{ml + pw + 6}" y1="{ly}" '
+                  f'x2="{ml + pw + 22}" y2="{ly}" stroke="{color}" '
+                  'stroke-width="3"/>')
+        label = name if len(name) <= 24 else name[:23] + "…"
+        el.append(f'<text x="{ml + pw + 26}" y="{ly + 3}">{label}</text>')
+    if len(keys) > max_series:
+        el.append(f'<text x="{ml}" y="{mt - 8}">showing {max_series} of '
+                  f'{len(keys)} rows</text>')
+    el.append("</svg>")
+    return "\n".join(el)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="render a perf trajectory from stamped BENCH_*.json")
+    ap.add_argument("--dir", action="append", default=[],
+                    help="directory holding one generation of "
+                         "BENCH_*.json files (repeatable)")
+    ap.add_argument("--git-history", type=int, default=0,
+                    help="also read blessed baselines from the last N "
+                         "commits (best effort)")
+    ap.add_argument("--out-dir", default="results",
+                    help="write TRAJECTORY.md / TRAJECTORY.svg here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fail unless >= 2 generations join on "
+                         ">= 1 row")
+    args = ap.parse_args(argv)
+
+    gens: list[Generation] = []
+    if args.git_history:
+        gens += load_git_history(args.git_history)
+    for d in (args.dir or ["results/bench_baseline"]):
+        g = load_dir(d)
+        if g is not None:
+            gens.append(g)
+    gens = dedupe(gens)
+    keys = joined_rows(gens)
+    print(f"{len(gens)} generation(s): "
+          + ", ".join(f"{g.label}[{g.source}]" for g in gens))
+    print(f"{len(keys)} joined row(s)")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    md = os.path.join(args.out_dir, "TRAJECTORY.md")
+    with open(md, "w") as f:
+        f.write(render_markdown(gens, keys) + "\n")
+    svg = os.path.join(args.out_dir, "TRAJECTORY.svg")
+    with open(svg, "w") as f:
+        f.write(render_svg(gens, keys) + "\n")
+    print(f"wrote {md} and {svg}")
+
+    if args.smoke and (len(gens) < 2 or not keys):
+        print(f"SMOKE FAIL: need >= 2 generations joining on >= 1 row, "
+              f"got {len(gens)} generation(s) / {len(keys)} row(s)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -164,3 +164,41 @@ print(f"solve: {' -> '.join(rep.ratio_history)} in {rep.sweeps} sweeps "
       f"uniform-HIGH, mid-solve retunes {rep.fresh_resolutions}")
 assert rep.converged and rep.fresh_resolutions == 0
 assert rep.storage_bytes < rep.uniform_high_bytes
+
+# --- 9. watch the runtime work: repro.obs tracing ---------------------------
+# Every layer above emits structured spans/events into repro.obs when
+# tracing is on (and is bitwise-identical, zero-file no-op when off — the
+# default).  Trace one serve request and one solver escalation; the JSONL
+# lines are Chrome trace_event dicts, so the export loads directly in
+# Perfetto (https://ui.perfetto.dev) or chrome://tracing.
+import json  # noqa: E402
+import tempfile  # noqa: E402
+
+from repro import obs  # noqa: E402
+from repro.obs.hygiene import validate_events  # noqa: E402
+from repro.obs.trace import (export_chrome, read_events,  # noqa: E402
+                             span_types)
+
+trace_path = tempfile.mktemp(suffix=".jsonl")
+obs.configure(enabled=True, trace_path=trace_path)
+
+# one traced serve request: admit -> microbatch -> prefill -> decode -> retire
+eng.generate([Request(np.array([9, 8, 7], np.int32), max_new_tokens=3)])
+# one traced solver run: run -> factor -> sweeps (+ escalation instants)
+solve(a_ill, b_rhs, SolveConfig(tile=16, ratio_high=0.0))
+
+obs.configure(enabled=False)          # close + flush; back to the no-op
+events = read_events(trace_path)
+assert validate_events(events) == []  # schema-clean (closed-world cats)
+kinds = span_types(events)
+print(f"trace: {len(events)} events, span types {kinds}")
+assert {"serve.prefill", "serve.decode", "solve.sweep"} <= set(kinds)
+chrome = export_chrome(trace_path)    # open this file in Perfetto
+print(f"chrome trace: {chrome} "
+      f"({len(json.load(open(chrome))['traceEvents'])} trace events)")
+
+# the metrics side needs no tracing: counters are always live
+reg = eng.metrics
+print(f"engine counters: served={reg.value('serve.requests_served'):.0f} "
+      f"decode_steps={reg.value('serve.decode_steps'):.0f} "
+      f"latency mean={reg.histogram('serve.request.latency_s').mean:.3f}s")

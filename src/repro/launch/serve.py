@@ -34,15 +34,23 @@ def main():
                          "misses instead)")
     ap.add_argument("--stats", action="store_true",
                     help="print Engine.stats() JSON after serving")
+    ap.add_argument("--trace", default="",
+                    help="record a repro.obs JSONL trace to this path "
+                         "(a Perfetto-loadable .trace.json is written "
+                         "alongside)")
     args = ap.parse_args()
 
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.configs import get, load_all, reduced
     from repro.models import transformer as T
     from repro.serve.engine import Engine, Request
     from repro.serve.scheduler import SchedulerConfig
+
+    if args.trace:
+        obs.configure(enabled=True, trace_path=args.trace)
 
     load_all()
     cfg = get(args.arch)
@@ -96,6 +104,11 @@ def main():
           f"post_warmup_recompiles={st['compile']['post_warmup_recompiles']}")
     if args.stats:
         print(json.dumps(st, indent=1, sort_keys=True))
+    if args.trace:
+        from repro.obs.trace import export_chrome
+        obs.configure(enabled=False)     # flush + close the JSONL file
+        chrome = export_chrome(args.trace)
+        print(f"trace: {args.trace} (chrome: {chrome})")
     if rejected:
         raise SystemExit(f"{rejected} request(s) rejected at admission")
 

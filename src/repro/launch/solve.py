@@ -57,6 +57,13 @@ def _parse():
                     choices=["ref", "grouped"])
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-sweep wall-times and per-escalation "
+                         "promotion records (JSON)")
+    ap.add_argument("--trace", default="",
+                    help="record a repro.obs JSONL trace to this path "
+                         "(a Perfetto-loadable .trace.json is written "
+                         "alongside)")
     return ap.parse_args()
 
 
@@ -68,9 +75,13 @@ def main() -> int:
             f"--xla_force_host_platform_device_count={args.devices}").strip()
     import numpy as np
 
+    from repro import obs
     from repro.core.formats import DEFAULT_FORMATS, format_set
     from repro.solve import (SolveConfig, diag_dominant, graded_spd,
                              rhs_for_solution, solve)
+
+    if args.trace:
+        obs.configure(enabled=True, trace_path=args.trace)
 
     grid = (tuple(int(v) for v in args.summa.lower().split("x"))
             if args.summa else None)
@@ -113,6 +124,17 @@ def main() -> int:
           f"{rep.total_seconds:.2f}s; {rep.plan_keys} plans prefetched; "
           f"mid-solve fresh resolutions {rep.fresh_resolutions}; "
           f"SUMMA recompiles {rep.summa_recompiles}")
+    if args.stats:
+        import json
+        print("per-sweep wall-time (s):",
+              " ".join(f"{s:.4f}" for s in rep.sweep_seconds))
+        for p in rep.promotions:
+            print("promotion:", json.dumps(p, sort_keys=True))
+    if args.trace:
+        from repro.obs.trace import export_chrome
+        obs.configure(enabled=False)     # flush + close the JSONL file
+        chrome = export_chrome(args.trace)
+        print(f"trace: {args.trace} (chrome: {chrome})")
     # balanced (SUMMA-compatible) escalation quantizes promotion to
     # sorted-balanced rungs, so it may legitimately saturate at uniform-HIGH
     # on operators whose loud tiles scatter; only the data-driven tile mode

@@ -1,0 +1,179 @@
+"""Process-local metrics registry — labeled counters/gauges/histograms.
+
+The runtime's quantitative lens: every layer of the stack (tune dispatch,
+serve engine/scheduler, solver, SUMMA) records its counters here instead of
+growing ad-hoc module-global dicts.  A *metric* is a name plus a label set
+(``dispatch.calls{path=grouped,formats=fp8_e5m2+...}``); each distinct
+label combination is its own *series*.  The registry is always live — an
+increment is one dict lookup and one float add under a lock, cheap enough
+for every dispatch — while the event *tracer* (``repro.obs.trace``) is the
+part that is compiled out when disabled.
+
+Naming convention (see ARCHITECTURE.md "Observability"):
+``<subsystem>.<noun>[_<unit>]`` with dot-separated subsystem prefixes
+(``tune.plan_resolutions``, ``serve.request.latency_s``,
+``solve.sweep_seconds``) and labels for dimensions that fan out
+(``path=``, ``source=``, ``fset=``, ``kind=``).
+"""
+from __future__ import annotations
+
+import threading
+
+
+def label_key(labels: dict) -> str:
+    """Canonical series key: ``'a=1,b=x'`` (sorted); ``''`` for no labels."""
+    return ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+
+
+class Counter:
+    """Monotonically-increasing value (float increments allowed: counters
+    also accumulate seconds/bytes)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Gauge:
+    """Last-written value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Streaming summary (count/sum/min/max) — no raw sample storage, so a
+    million-request serve stream costs four floats per series."""
+
+    __slots__ = ("count", "sum", "min", "max")
+
+    def __init__(self):
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def summary(self) -> dict:
+        return {"count": self.count, "sum": self.sum, "mean": self.mean,
+                "min": self.min if self.count else 0.0,
+                "max": self.max if self.count else 0.0}
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class MetricsRegistry:
+    """Thread-safe name → {label set → series} store.
+
+    ``counter()/gauge()/histogram()`` create-or-return the series for one
+    label combination; ``snapshot()`` returns plain data for reports;
+    ``reset(name)`` clears one metric's series (``reset()`` clears all) —
+    the explicit reset/snapshot API the old module-global counter dicts
+    never had.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        #: name -> (kind, {label_key: (labels_dict, series_obj)})
+        self._metrics: dict[str, tuple[str, dict]] = {}
+
+    def _series(self, kind: str, name: str, labels: dict):
+        key = label_key(labels)
+        with self._lock:
+            ent = self._metrics.get(name)
+            if ent is None:
+                ent = (kind, {})
+                self._metrics[name] = ent
+            elif ent[0] != kind:
+                raise TypeError(
+                    f"metric {name!r} is a {ent[0]}, not a {kind}")
+            hit = ent[1].get(key)
+            if hit is None:
+                hit = (dict(labels), _KINDS[kind]())
+                ent[1][key] = hit
+            return hit[1]
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._series("counter", name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._series("gauge", name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._series("histogram", name, labels)
+
+    # -- views ------------------------------------------------------------
+
+    def series(self, name: str) -> list[tuple[dict, object]]:
+        """Every (labels, series) of one metric (empty list if absent)."""
+        with self._lock:
+            ent = self._metrics.get(name)
+            return [(dict(lab), s) for lab, s in ent[1].values()] if ent \
+                else []
+
+    def value(self, name: str, default: float = 0.0, **labels) -> float:
+        """One series' scalar value (counters/gauges), without creating
+        the series as a side effect."""
+        with self._lock:
+            ent = self._metrics.get(name)
+            if ent is None:
+                return default
+            hit = ent[1].get(label_key(labels))
+            return hit[1].value if hit else default
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """``{name: [{"labels": {...}, "value": v | summary-dict}, ...]}``
+        — plain JSON-able data, sorted by label key for determinism."""
+        out: dict = {}
+        with self._lock:
+            for name, (kind, table) in sorted(self._metrics.items()):
+                rows = []
+                for key in sorted(table):
+                    labels, s = table[key]
+                    v = s.summary() if kind == "histogram" else s.value
+                    rows.append({"labels": dict(labels), "value": v})
+                out[name] = rows
+        return out
+
+    def reset(self, name: str | None = None) -> None:
+        with self._lock:
+            if name is None:
+                self._metrics.clear()
+            else:
+                self._metrics.pop(name, None)
+
+
+#: the process-global registry — tune dispatch, SUMMA, train setup, and the
+#: solver audit all record here; the serve engine keeps a per-instance
+#: registry so concurrent engines never clobber each other's view.
+_DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    return _DEFAULT

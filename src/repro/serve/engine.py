@@ -32,8 +32,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.scheduler import (AdmissionError, BucketKey, QueueFullError,
                                    SchedulerConfig, ShapeBucketScheduler)
 
@@ -121,29 +123,30 @@ class Engine:
                 f"(pad_lens={sched_cfg.pad_lens})")
         if fitting != sched_cfg.pad_lens:
             sched_cfg = dataclasses.replace(sched_cfg, pad_lens=fitting)
+        # per-engine metrics registry (shared with the scheduler) so two
+        # engines in one process never clobber each other's counters
+        self.metrics = MetricsRegistry()
         # prompts longer than every bucket are still admissible up to the
         # KV-cache bound — they serve through exact-length cold buckets
         self.scheduler = ShapeBucketScheduler(
             sched_cfg, fsets=tuple(self.variants), mode=self.mode,
-            max_prompt=max_seq - 1)
+            max_prompt=max_seq - 1, metrics=self.metrics)
 
         # --- compile counters (incremented at jit *trace* time only) -----
         self._warmup_active = False
         self._ref_active = False
-        self._counters = {"warmup_traces": 0, "steady_traces": 0,
-                          "reference_traces": 0,
-                          "post_warmup_recompiles": 0}
         self._warmed_once = False
 
         def note():
+            m = self.metrics
             if self._warmup_active:
-                self._counters["warmup_traces"] += 1
+                m.counter("serve.traces", kind="warmup").inc()
             elif self._ref_active:
-                self._counters["reference_traces"] += 1
+                m.counter("serve.traces", kind="reference").inc()
             else:
-                self._counters["steady_traces"] += 1
+                m.counter("serve.traces", kind="steady").inc()
                 if self._warmed_once:
-                    self._counters["post_warmup_recompiles"] += 1
+                    m.counter("serve.post_warmup_recompiles").inc()
 
         def prefill_fn(p, toks, caches, lengths):
             # gather each request's last-real-position logits on device so
@@ -173,10 +176,6 @@ class Engine:
         self._decode_masked = jax.jit(decode_masked_fn,
                                       static_argnums=(5,))
         self.rng = np.random.default_rng(rng_seed)
-        self._served: list[Request] = []
-        self._mb_sizes: list[int] = []
-        self._decode_steps = 0
-        self._decode_time_s = 0.0
 
     # ------------------------------------------------------------------
     # warmup: pre-resolve tune plans + pre-compile every configured bucket
@@ -202,7 +201,9 @@ class Engine:
                 if key.pad_len + 1 > self.max_seq:
                     raise AdmissionError(
                         f"bucket {key} does not fit max_seq {self.max_seq}")
-                self._compile_bucket(key, bucket.batch)
+                with obs.span("serve.warmup", "serve", bucket=str(key),
+                              batch=bucket.batch):
+                    self._compile_bucket(key, bucket.batch)
                 bucket.warmed = True
                 plans = plan_table.get((key.fset, bucket.batch), {})
                 bucket.paths = tuple({p.path for p in plans.values()})
@@ -210,7 +211,8 @@ class Engine:
         finally:
             self._warmup_active = False
             self._warmed_once = True
-        report["traces"] = self._counters["warmup_traces"]
+        report["traces"] = int(self.metrics.value("serve.traces",
+                                                  kind="warmup"))
         return report
 
     def _compile_bucket(self, key: BucketKey, batch: int) -> None:
@@ -260,21 +262,21 @@ class Engine:
         redirect counters as a side effect."""
         L = len(req.prompt)
         if self.scheduler.pending() >= self.scheduler.cfg.max_queue:
-            self.scheduler.rejected += 1
+            self.scheduler.reject()
             raise QueueFullError(
                 f"admission queue full "
                 f"({self.scheduler.cfg.max_queue} pending)")
         try:
             key = self.scheduler.bucket_for(L, req.fset, commit=False)
         except AdmissionError:
-            self.scheduler.rejected += 1
+            self.scheduler.reject()
             raise
         use_exact = False
         if key.pad_len + req.max_new_tokens - 1 > self.max_seq:
             if L + req.max_new_tokens - 1 <= self.max_seq:
                 use_exact = True
             else:
-                self.scheduler.rejected += 1
+                self.scheduler.reject()
                 raise AdmissionError(
                     f"prompt {L} (padded {key.pad_len}) + "
                     f"{req.max_new_tokens} new tokens exceeds max_seq "
@@ -330,31 +332,37 @@ class Engine:
         else:
             bucket.misses += 1
         t0 = time.perf_counter()
-        caches = T.init_cache(self.cfg, B, self.max_seq)
-        lengths_j = jnp.asarray(lengths)
-        logits, caches = self._prefill(params, jnp.asarray(toks), caches,
-                                       lengths_j)
-        logits = np.asarray(logits)                      # [B, V]
-        temps = np.array([reqs[min(i, n_real - 1)].temperature
-                          for i in range(B)])
-        cur = self._sample(logits, temps)
-        for i, r in enumerate(reqs):
-            r.out_tokens.append(int(cur[i]))
         max_new = max(r.max_new_tokens for r in reqs)
-        for step in range(1, max_new):
-            if self.mode == "masked":
-                logits, caches = self._decode_masked(
-                    params, jnp.asarray(cur[:, None]), caches, lengths_j,
-                    jnp.int32(step), S)
-            else:
-                pos = S + step - 1
-                logits, caches = self._decode(
-                    params, jnp.asarray(cur[:, None]), caches,
-                    jnp.int32(pos))
-            cur = self._sample(np.asarray(logits[:, 0]), temps)
+        with obs.span("serve.microbatch", "serve", bucket=str(key),
+                      n_real=n_real, batch=B, pad_len=S, warm=was_warm):
+            caches = T.init_cache(self.cfg, B, self.max_seq)
+            lengths_j = jnp.asarray(lengths)
+            with obs.span("serve.prefill", "serve", bucket=str(key),
+                          batch=B, pad_len=S):
+                logits, caches = self._prefill(params, jnp.asarray(toks),
+                                               caches, lengths_j)
+                logits = np.asarray(logits)              # [B, V]
+            temps = np.array([reqs[min(i, n_real - 1)].temperature
+                              for i in range(B)])
+            cur = self._sample(logits, temps)
             for i, r in enumerate(reqs):
-                if len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(cur[i]))
+                r.out_tokens.append(int(cur[i]))
+            with obs.span("serve.decode", "serve", bucket=str(key),
+                          steps=max_new - 1):
+                for step in range(1, max_new):
+                    if self.mode == "masked":
+                        logits, caches = self._decode_masked(
+                            params, jnp.asarray(cur[:, None]), caches,
+                            lengths_j, jnp.int32(step), S)
+                    else:
+                        pos = S + step - 1
+                        logits, caches = self._decode(
+                            params, jnp.asarray(cur[:, None]), caches,
+                            jnp.int32(pos))
+                    cur = self._sample(np.asarray(logits[:, 0]), temps)
+                    for i, r in enumerate(reqs):
+                        if len(r.out_tokens) < r.max_new_tokens:
+                            r.out_tokens.append(int(cur[i]))
         dt = time.perf_counter() - t0
         bucket.warmed = True        # compiled now — next time is a hit
         bucket.served += n_real
@@ -362,7 +370,10 @@ class Engine:
         # waste = pad suffixes of real rows + entire filler (duplicate)
         # rows, so the metric reflects all non-useful prefill compute
         bucket.padded_tokens += int(B * S - lengths[:n_real].sum())
-        self._mb_sizes.append(n_real)
+        m = self.metrics
+        m.histogram("serve.microbatch.size").observe(n_real)
+        if n_real > 1:
+            m.counter("serve.microbatch.multi").inc()
         for r in reqs:
             r.done = True
             r.bucket = str(key)
@@ -370,9 +381,15 @@ class Engine:
             r.cold = not was_warm
             r.dispatch_paths = bucket.paths
             r.latency_s = time.perf_counter() - getattr(r, "_t_admit", t0)
-            self._served.append(r)
-        self._decode_steps += max_new
-        self._decode_time_s += dt
+            m.counter("serve.requests_served").inc()
+            m.counter("serve.tokens_generated").inc(len(r.out_tokens))
+            m.histogram("serve.request.latency_s").observe(r.latency_s)
+            if obs.is_enabled():
+                obs.event("serve.retire", "serve", bucket=str(key),
+                          new_tokens=len(r.out_tokens), cold=r.cold,
+                          latency_s=round(r.latency_s, 6))
+        m.counter("serve.decode_steps").inc(max_new)
+        m.counter("serve.decode_time_s").inc(dt)
 
     # ------------------------------------------------------------------
     # unbatched reference (ground truth for parity tests / debugging)
@@ -415,36 +432,47 @@ class Engine:
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        """Counters for benchmarks / CI assertions."""
-        served = self._served
-        mbs = self._mb_sizes
+        """Counters for benchmarks / CI assertions — a pure view over the
+        engine's :class:`MetricsRegistry`, keeping the exact dict shape of
+        the pre-registry implementation (tests assert on it)."""
+        m = self.metrics
         totals = self.scheduler.totals()   # eviction-proof bucket counters
         hits, misses = totals["hits"], totals["misses"]
         real, padded = totals["real_tokens"], totals["padded_tokens"]
-        gen = sum(len(r.out_tokens) for r in served)
+        mb = m.histogram("serve.microbatch.size")
+        lat = m.histogram("serve.request.latency_s")
         return {
             "mode": self.mode,
-            "requests": {"served": len(served),
+            "requests": {"served": int(m.value("serve.requests_served")),
                          "rejected": self.scheduler.rejected},
-            "tokens": {"prompt": real, "padded": padded, "generated": gen},
+            "tokens": {"prompt": real, "padded": padded,
+                       "generated": int(m.value("serve.tokens_generated"))},
             "padding_waste": padded / (real + padded) if real + padded
             else 0.0,
             "microbatches": {
-                "total": len(mbs),
-                "multi_request": sum(1 for n in mbs if n > 1),
-                "mean_size": float(np.mean(mbs)) if mbs else 0.0,
-                "max_size": max(mbs) if mbs else 0,
+                "total": mb.count,
+                "multi_request": int(m.value("serve.microbatch.multi")),
+                "mean_size": mb.mean,
+                "max_size": int(mb.max) if mb.count else 0,
             },
             "bucket_hits": hits, "bucket_misses": misses,
             "bucket_hit_rate": hits / (hits + misses) if hits + misses
             else 0.0,
-            "compile": dict(self._counters),
-            "decode_steps": self._decode_steps,
-            "decode_time_s": self._decode_time_s,
+            "compile": {
+                "warmup_traces": int(m.value("serve.traces",
+                                             kind="warmup")),
+                "steady_traces": int(m.value("serve.traces",
+                                             kind="steady")),
+                "reference_traces": int(m.value("serve.traces",
+                                                kind="reference")),
+                "post_warmup_recompiles": int(
+                    m.value("serve.post_warmup_recompiles")),
+            },
+            "decode_steps": int(m.value("serve.decode_steps")),
+            "decode_time_s": m.value("serve.decode_time_s"),
             "latency_s": {
-                "mean": float(np.mean([r.latency_s for r in served]))
-                if served else 0.0,
-                "max": max((r.latency_s for r in served), default=0.0),
+                "mean": lat.mean,
+                "max": lat.max if lat.count else 0.0,
             },
             "scheduler": self.scheduler.stats(),
         }

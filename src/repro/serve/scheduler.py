@@ -37,6 +37,9 @@ import collections
 import dataclasses
 from typing import Optional
 
+from repro import obs
+from repro.obs.metrics import MetricsRegistry
+
 __all__ = [
     "AdmissionError", "QueueFullError", "Bucket", "BucketKey",
     "SchedulerConfig", "ShapeBucketScheduler",
@@ -107,17 +110,29 @@ class SchedulerConfig:
                            tuple(sorted(set(self.pad_lens))))
 
 
+#: per-bucket counters folded into the registry when a bucket is evicted
+_EVICTED_FIELDS = ("hits", "misses", "served", "real_tokens",
+                   "padded_tokens")
+
+
 class ShapeBucketScheduler:
     """Admission queue + bucket bookkeeping.  Pure host-side control plane:
-    no jax in here, so every policy edge is unit-testable in microseconds."""
+    no jax in here, so every policy edge is unit-testable in microseconds.
+
+    Stream-level counters (rejections, waste redirects, evictions, evicted
+    bucket totals) live in a :class:`~repro.obs.metrics.MetricsRegistry`
+    (the engine shares its own); ``rejected``/``waste_redirects``/
+    ``evictions`` remain as read-only views of those series."""
 
     def __init__(self, cfg: SchedulerConfig, *, fsets=("default",),
-                 mode: str = "masked", max_prompt: Optional[int] = None):
+                 mode: str = "masked", max_prompt: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if mode not in ("masked", "equal"):
             raise ValueError(f"mode {mode!r} not in ('masked', 'equal')")
         self.cfg = cfg
         self.mode = mode
         self.fsets = tuple(fsets)
+        self.metrics = metrics or MetricsRegistry()
         #: longest admissible prompt (engine: KV-cache head-room)
         self.max_prompt = max_prompt or max(cfg.pad_lens)
         self.buckets: dict[BucketKey, Bucket] = {}
@@ -133,13 +148,30 @@ class ShapeBucketScheduler:
         self._queued_ids: set[int] = set()   # admission de-dup (id()s)
         self._drained: set[int] = set()   # id()s already pulled via a batch
         self._dynamic_lru: collections.OrderedDict = collections.OrderedDict()
-        self.rejected = 0
-        self.waste_redirects = 0
-        self.evictions = 0
-        #: counters of evicted dynamic buckets, folded in so Engine.stats()
-        #: totals survive eviction
-        self._evicted_totals = {"hits": 0, "misses": 0, "served": 0,
-                                "real_tokens": 0, "padded_tokens": 0}
+
+    # -- registry-backed stream counters ----------------------------------
+
+    @property
+    def rejected(self) -> int:
+        return int(self.metrics.value("serve.rejected"))
+
+    def reject(self, n: int = 1) -> None:
+        self.metrics.counter("serve.rejected").inc(n)
+
+    @property
+    def waste_redirects(self) -> int:
+        return int(self.metrics.value("serve.waste_redirects"))
+
+    @property
+    def evictions(self) -> int:
+        return int(self.metrics.value("serve.evictions"))
+
+    @property
+    def _evicted_totals(self) -> dict:
+        """Counters of evicted dynamic buckets, folded into the registry so
+        Engine.stats() totals survive eviction."""
+        return {f: int(self.metrics.value("serve.evicted_totals", field=f))
+                for f in _EVICTED_FIELDS}
 
     # -- bucket selection -------------------------------------------------
 
@@ -170,7 +202,7 @@ class ShapeBucketScheduler:
             if waste <= self.cfg.waste_cap:
                 return BucketKey(pad, fset)
             if commit:
-                self.waste_redirects += 1
+                self.metrics.counter("serve.waste_redirects").inc()
         return self._dynamic_or_configured(length, fset, commit=commit)
 
     def _dynamic_or_configured(self, length: int, fset: str, *,
@@ -192,10 +224,14 @@ class ShapeBucketScheduler:
                 break
             del self._dynamic_lru[victim]
             gone = self.buckets.pop(victim)
-            for field in self._evicted_totals:
-                self._evicted_totals[field] += getattr(gone, field)
+            for field in _EVICTED_FIELDS:
+                self.metrics.counter("serve.evicted_totals",
+                                     field=field).inc(getattr(gone, field))
             self._pending.pop(victim, None)
-            self.evictions += 1
+            self.metrics.counter("serve.evictions").inc()
+            if obs.is_enabled():
+                obs.event("serve.evict", "serve", bucket=str(victim),
+                          served=gone.served)
         self.buckets[key] = Bucket(key, self.cfg.max_batch, configured=False)
         self._dynamic_lru[key] = True
         return key
@@ -209,20 +245,23 @@ class ShapeBucketScheduler:
         already resolved the bucket (the engine's pre-admission checks)
         pass ``key`` so redirect/LRU bookkeeping is not done twice."""
         if self.pending() >= self.cfg.max_queue:
-            self.rejected += 1
+            self.reject()
             raise QueueFullError(
                 f"admission queue full ({self.cfg.max_queue} pending)")
         if id(req) in self._queued_ids:
-            self.rejected += 1
+            self.reject()
             raise AdmissionError("request is already queued")
         try:
             key = key or self.bucket_for(length, fset)
         except AdmissionError:
-            self.rejected += 1
+            self.reject()
             raise
         self._queue.append((key, req))
         self._pending[key].append(req)
         self._queued_ids.add(id(req))
+        if obs.is_enabled():
+            obs.event("serve.admit", "serve", bucket=str(key),
+                      length=length, fset=fset)
         return key
 
     def pending(self) -> int:

@@ -44,6 +44,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import accuracy as ACC
 from repro.core.formats import DEFAULT_FORMATS, FormatSet
 from repro.core.layout import MPMatrix
@@ -55,6 +56,10 @@ from repro.tune.costmodel import GemmPlan
 
 #: escalation-ladder rungs prefetched for the data-driven ("tile") mode
 LADDER_RUNGS = 5
+
+#: most promoted-tile coordinates kept per escalation record (the count is
+#: always exact; coordinates of a huge promotion wave are truncated)
+PROMOTION_COORD_CAP = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +128,12 @@ class SolveReport:
     summa_recompiles: int
     plan_keys: int
     x: np.ndarray
+    #: wall-clock seconds of each refinement sweep (CG: each
+    #: ``cg_check_every`` iteration block)
+    sweep_seconds: list = dataclasses.field(default_factory=list)
+    #: one record per escalation: promoted-tile coordinates (capped at
+    #: :data:`PROMOTION_COORD_CAP`), tile count, rung, resulting ratio
+    promotions: list = dataclasses.field(default_factory=list)
 
 
 def _balanced_map(mt: int, nt: int, n_hi: int, n_lo8: int, groups: int,
@@ -243,6 +254,8 @@ class _Solver:
         self.escalations = 0
         self.factorizations = 0
         self.ratio_history: list[str] = []
+        self.sweep_seconds: list[float] = []
+        self.promotions: list[dict] = []
         # ---- ladder prefetch: every plan the solve can need -------------
         self.book = TD.resolve_solve_plans(
             self.ladder, t, cfg.fset, nrhs=nrhs, summa_grid=cfg.summa_grid,
@@ -317,7 +330,9 @@ class _Solver:
             self.gemm_seconds += time.perf_counter() - t0
             return prod
 
-        lu_, _stats = LU.blocked_lu(a_stored, self.pa, t, trailing)
+        with obs.span("solve.factor", "solve", rung=rung,
+                      factorization=self.factorizations + 1):
+            lu_, _stats = LU.blocked_lu(a_stored, self.pa, t, trailing)
         self.factorizations += 1
         return lu_
 
@@ -327,6 +342,7 @@ class _Solver:
         from the exact fp64 values.  Returns False when there is nothing
         left to promote (map saturated at HIGH)."""
         cfg, fset = self.cfg, self.cfg.fset
+        old_pa = self.pa
         xa = x if np.all(np.isfinite(x)) else np.ones_like(x)
         # budget slack derived from the acceptance threshold: at-budget
         # tiles sum (worst row) to a metric of budget_margin·tol < tol
@@ -363,7 +379,23 @@ class _Solver:
             self.pa = self.pa + mask.astype(np.int8)
         self.A = self.A.requantize(self.pa, dense=self.a32)
         self.escalations += 1
-        self.ratio_history.append(map_ratio_string(self.pa, fset))
+        ratio = map_ratio_string(self.pa, fset)
+        self.ratio_history.append(ratio)
+        changed = np.argwhere(self.pa != old_pa)
+        self.promotions.append({
+            "escalation": self.escalations,
+            "mode": cfg.escalation,
+            "rung": self._book_rung(),
+            "tiles": int(len(changed)),
+            "coords": [[int(i), int(j)]
+                       for i, j in changed[:PROMOTION_COORD_CAP]],
+            "ratio": ratio,
+        })
+        if obs.is_enabled():
+            obs.event("solve.escalate", "solve",
+                      escalation=self.escalations, mode=cfg.escalation,
+                      rung=self._book_rung(), tiles=int(len(changed)),
+                      ratio=ratio)
         return True
 
     def metric(self, x: np.ndarray) -> float:
@@ -390,7 +422,9 @@ class _Solver:
             fresh_resolutions=TD.fresh_resolutions() - self._fresh0,
             summa_recompiles=_summa_cache_size() - self.recompiles0,
             plan_keys=len(self.book["keys"]),
-            x=x[:, : self.nrhs_logical])
+            x=x[:, : self.nrhs_logical],
+            sweep_seconds=[float(v) for v in self.sweep_seconds],
+            promotions=list(self.promotions))
 
 
 def _robust_factor(sv: _Solver):
@@ -414,14 +448,23 @@ def _solve_lu(sv: _Solver, t0: float) -> SolveReport:
     prev = float("inf")
     sweeps = 0
     while sweeps < cfg.max_sweeps:
-        r = sv.b64 - np.asarray(sv.amul(x.astype(np.float32)), np.float64)
-        d = LU.solve_upper(
-            lu_, LU.solve_unit_lower(lu_, r.astype(np.float32), cfg.tile),
-            cfg.tile)
-        x = x + d
+        ts = time.perf_counter()
+        with obs.span("solve.sweep", "solve", sweep=sweeps + 1,
+                      method="lu"):
+            r = sv.b64 - np.asarray(sv.amul(x.astype(np.float32)),
+                                    np.float64)
+            d = LU.solve_upper(
+                lu_,
+                LU.solve_unit_lower(lu_, r.astype(np.float32), cfg.tile),
+                cfg.tile)
+            x = x + d
+            m = sv.metric(x)
+        sv.sweep_seconds.append(time.perf_counter() - ts)
         sweeps += 1
-        m = sv.metric(x)
         history.append(m)
+        if obs.is_enabled():
+            obs.event("solve.sweep_metric", "solve", sweep=sweeps,
+                      metric=float(m))
         if m <= cfg.tol:
             return sv.report(x, True, sweeps, history, t0)
         if not np.isfinite(m) or m > cfg.stall_ratio * prev:
@@ -453,6 +496,7 @@ def _solve_cg(sv: _Solver, t0: float) -> SolveReport:
     history: list[float] = []
     prev = float("inf")
     iters = 0
+    blk0 = time.perf_counter()
     while iters < cfg.max_sweeps * cfg.cg_check_every:
         v = np.asarray(sv.amul(p.astype(np.float32)), np.float64)
         alpha = rz / np.clip((p * v).sum(axis=0), 1e-300, None)
@@ -466,7 +510,13 @@ def _solve_cg(sv: _Solver, t0: float) -> SolveReport:
         if iters % cfg.cg_check_every:
             continue
         m = sv.metric(x)
+        # one "sweep" = one cg_check_every iteration block
+        sv.sweep_seconds.append(time.perf_counter() - blk0)
+        blk0 = time.perf_counter()
         history.append(m)
+        if obs.is_enabled():
+            obs.event("solve.sweep_metric", "solve", sweep=iters,
+                      metric=float(m))
         if m <= cfg.tol:
             return sv.report(x, True, iters, history, t0)
         if not np.isfinite(m) or m > cfg.stall_ratio * prev:
@@ -492,10 +542,12 @@ def solve(a, b, cfg: SolveConfig = SolveConfig()) -> SolveReport:
     audit counters.
     """
     t0 = time.perf_counter()
-    sv = _Solver(a, b, cfg)
-    sv.ratio_history.append(map_ratio_string(sv.pa, cfg.fset))
-    if cfg.method == "cg":
-        return _solve_cg(sv, t0)
-    if cfg.method != "lu":
-        raise ValueError(f"unknown method {cfg.method!r} (lu | cg)")
-    return _solve_lu(sv, t0)
+    with obs.span("solve.run", "solve", method=cfg.method, tile=cfg.tile,
+                  escalation=cfg.escalation):
+        sv = _Solver(a, b, cfg)
+        sv.ratio_history.append(map_ratio_string(sv.pa, cfg.fset))
+        if cfg.method == "cg":
+            return _solve_cg(sv, t0)
+        if cfg.method != "lu":
+            raise ValueError(f"unknown method {cfg.method!r} (lu | cg)")
+        return _solve_lu(sv, t0)

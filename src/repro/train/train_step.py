@@ -30,10 +30,18 @@ def make_train_step(cfg: ArchConfig, ocfg: adamw.AdamWConfig,
     tune-once at setup — every MPLinear's GEMM plan is resolved against the
     per-microbatch token count *before* the step is jitted, so dispatch
     decisions are fixed and identical across recompilations."""
+    from repro import obs
     if tune_params is not None:
         from repro.tune import dispatch as _tune
-        _tune.warm_registry()
-        _tune.tune_linear_params(tune_params, m_hint=tune_tokens or 4096)
+        with obs.span("train.tune_setup", "train",
+                      m_hint=tune_tokens or 4096):
+            _tune.warm_registry()
+            _tune.tune_linear_params(tune_params,
+                                     m_hint=tune_tokens or 4096)
+    if obs.is_enabled():
+        obs.event("train.step_config", "train", microbatches=microbatches,
+                  compress_accum=compress_accum,
+                  tuned=tune_params is not None)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(params, opt_state, batch):

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.layout import (CompactMPMatrix, KSplitWeight, MPMatrix,
                                ksplit_matmul)
 from repro.core.mp_gemm import mp_gemm_ref
@@ -35,24 +36,36 @@ from repro.tune import search as S
 #: in-memory plan registry: plan-cache key -> GemmPlan
 _REGISTRY: dict[str, GemmPlan] = {}
 
-#: plan-resolution event counts by source ("registry"/"cache"/"model"/
-#: "default", prefixed "summa_" for distributed resolutions).  The
-#: refinement solver (repro.solve) resets these after its ladder prefetch
-#: and asserts that no "model"/"default" resolution — i.e. no retune or
-#: un-prefetched fallback — happens mid-solve.
-_RESOLUTIONS: dict[str, int] = {}
+#: metrics-registry name of the plan-resolution counter, labeled by source
+#: ("registry"/"cache"/"model"/"default", prefixed "summa_" for distributed
+#: resolutions).  The refinement solver (repro.solve) snapshots these after
+#: its ladder prefetch and asserts that no "model"/"default" resolution —
+#: i.e. no retune or un-prefetched fallback — happens mid-solve.
+RESOLUTION_METRIC = "tune.plan_resolutions"
+
+#: metrics-registry name of the per-dispatch call counter, labeled by
+#: execution path / op / format-set tag
+DISPATCH_METRIC = "dispatch.calls"
 
 
-def _count_resolution(source: str) -> None:
-    _RESOLUTIONS[source] = _RESOLUTIONS.get(source, 0) + 1
+def _count_resolution(source: str, key: str | None = None) -> None:
+    obs.metrics_registry().counter(RESOLUTION_METRIC, source=source).inc()
+    if key is not None and obs.is_enabled():
+        obs.event("plan.resolve", "plan", key=key, source=source)
 
 
 def resolution_counters() -> dict[str, int]:
-    return dict(_RESOLUTIONS)
+    """Deprecated alias — ``{source: count}`` view of the
+    ``tune.plan_resolutions`` metric in ``repro.obs.metrics_registry()``
+    (the module-global dict this wrapped now lives there)."""
+    return {labels["source"]: int(c.value) for labels, c in
+            obs.metrics_registry().series(RESOLUTION_METRIC)}
 
 
 def reset_resolution_counters() -> None:
-    _RESOLUTIONS.clear()
+    """Deprecated alias for resetting ``tune.plan_resolutions`` in the
+    metrics registry (explicit, thread-safe reset)."""
+    obs.metrics_registry().reset(RESOLUTION_METRIC)
 
 
 def fresh_resolutions(counters: dict[str, int] | None = None) -> int:
@@ -219,14 +232,14 @@ def resolve_plan(prob: GemmProblem, dev: DeviceSpec | None = None,
     key = S.plan_key(dev, prob)
     hit = _lookup_plan(prob, dev)
     if hit is not None:
-        _count_resolution(hit[1])
+        _count_resolution(hit[1], key)
         return hit
     ranked = S.rank_plans(S.candidate_plans(prob, dev, paths), prob, dev)
     if not ranked:
         raise ValueError(f"no valid plan for {key}")
     plan = ranked[0][0]
     _REGISTRY[key] = plan
-    _count_resolution("model")
+    _count_resolution("model", key)
     return plan, "model"
 
 
@@ -246,6 +259,14 @@ def mp_matmul(a: MPMatrix, b: MPMatrix, c: MPMatrix | None = None, *,
         bad = validate_plan(plan, prob, detect_device())
         if bad:
             raise ValueError(f"plan {plan.key()} invalid: {bad}")
+    obs.metrics_registry().counter(
+        DISPATCH_METRIC, path=plan.path, op=prob.op,
+        formats=prob.formats).inc()
+    if obs.is_enabled():
+        with obs.span("gemm.dispatch", "gemm", path=plan.path,
+                      m=prob.m, n=prob.n, k=prob.k, op=prob.op,
+                      formats=prob.formats):
+            return execute_plan(plan, a, b, c, alpha=alpha, beta=beta)
     return execute_plan(plan, a, b, c, alpha=alpha, beta=beta)
 
 
@@ -301,12 +322,13 @@ def resolve_summa_plan(prob: GemmProblem, dev: DeviceSpec | None = None
     (mesh, per-shard shape, format set) key; otherwise the reference
     one-dot-per-C-class update is used."""
     dev = dev or detect_device()
+    key = S.plan_key(dev, prob)
     hit = _lookup_plan(prob, dev)
     if hit is not None:
-        _count_resolution("summa_" + hit[1])
+        _count_resolution("summa_" + hit[1], key)
         return hit
     t = prob.tile
-    _count_resolution("summa_default")
+    _count_resolution("summa_default", key)
     return GemmPlan(path="ref", bm=t, bn=t, bk=t), "default"
 
 
@@ -405,9 +427,15 @@ def linear_matmul(x, w: KSplitWeight):
             and bool(np.all(np.diff(w.k_cls.arr) <= 0))
             and m % plan.bm == 0 and w.shape[1] % plan.bn == 0
             and w.tile % plan.bk == 0):
+        obs.metrics_registry().counter(
+            DISPATCH_METRIC, path="ksplit_pallas", op="linear",
+            formats=w.fset.key()).inc()
         x2d = x.reshape(m, x.shape[-1])
         y = _kernel_linear((plan.bm, plan.bn, plan.bk), x2d, w)
         return y.reshape(*x.shape[:-1], w.shape[1])
+    obs.metrics_registry().counter(
+        DISPATCH_METRIC, path="ksplit_xla", op="linear",
+        formats=w.fset.key()).inc()
     return ksplit_matmul(x, w)
 
 

@@ -55,7 +55,9 @@ def test_bench_io_round_trip(tmp_path):
     assert loaded["rows"][0] == {"name": "serve_stream",
                                  "us_per_call": 123.4,
                                  "derived": "tokens_per_s=10"}
-    assert loaded["meta"] == {"smoke": True}
+    # explicit meta keys survive; provenance stamps ride along
+    assert loaded["meta"]["smoke"] is True
+    assert set(bench_io.provenance()) <= set(loaded["meta"])
     assert loaded["errors"] == [{"name": "x", "error": "E: y"}]
 
 
