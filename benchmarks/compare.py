@@ -22,7 +22,8 @@ benchmarks locally and copy the fresh files over
 ``results/bench_baseline/`` in the same PR that changes the numbers.
 
     PYTHONPATH=src python benchmarks/compare.py \
-        --baseline results/bench_baseline --fresh . --suites gemm,serve,solve
+        --baseline results/bench_baseline --fresh . \
+        --suites gemm,serve,solve,split
 """
 from __future__ import annotations
 
@@ -152,7 +153,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="results/bench_baseline")
     ap.add_argument("--fresh", default=".",
                     help="directory holding the fresh BENCH_<suite>.json")
-    ap.add_argument("--suites", default="gemm,serve,solve")
+    ap.add_argument("--suites", default="gemm,serve,solve,split")
     ap.add_argument("--rel-tol", type=float, default=0.5)
     ap.add_argument("--abs-slack", type=float, default=1.0)
     args = ap.parse_args(argv)

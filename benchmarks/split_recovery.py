@@ -1,0 +1,137 @@
+"""Split-accumulation recovery benchmark: accuracy vs low-precision passes.
+
+Each GEMM row runs one compute format on the same fp32-grade operands and
+reports the forward error against the fp64 oracle next to the number of
+low-precision MXU passes it spends: plain fp16 (1 pass, the baseline the
+split formats recover from), ``split2_fp16`` (4 passes, fp32-grade) and
+``split3_e5m2`` (9 passes).  ``bound_ok`` asserts the registry-derived
+:func:`repro.core.accuracy.check_against_fp64` bound for the format.
+
+The ``solve_*`` row exercises the compute-higher escalation rung end to
+end: ``repro.solve`` with ``compute_escalation="auto"`` must pick the
+split variant over storage promotion via the cost model, converge, and
+issue zero mid-solve retunes (``mode``/``conv``/``fresh`` are gated
+exactly by ``benchmarks/compare.py``).
+
+    PYTHONPATH=src python benchmarks/split_recovery.py --smoke \
+        --out BENCH_split.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+#: (row tag, format-set names, C class code, GEMM path, pass count)
+CASES = [
+    ("fp16", ("fp16", "fp32"), 0, "tile", 1),
+    ("split2_fp16", ("fp16", "split2_fp16"), 1, "split", 4),
+    ("split3_e5m2", ("fp16", "split3_e5m2"), 1, "split", 9),
+]
+
+
+def _gemm_row(name: str, fnames: tuple, code: int, path: str, passes: int,
+              n: int, tile: int) -> tuple:
+    import jax
+    import numpy as np
+
+    from repro.core.accuracy import check_against_fp64
+    from repro.core.formats import format_set
+    from repro.core.layout import MPMatrix
+    from repro.tune.costmodel import GemmPlan
+    from repro.tune.dispatch import execute_plan
+
+    fset = format_set(*fnames)
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    cls = np.full((n // tile, n // tile), code, np.int8)
+    A = MPMatrix.from_dense(a, cls, tile, fset)
+    B = MPMatrix.from_dense(b, cls, tile, fset)
+    C = MPMatrix.from_dense(np.zeros_like(a), cls, tile, fset)
+    plan = GemmPlan(path=path, bm=tile, bn=tile, bk=tile)
+
+    out = execute_plan(plan, A, B, C)
+    dense = jax.block_until_ready(out.to_dense())
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        jax.block_until_ready(execute_plan(plan, A, B, C).to_dense())
+    us = (time.perf_counter() - t0) / iters * 1e6
+
+    exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = float(np.abs(np.asarray(dense, np.float64) - exact).max()
+                / np.abs(exact).max())
+    chk = check_against_fp64(dense, a, b, None, cls, cls, cls, tile, fset)
+    derived = (f"rel_err={rel:.3g};passes={passes};"
+               f"bound_ok={int(chk['ok'])}")
+    return (name, us, derived, chk["ok"])
+
+
+def _solve_row(n: int, tile: int) -> tuple:
+    import numpy as np
+
+    from repro.core.formats import format_set
+    from repro.solve import SolveConfig, graded_spd, rhs_for_solution, solve
+
+    a = graded_spd(n, cond=1e4, rho=0.8, seed=0)
+    _xt, b = rhs_for_solution(a, nrhs=16, seed=1)
+    rep = solve(a, b, SolveConfig(
+        tile=tile, fset=format_set("fp16", "fp32"),
+        compute_escalation="auto", max_sweeps=40))
+    log_metric = float(np.log10(max(rep.metric, 1e-30)))
+    derived = (f"conv={int(rep.converged)};mode={rep.compute_mode};"
+               f"sweeps={rep.sweeps};esc={rep.escalations};"
+               f"fresh={rep.fresh_resolutions};"
+               f"log10_metric={log_metric:.1f}")
+    ok = (rep.converged and rep.fresh_resolutions == 0
+          and rep.compute_mode == "split")
+    return (f"solve_split_{n}_auto", rep.total_seconds * 1e6, derived, ok)
+
+
+def bench(smoke: bool = True) -> list[tuple]:
+    n, tile = (64, 16) if smoke else (256, 16)
+    rows = [_gemm_row(f"gemm_{tag}_{n}_{p}pass", fnames, code, path, p,
+                      n, tile)
+            for tag, fnames, code, path, p in CASES]
+    # the compute-higher solver rung (n pinned: the cost-model decision is
+    # part of the gated outcome, so smoke and full must agree on the shape)
+    rows.append(_solve_row(128, tile))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    rows = bench(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    bad = []
+    for name, us, derived, ok in rows:
+        print(f"{name},{us:.1f},{derived}")
+        if not ok:
+            bad.append(name)
+    if args.out:
+        from benchmarks.bench_io import write_bench
+        write_bench(args.out, "split",
+                    [(name, us, derived) for name, us, derived, _ in rows],
+                    meta={"smoke": args.smoke},
+                    errors=[{"name": n, "error": "bound violated, not "
+                             "converged, or split rung not chosen"}
+                            for n in bad])
+        print(f"wrote {args.out}")
+    if bad:
+        print(f"FAILED cases: {bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

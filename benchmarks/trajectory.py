@@ -275,6 +275,14 @@ def main(argv=None) -> int:
           + ", ".join(f"{g.label}[{g.source}]" for g in gens))
     print(f"{len(keys)} joined row(s)")
 
+    if not args.smoke and (len(gens) < 2 or not keys):
+        # a fresh clone (or a repo whose baselines were just re-blessed)
+        # has no trajectory to render yet — that is a state, not an error
+        print("no trajectory yet: need >= 2 stamped bench generations "
+              "joining on >= 1 row (run the benchmarks with --out across "
+              "commits, or pass --git-history N)")
+        return 0
+
     os.makedirs(args.out_dir, exist_ok=True)
     md = os.path.join(args.out_dir, "TRAJECTORY.md")
     with open(md, "w") as f:

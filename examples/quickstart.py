@@ -202,3 +202,22 @@ reg = eng.metrics
 print(f"engine counters: served={reg.value('serve.requests_served'):.0f} "
       f"decode_steps={reg.value('serve.decode_steps'):.0f} "
       f"latency mean={reg.histogram('serve.request.latency_s').mean:.3f}s")
+
+# --- 10. store MORE bits, or COMPUTE more passes? (repro.split) -------------
+# §8 recovered precision by promoting tile *storage*.  The split-accumulation
+# subsystem offers the orthogonal move: keep the bytes, decompose each fp32
+# operand into low-precision slices (split2_fp16 = two fp16 slices -> 2^-22
+# recovered grade) and spend extra low-precision passes instead.  With
+# compute_escalation="auto" the solver prices the top escalation rung both
+# ways through the tuner's cost model and takes the cheaper route.
+from repro.core import format_set as _fs  # noqa: E402
+
+rep_a = solve(a_ill, b_rhs,
+              SolveConfig(tile=16, fset=_fs("fp16", "fp32"),
+                          compute_escalation="auto"))
+print(f"store-vs-compute: model priced store {rep_a.store_cost_s*1e6:.1f}us "
+      f"vs split {rep_a.split_cost_s*1e6:.1f}us -> mode={rep_a.compute_mode}")
+print(f"  solve: {' -> '.join(rep_a.ratio_history)} in {rep_a.sweeps} "
+      f"sweeps, metric {rep_a.metric:.2g}, mid-solve retunes "
+      f"{rep_a.fresh_resolutions}")
+assert rep_a.converged and rep_a.fresh_resolutions == 0

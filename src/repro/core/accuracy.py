@@ -48,7 +48,10 @@ def unit_roundoff(dtype) -> float:
 
 
 def _worst_storage_u(cls_map: np.ndarray, fset: FormatSet) -> float:
-    return max(unit_roundoff(fset.storage_dtype(int(c)))
+    # format-derived, not dtype-derived: compound split formats store in an
+    # fp32 mirror buffer but round to their recovered precision (2^-22 for
+    # split2_fp16), which PrecisionFormat.storage_roundoff reports
+    return max(fset.fmt(int(c)).storage_roundoff()
                for c in np.unique(np.asarray(cls_map)))
 
 
@@ -65,14 +68,16 @@ def class_error_bounds(pa: np.ndarray, pb: np.ndarray, pc: np.ndarray,
     u32 = unit_roundoff(jnp.float32)
     u_a = _worst_storage_u(pa, fset)
     u_b = _worst_storage_u(pb, fset)
-    # K-split paths compute at the B K-block class's precision
-    u_op_b = max(unit_roundoff(fset.fmt(int(c)).compute_dtype)
+    # K-split paths compute at the B K-block class's precision; for split
+    # formats the operational roundoff is the *recovered* roundoff of the
+    # full slices² expansion, not the slice dtype's
+    u_op_b = max(fset.fmt(int(c)).operational_roundoff()
                  for c in np.unique(pb))
     out: dict[int, float] = {}
     for c in np.unique(pc):
         fmt = fset.fmt(int(c))
-        u_op = max(unit_roundoff(fmt.compute_dtype), u_op_b)
-        u_store = unit_roundoff(fmt.storage_dtype)
+        u_op = max(fmt.operational_roundoff(), u_op_b)
+        u_store = fmt.storage_roundoff()
         out[int(c)] = safety * (u_a + u_b + 2.0 * u_op + k * u32 + u_store)
     return out
 
@@ -100,7 +105,7 @@ def hpl_mxp_metric(a_exact: np.ndarray, x: np.ndarray, b: np.ndarray,
     x64 = np.asarray(x, np.float64)
     b64 = np.asarray(b, np.float64)
     r = np.abs(a64 @ x64 - b64).max()
-    u = unit_roundoff(fset.storage_dtype(fset.high))
+    u = fset.fmt(fset.high).storage_roundoff()
     denom = (np.abs(a64).sum(axis=1).max()
              * np.abs(x64).max() * a64.shape[0] * u)
     return float(r / max(denom, 1e-300))
@@ -148,7 +153,7 @@ def escalation_threshold(a_exact: np.ndarray, x: np.ndarray, tile: int,
         xa = xa[:, None]
     m, n = a64.shape
     mt, nt = m // tile, n // tile
-    u_high = unit_roundoff(fset.storage_dtype(fset.high))
+    u_high = fset.fmt(fset.high).storage_roundoff()
     row_scale = (a64 @ xa).max(axis=1)          # |A|·|x| per row, worst RHS
     tile_rows = row_scale.reshape(mt, tile).max(axis=1)
     return safety * u_high * np.repeat(tile_rows[:, None], nt, axis=1) / nt

@@ -61,10 +61,33 @@ class PrecisionFormat:
             return float(self.pass_cost[family])
         return float(self.pass_cost.get("default", 1.0))
 
+    @property
+    def buffer_dtype(self):
+        """dtype of the layout buffer a tile of this format lives in
+        (== ``storage_dtype`` for simple formats; compound formats may
+        mirror into a wider buffer while keeping their own rounding)."""
+        return self.storage_dtype
+
+    def store(self, x: jax.Array) -> jax.Array:
+        """Value a layout buffer holds for ``x``: rounded to this format's
+        storage precision, in ``buffer_dtype``."""
+        return x.astype(self.storage_dtype)
+
     def quantize(self, x: jax.Array) -> jax.Array:
         """Round-trip through storage precision (receiver-side conversion
         produces exactly this value at the consumer)."""
         return x.astype(self.storage_dtype).astype(jnp.float32)
+
+    def storage_roundoff(self) -> float:
+        """Unit roundoff of values surviving a storage round-trip."""
+        info = jnp.finfo(jnp.dtype(self.storage_dtype))
+        return float(2.0 ** -(info.nmant + 1))
+
+    def operational_roundoff(self) -> float:
+        """Unit roundoff of the effective compute precision (what a dot
+        at this format actually resolves)."""
+        info = jnp.finfo(jnp.dtype(self.compute_dtype))
+        return float(2.0 ** -(info.nmant + 1))
 
     def signature(self) -> str:
         """Stable signature for cache invalidation: changing any operational
@@ -148,6 +171,91 @@ FP8_E5M2 = register_format(
 FP16 = register_format(
     name="fp16", storage_dtype=jnp.float16, compute_dtype=jnp.float16,
     bytes_per_elem=2, pass_cost={"default": 1.0}, short="S")
+
+
+# ---------------------------------------------------------------------------
+# Compound split formats (Ozaki/Ootomo-style split accumulation)
+# ---------------------------------------------------------------------------
+
+def split_slices(x: jax.Array, slices: int, slice_dtype
+                 ) -> tuple[jax.Array, ...]:
+    """Deterministic hi→lo operand split: slice *i* is the ``slice_dtype``
+    rounding of the residual left by slices ``0..i-1``.  For fp16 slices
+    the pairwise slice products are exact in fp32 (11-bit × 11-bit
+    significands fit in 24 bits), which is what makes split accumulation
+    recover fp32-grade GEMM from low-precision passes."""
+    rest = x.astype(jnp.float32)
+    out = []
+    for _ in range(slices):
+        s = rest.astype(slice_dtype)
+        out.append(s)
+        rest = rest - s.astype(jnp.float32)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitFormat(PrecisionFormat):
+    """A compound format: one logical value stored as ``slices``
+    precision-recovery slices of ``slice_dtype``.
+
+    Layout buffers mirror the recombined value in fp32 (``buffer_dtype``)
+    so every existing layout/kernel keeps single-dtype tile buffers; the
+    *storage semantics* are the split round-trip (``store``), i.e. the
+    value is representable as a sum of ``slices`` slice-dtype terms.
+    Compute happens as ``slices²`` low-precision passes accumulated in
+    fp32 — ``pass_cost`` prices exactly that, and the recovered unit
+    roundoff is ``2^-(slices·(nmant+1))`` (fp32-grade for 2×fp16).
+    """
+
+    slices: int = 2
+    slice_dtype: object = jnp.float16
+
+    @property
+    def buffer_dtype(self):
+        return jnp.float32
+
+    def store(self, x: jax.Array) -> jax.Array:
+        parts = split_slices(x, self.slices, self.slice_dtype)
+        out = parts[0].astype(jnp.float32)
+        for s in parts[1:]:
+            out = out + s.astype(jnp.float32)
+        return out
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        return self.store(x)
+
+    def recovered_roundoff(self) -> float:
+        """Unit roundoff recovered by the full slice expansion."""
+        nmant = jnp.finfo(jnp.dtype(self.slice_dtype)).nmant
+        return float(2.0 ** -(self.slices * (nmant + 1)))
+
+    def storage_roundoff(self) -> float:
+        return self.recovered_roundoff()
+
+    def operational_roundoff(self) -> float:
+        return self.recovered_roundoff()
+
+    def signature(self) -> str:
+        base = super().signature()
+        return (f"{base}:split{self.slices}x"
+                f"{jnp.dtype(self.slice_dtype).name}")
+
+
+#: 2×fp16 split: 4 fp16 MXU passes recover fp32-grade accuracy (2^-22).
+SPLIT2_FP16 = register_format(SplitFormat(
+    name="split2_fp16", storage_dtype=jnp.float32,
+    compute_dtype=jnp.float16, bytes_per_elem=4,
+    pass_cost={"default": 4.0, "gpu": 1.0, "cpu": 1.25},
+    short="D", slices=2, slice_dtype=jnp.float16))
+
+#: 3×fp8 e5m2 split: 9 fp8 passes recover ~bf16-grade accuracy (2^-9).
+#: Slices are e5m2; the pass dtype is bf16 (e5m2 upcasts on v5e, matching
+#: ``fp8_e5m2`` above) — 3-bit × 3-bit significand products stay exact.
+SPLIT3_E5M2 = register_format(SplitFormat(
+    name="split3_e5m2", storage_dtype=jnp.float32,
+    compute_dtype=jnp.bfloat16, bytes_per_elem=3,
+    pass_cost={"default": 9.0, "gpu": 2.25, "cpu": 4.5},
+    short="D", slices=3, slice_dtype=jnp.float8_e5m2))
 
 
 # ---------------------------------------------------------------------------

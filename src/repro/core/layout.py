@@ -128,7 +128,7 @@ class MPMatrix:
         cmap = jnp.asarray(cls_map, jnp.int8)
         sel = jnp.repeat(jnp.repeat(cmap, tile, 0), tile, 1)
         bufs = tuple(
-            jnp.where(sel == code, wp, 0.0).astype(fset.storage_dtype(code))
+            fset.fmt(code).store(jnp.where(sel == code, wp, 0.0))
             for code in fset.codes)
         return cls(bufs, _HashableMap(cls_map), tile,
                    (w.shape[0], w.shape[1]), fset)
@@ -236,11 +236,11 @@ class CompactMPMatrix:
         flat_cls = cls_map.reshape(-1)
 
         def gather_class(code):
-            dtype = fset.storage_dtype(code)
+            fmt = fset.fmt(code)
             idx = np.nonzero(flat_cls == code)[0]
             if len(idx) == 0:
-                return jnp.zeros((0, tile, tile), dtype)
-            return tiles[jnp.asarray(idx)].astype(dtype)
+                return jnp.zeros((0, tile, tile), fmt.buffer_dtype)
+            return fmt.store(tiles[jnp.asarray(idx)])
 
         return cls(tuple(gather_class(code) for code in fset.codes),
                    _HashableMap(cls_map), _HashableMap(slot), tile,
@@ -352,7 +352,7 @@ class KSplitWeight:
             idx = parts[code]
             rows = (wp[jnp.asarray(idx)] if len(idx)
                     else jnp.zeros((0, n), jnp.float32))
-            bufs.append(rows.astype(fset.storage_dtype(code)))
+            bufs.append(fset.fmt(code).store(rows))
         return cls(tuple(bufs), _HashableMap(k_cls), tile, (k, n), fset)
 
     def to_dense(self) -> jax.Array:
@@ -433,7 +433,7 @@ class NSplitWeight:
         start = 0
         for code in fset.class_order:
             stop = start + cols[code]
-            bufs[code] = wp[:, start:stop].astype(fset.storage_dtype(code))
+            bufs[code] = fset.fmt(code).store(wp[:, start:stop])
             start = stop
         return cls(tuple(bufs), _HashableMap(n_cls), tile, (k, n), fset)
 

@@ -22,8 +22,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import DEFAULT_FORMATS, FormatSet
+from repro.core.formats import DEFAULT_FORMATS, FormatSet, SplitFormat
 from repro.core.layout import MPMatrix
+
+
+def _class_dot(ad: jax.Array, bd: jax.Array, fmt) -> jax.Array:
+    """One C-class dense dot at the class's operational precision —
+    split compound formats expand to their slices² pair products."""
+    if isinstance(fmt, SplitFormat):
+        from repro.split.recovery import split_dot_general
+        return split_dot_general(ad, bd, fmt)
+    op = fmt.compute_dtype
+    return jax.lax.dot_general(
+        ad.astype(op), bd.astype(op), (((1,), (0,)), ((), ())),
+        precision=fmt.dot_precision,
+        preferred_element_type=jnp.float32)
 
 
 def _storage_dense(m: MPMatrix) -> jax.Array:
@@ -47,11 +60,7 @@ def mp_gemm_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
     per_class = {}
     for cc in classes:
         fmt = fset.fmt(cc)
-        op = fmt.compute_dtype
-        acc = jax.lax.dot_general(
-            ad.astype(op), bd.astype(op), (((1,), (0,)), ((), ())),
-            precision=fmt.dot_precision,
-            preferred_element_type=jnp.float32)
+        acc = _class_dot(ad, bd, fmt)
         per_class[cc] = alpha * acc + beta * cd
     sel = jnp.asarray(_expand(c.cls.arr, c.tile))
     out = jnp.zeros_like(cd)
@@ -82,6 +91,10 @@ def mp_gemm_tilewise_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
             for l in range(kt):
                 at = ad[i * t:(i + 1) * t, l * t:(l + 1) * t]
                 bt = bd[l * t:(l + 1) * t, j * t:(j + 1) * t]
+                if isinstance(fmt, SplitFormat):
+                    acc += np.asarray(_class_dot(
+                        jnp.asarray(at), jnp.asarray(bt), fmt), np.float32)
+                    continue
                 # receiver-side conversion to operational precision
                 at_op = np.asarray(jnp.asarray(at).astype(op), np.float32)
                 bt_op = np.asarray(jnp.asarray(bt).astype(op), np.float32)

@@ -36,6 +36,24 @@ def mp_gemm(a: MPMatrix, b: MPMatrix, c: MPMatrix,
     return MPMatrix(tuple(o_bufs), c.cls, c.tile, c.shape, c.fset)
 
 
+def split_mp_gemm(a: MPMatrix, b: MPMatrix, c: MPMatrix,
+                  alpha: float = 1.0, beta: float = 0.0) -> MPMatrix:
+    """Split-accumulation GEMM via the Pallas kernel: split C classes
+    expand to slices² low-precision passes, fp32-accumulated in
+    deterministic order (see repro.split)."""
+    from repro.kernels import split_gemm as _split
+    from repro.split.recovery import split_format_specs
+    if not (a.fset == b.fset == c.fset):
+        raise ValueError("split_mp_gemm operands must share a format set")
+    o_bufs = _split.split_gemm_tile_multi(
+        a.bufs, b.bufs, c.bufs,
+        jnp.asarray(a.cls.arr), jnp.asarray(b.cls.arr),
+        jnp.asarray(c.cls.arr),
+        tile=a.tile, specs=split_format_specs(a.fset),
+        alpha=alpha, beta=beta, interpret=_interpret())
+    return MPMatrix(tuple(o_bufs), c.cls, c.tile, c.shape, c.fset)
+
+
 def ksplit_matmul_kernel(x: jax.Array, w: KSplitWeight,
                          bm: int = 128, bn: int = 128, bk: int = 128
                          ) -> jax.Array:

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel for split-accumulation mixed-precision GEMM.
+
+Same tile-task structure as :mod:`repro.kernels.mp_gemm_tile` (one kernel
+instance per (i, j, k) tile triple, scalar-prefetched precision maps,
+per-format buffers, fp32 VMEM accumulator over the k grid dimension), but
+the per-C-class ``lax.switch`` branch of a
+:class:`~repro.core.formats.SplitFormat` class decomposes the
+reconstructed fp32 A/B tiles into their precision-recovery slices
+*in-kernel* and accumulates the ``slices²`` pair products in the
+deterministic ``slice_pair_order`` — fp32-grade output from
+low-precision MXU passes, with bandwidth still one buffer per format.
+
+Spec rows are ``split_format_specs(fset)``:
+``(compute_dtype, dot_precision, buffer_dtype, slices, slice_dtype)``;
+simple formats carry ``slices=1`` and reduce to the plain tile dot, so
+this kernel is a strict superset of the tile kernel's semantics.  The
+bitwise-matching reference lowering is
+:func:`repro.split.recovery.split_gemm_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import split_slices
+from repro.split.recovery import slice_pair_order
+
+_GEMM_DIMS = (((1,), (0,)), ((), ()))
+
+
+def _spec_dot(a32, b32, spec):
+    """One C-class tile dot: plain for slices=1, slice-pair expansion
+    accumulated in ``slice_pair_order`` for split compound formats."""
+    compute, prec, _, slices, slice_dt = spec
+    op = jnp.dtype(compute)
+    if slices == 1:
+        return jax.lax.dot_general(
+            a32.astype(op), b32.astype(op), _GEMM_DIMS, precision=prec,
+            preferred_element_type=jnp.float32)
+    sdt = jnp.dtype(slice_dt)
+    sa = split_slices(a32, slices, sdt)
+    sb = split_slices(b32, slices, sdt)
+    upd = None
+    for si, sj in slice_pair_order(slices):
+        p = jax.lax.dot_general(
+            sa[si].astype(op), sb[sj].astype(op), _GEMM_DIMS,
+            precision=prec, preferred_element_type=jnp.float32)
+        upd = p if upd is None else upd + p
+    return upd
+
+
+def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
+            *refs,                             # nf a/b/c bufs, nf outputs,
+                                               # fp32 scratch
+            nf: int, kt: int, alpha: float, beta: float, specs: tuple):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    del pa_ref, pb_ref  # storage class already encoded in the format buffers
+    a_refs = refs[:nf]
+    b_refs = refs[nf:2 * nf]
+    c_refs = refs[2 * nf:3 * nf]
+    o_refs = refs[3 * nf:4 * nf]
+    acc_ref = refs[4 * nf]
+
+    def upcast_sum(rs):
+        out = rs[0][...].astype(jnp.float32)
+        for r in rs[1:]:
+            out = out + r[...].astype(jnp.float32)
+        return out
+
+    # receiver-side reconstruction of the storage values (branch-free)
+    a32 = upcast_sum(a_refs)
+    b32 = upcast_sum(b_refs)
+
+    cls_c = pc_ref[i, j]
+    upd = jax.lax.switch(
+        cls_c, [functools.partial(_spec_dot, a32, b32, s) for s in specs])
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += upd
+
+    @pl.when(k == kt - 1)
+    def _store():
+        c32 = upcast_sum(c_refs)
+        out = alpha * acc_ref[...] + beta * c32
+        for code, (o_ref, spec) in enumerate(zip(o_refs, specs)):
+            _, _, buf_dt, slices, slice_dt = spec
+            val = out
+            if slices > 1:
+                # split storage semantics: the buffer mirrors the value a
+                # slice decomposition round-trip preserves
+                parts = split_slices(out, slices, jnp.dtype(slice_dt))
+                val = parts[0].astype(jnp.float32)
+                for s in parts[1:]:
+                    val = val + s.astype(jnp.float32)
+            o_ref[...] = jnp.where(cls_c == code, val, 0.0).astype(
+                jnp.dtype(buf_dt))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "specs", "alpha", "beta", "interpret"))
+def split_gemm_tile_multi(a_bufs, b_bufs, c_bufs, pa, pb, pc,
+                          *, tile: int, specs: tuple, alpha: float = 1.0,
+                          beta: float = 0.0, interpret: bool = False):
+    """C ← α·A·B + β·C with per-tile precision and split-accumulation
+    recovery for split C classes.
+
+    ``a_bufs``/``b_bufs``/``c_bufs`` are per-class-code buffer tuples
+    (``MPMatrix.bufs``); ``specs`` is ``split_format_specs(fset)``;
+    pa/pb/pc are int tile class maps.  Returns one output buffer per
+    class code, in that class's buffer dtype.
+    """
+    nf = len(specs)
+    assert len(a_bufs) == len(b_bufs) == len(c_bufs) == nf
+    M, K = a_bufs[0].shape
+    N = b_bufs[0].shape[1]
+    t = tile
+    assert M % t == 0 and K % t == 0 and N % t == 0, (M, K, N, t)
+    mt, kt, nt = M // t, K // t, N // t
+
+    grid = (mt, nt, kt)
+    # index maps receive (i, j, k, *scalar_prefetch_refs)
+    ik = lambda i, j, k, *_: (i, k)
+    kj = lambda i, j, k, *_: (k, j)
+    ij = lambda i, j, k, *_: (i, j)
+    in_specs = ([pl.BlockSpec((t, t), ik) for _ in range(nf)]
+                + [pl.BlockSpec((t, t), kj) for _ in range(nf)]
+                + [pl.BlockSpec((t, t), ij) for _ in range(nf)])
+    out_specs = [pl.BlockSpec((t, t), ij) for _ in range(nf)]
+    kernel = functools.partial(_kernel, nf=nf, kt=kt, alpha=alpha,
+                               beta=beta, specs=specs)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((t, t), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.dtype(s[2])) for s in specs
+        ],
+        interpret=interpret,
+    )(pa.astype(jnp.int32), pb.astype(jnp.int32), pc.astype(jnp.int32),
+      *a_bufs, *b_bufs, *c_bufs)

@@ -51,7 +51,9 @@ from repro.core.layout import MPMatrix
 from repro.core.precision import (Policy, make_map, map_ratio_string,
                                   map_storage_bytes, role_class_vector)
 from repro.solve import lu as LU
+from repro.split.recovery import split_variant
 from repro.tune import dispatch as TD
+from repro.tune import search as TS
 from repro.tune.costmodel import GemmPlan
 
 #: escalation-ladder rungs prefetched for the data-driven ("tile") mode
@@ -92,6 +94,14 @@ class SolveConfig:
     start_policy: str = "norm_topk"
     cg_check_every: int = 8
     escalation: str = "tile"       # "tile" | "balanced" (SUMMA-compatible)
+    #: compute-higher escalation: "store" keeps the classic Q→S→D storage
+    #: ladder; "split" swaps the HIGH role for ``split_format`` so stalled
+    #: tiles escalate into split-accumulate compute recovery instead of
+    #: wider storage; "auto" prices the top-rung residual GEMM both ways
+    #: with the cost model and takes the cheaper (single-device only)
+    compute_escalation: str = "store"  # "store" | "split" | "auto"
+    #: split compound format the compute-higher mode substitutes for HIGH
+    split_format: str = "split2_fp16"
     #: shard segments of the balanced ladder; defaults to summa_grid's P.
     #: A single-device run that must match a P×Q distributed solve
     #: bit-for-bit sets this to P so both walk the identical map ladder.
@@ -134,6 +144,14 @@ class SolveReport:
     #: one record per escalation: promoted-tile coordinates (capped at
     #: :data:`PROMOTION_COORD_CAP`), tile count, rung, resulting ratio
     promotions: list = dataclasses.field(default_factory=list)
+    #: compute-higher escalation outcome: "store" (classic storage ladder)
+    #: or "split" (HIGH role replaced by a split compound format)
+    compute_mode: str = "store"
+    #: cost-model price (seconds) of the top-rung residual GEMM under
+    #: storage promotion vs split-accumulate recovery; NaN when the
+    #: decision did not run (``compute_escalation="store"``)
+    store_cost_s: float = float("nan")
+    split_cost_s: float = float("nan")
 
 
 def _balanced_map(mt: int, nt: int, n_hi: int, n_lo8: int, groups: int,
@@ -190,6 +208,54 @@ def _tile_rung(cfg: SolveConfig, frac_high: float) -> int:
     return int(np.clip(round(r), 0, LADDER_RUNGS - 1))
 
 
+def _rung_cost_s(fset: FormatSet, mt: int, rt: int, tile: int) -> float:
+    """Cost-model price of the *top-rung* residual GEMM ``A·X`` (uniform
+    HIGH — the map every storage ladder saturates at) under ``fset``.
+
+    Ranks :data:`~repro.tune.dispatch.SOLVE_PATHS` candidates directly
+    (model only, no cache writes, no fresh-resolution counts) and returns
+    the best predicted seconds."""
+    dev = TD.detect_device()
+    hi = np.full((mt, mt), fset.high, np.int8)
+    prob = TD.solve_gemm_problem(hi, tile, rt, fset)
+    cands = TS.candidate_plans(prob, dev, TD.SOLVE_PATHS)
+    if not cands:
+        return float("inf")
+    return float(TS.rank_plans(cands, prob, dev)[0][1]["total_s"])
+
+
+def _decide_compute(cfg: SolveConfig, mt: int, rt: int
+                    ) -> tuple[SolveConfig, str, float, float]:
+    """Compute-higher escalation decision: keep the storage ladder (HIGH =
+    the set's widest storage format) or substitute the split compound
+    format, so a stalled tile escalates into slices² low-precision passes
+    instead of wider storage.  ``"auto"`` takes whichever the cost model
+    prices cheaper at the ladder's top rung; both prices are recorded in
+    the report either way."""
+    if cfg.compute_escalation not in ("store", "split", "auto"):
+        raise ValueError(
+            f"unknown compute_escalation {cfg.compute_escalation!r} "
+            "(store | split | auto)")
+    if cfg.compute_escalation == "store":
+        return cfg, "store", float("nan"), float("nan")
+    if cfg.summa_grid is not None:
+        raise ValueError(
+            "compute_escalation needs a single-device solve (the SUMMA "
+            "local paths do not run split compound formats)")
+    split_fset = split_variant(cfg.fset, cfg.split_format)
+    store_s = _rung_cost_s(cfg.fset, mt, rt, cfg.tile)
+    split_s = _rung_cost_s(split_fset, mt, rt, cfg.tile)
+    mode = ("split" if cfg.compute_escalation == "split"
+            or split_s < store_s else "store")
+    if mode == "split":
+        cfg = dataclasses.replace(cfg, fset=split_fset)
+    if obs.is_enabled():
+        obs.event("solve.compute_decision", "solve", mode=mode,
+                  policy=cfg.compute_escalation, store_s=store_s,
+                  split_s=split_s)
+    return cfg, mode, store_s, split_s
+
+
 def _summa_cache_size() -> int:
     from repro.core.summa import _summa_impl
     try:
@@ -225,6 +291,13 @@ class _Solver:
         self.b64[:, : self.nrhs_logical] = b2
         self.n, self.nrhs = n, nrhs
         self.mt, self.rt = n // t, nrhs // t
+
+        # compute-higher escalation: possibly swap the HIGH role for the
+        # split compound format before any layout/ladder/plan exists, so
+        # the whole solve (prefetch included) runs under one format set
+        cfg, self.compute_mode, self.store_cost_s, self.split_cost_s = (
+            _decide_compute(cfg, self.mt, self.rt))
+        self.cfg = cfg
 
         if cfg.summa_grid:
             P, Q = cfg.summa_grid
@@ -424,7 +497,10 @@ class _Solver:
             plan_keys=len(self.book["keys"]),
             x=x[:, : self.nrhs_logical],
             sweep_seconds=[float(v) for v in self.sweep_seconds],
-            promotions=list(self.promotions))
+            promotions=list(self.promotions),
+            compute_mode=self.compute_mode,
+            store_cost_s=float(self.store_cost_s),
+            split_cost_s=float(self.split_cost_s))
 
 
 def _robust_factor(sv: _Solver):

@@ -1,0 +1,24 @@
+"""repro.split — Ozaki-style split-accumulation subsystem.
+
+Compound :class:`~repro.core.formats.SplitFormat` registry entries
+(``split2_fp16``, ``split3_e5m2``) decompose fp32-grade operands into
+precision-recovery slices, compute ``slices²`` partial products at the
+low-precision pass dtype, and accumulate fp32 in a deterministic order.
+See :mod:`repro.split.recovery` for the slice algebra and
+:mod:`repro.kernels.split_gemm` for the Pallas kernel; the ``split``
+dispatch path in :mod:`repro.tune.dispatch` serves them through the
+normal ``mp_matmul`` API, and ``repro.solve`` uses ``split_variant`` as
+the *compute-higher* escalation alternative to storage promotion.
+"""
+from repro.core.formats import (SPLIT2_FP16, SPLIT3_E5M2,  # noqa: F401
+                                SplitFormat, split_slices)
+from repro.split.recovery import (has_split,  # noqa: F401
+                                  recombine, slice_pair_order,
+                                  split_dot_general, split_format_specs,
+                                  split_gemm_ref, split_variant)
+
+__all__ = [
+    "SPLIT2_FP16", "SPLIT3_E5M2", "SplitFormat", "split_slices",
+    "slice_pair_order", "recombine", "split_dot_general",
+    "split_format_specs", "has_split", "split_variant", "split_gemm_ref",
+]

@@ -1,0 +1,169 @@
+"""Ozaki/Ootomo-style split accumulation: fp32-grade GEMM from
+low-precision MXU passes.
+
+A :class:`~repro.core.formats.SplitFormat` value is a sum of ``slices``
+slice-dtype terms extracted hi→lo (``split_slices``): slice 0 is the
+slice-dtype rounding of the value, slice *i* the rounding of the residual
+left by slices ``0..i-1``.  The product of two split operands expands to
+``slices²`` slice-pair products; for fp16 slices each pairwise product is
+*exact* in fp32 (11-bit × 11-bit significands fit in fp32's 24), so the
+only rounding left is the fp32 accumulation itself plus the truncated
+slice residuals — a recovered unit roundoff of ``2^-(slices·(nmant+1))``
+(``2^-22`` for 2×fp16: fp32-grade accuracy from fp16 passes).
+
+Accumulation order is *deterministic*: slice pairs are summed smallest
+magnitude first (descending ``i+j``, then descending ``i`` —
+``slice_pair_order``), and every consumer — the full-matrix oracle dot
+(``split_dot_general``), the per-tile reference lowering
+(``split_gemm_ref``) and the Pallas kernel
+(:mod:`repro.kernels.split_gemm`) — uses the same order, which is what
+makes ref↔Pallas bitwise parity testable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import (FormatSet, PrecisionFormat, SplitFormat,
+                                format_set, get_format, split_slices)
+
+#: standard 2-D GEMM contraction (rows of B against columns of A)
+_GEMM_DIMS = (((1,), (0,)), ((), ()))
+
+
+def slice_pair_order(slices: int) -> tuple[tuple[int, int], ...]:
+    """Deterministic accumulation order of the ``slices²`` pair products:
+    smallest-magnitude terms first (descending ``i+j``, then ``i``), so
+    the dominant (0, 0) term lands last on the largest partial sum."""
+    pairs = [(i, j) for i in range(slices) for j in range(slices)]
+    return tuple(sorted(pairs, key=lambda p: (-(p[0] + p[1]), -p[0])))
+
+
+def recombine(parts) -> jax.Array:
+    """fp32 sum of slices, in slice order (the ``store`` round-trip)."""
+    out = parts[0].astype(jnp.float32)
+    for s in parts[1:]:
+        out = out + s.astype(jnp.float32)
+    return out
+
+
+def split_dot_general(a32: jax.Array, b32: jax.Array, fmt: SplitFormat,
+                      dims=_GEMM_DIMS) -> jax.Array:
+    """``A·B`` via the full ``slices²`` pair-product expansion at the
+    format's pass dtype, accumulated fp32 in ``slice_pair_order``."""
+    sa = split_slices(a32, fmt.slices, fmt.slice_dtype)
+    sb = split_slices(b32, fmt.slices, fmt.slice_dtype)
+    op = jnp.dtype(fmt.compute_dtype)
+    acc = None
+    for i, j in slice_pair_order(fmt.slices):
+        p = jax.lax.dot_general(
+            sa[i].astype(op), sb[j].astype(op), dims,
+            precision=fmt.dot_precision,
+            preferred_element_type=jnp.float32)
+        acc = p if acc is None else acc + p
+    return acc
+
+
+def split_format_specs(fset: FormatSet) -> tuple:
+    """Hashable per-class spec rows for the split-aware kernels:
+    ``(compute_dtype, dot_precision, buffer_dtype, slices, slice_dtype)``
+    — simple formats get ``slices=1`` and degenerate slice dtype."""
+    rows = []
+    for f in fset.formats():
+        if isinstance(f, SplitFormat):
+            rows.append((jnp.dtype(f.compute_dtype).name, f.dot_precision,
+                         jnp.dtype(f.buffer_dtype).name, int(f.slices),
+                         jnp.dtype(f.slice_dtype).name))
+        else:
+            rows.append((jnp.dtype(f.compute_dtype).name, f.dot_precision,
+                         jnp.dtype(f.storage_dtype).name, 1,
+                         jnp.dtype(f.compute_dtype).name))
+    return tuple(rows)
+
+
+def has_split(fset: FormatSet) -> bool:
+    return any(isinstance(f, SplitFormat) for f in fset.formats())
+
+
+def split_variant(fset: FormatSet, split_name: str = "split2_fp16"
+                  ) -> FormatSet:
+    """The *compute-higher* sibling of ``fset``: same lower roles, HIGH
+    replaced by a registered split compound format.  This is the format
+    set the solver's cost model prices against storage promotion."""
+    fmt = get_format(split_name)
+    if not isinstance(fmt, SplitFormat):
+        raise ValueError(f"{split_name!r} is not a split compound format")
+    return format_set(*fset.names[:-1], split_name)
+
+
+def _tile(buf: jax.Array, i: int, j: int, t: int) -> jax.Array:
+    return jax.lax.slice(buf, (i * t, j * t), ((i + 1) * t, (j + 1) * t))
+
+
+def split_gemm_ref(a, b, c, alpha: float = 1.0, beta: float = 0.0):
+    """Bitwise-matching reference lowering of the Pallas split kernel
+    (:func:`repro.kernels.split_gemm.split_gemm_tile_multi`).
+
+    Same per-tile op sequence as one kernel instance — branch-free upcast
+    reconstruction, per-C-class (possibly split-expanded) tile dot,
+    sequential fp32 accumulation over k tiles, split-round-tripped store —
+    so in interpret mode the outputs agree bit for bit.  Returns one
+    output buffer per class code (``MPMatrix.bufs`` layout).
+    """
+    from repro.core.layout import MPMatrix, _HashableMap
+
+    fset = c.fset
+    specs = split_format_specs(fset)
+    t = c.tile
+    mt, kt = a.cls.arr.shape
+    nt = b.cls.arr.shape[1]
+    M, N = mt * t, nt * t
+    o_bufs = [jnp.zeros((M, N), jnp.dtype(s[2])) for s in specs]
+
+    for i in range(mt):
+        for j in range(nt):
+            cls_c = int(c.cls.arr[i, j])
+            compute, prec, _, slices, slice_dt = specs[cls_c]
+            op = jnp.dtype(compute)
+            acc = jnp.zeros((t, t), jnp.float32)
+            for k in range(kt):
+                a32 = recombine([_tile(buf, i, k, t) for buf in a.bufs])
+                b32 = recombine([_tile(buf, k, j, t) for buf in b.bufs])
+                if slices == 1:
+                    upd = jax.lax.dot_general(
+                        a32.astype(op), b32.astype(op), _GEMM_DIMS,
+                        precision=prec, preferred_element_type=jnp.float32)
+                else:
+                    sdt = jnp.dtype(slice_dt)
+                    sa = split_slices(a32, slices, sdt)
+                    sb = split_slices(b32, slices, sdt)
+                    upd = None
+                    for si, sj in slice_pair_order(slices):
+                        p = jax.lax.dot_general(
+                            sa[si].astype(op), sb[sj].astype(op),
+                            _GEMM_DIMS, precision=prec,
+                            preferred_element_type=jnp.float32)
+                        upd = p if upd is None else upd + p
+                acc = acc + upd
+            c32 = recombine([_tile(buf, i, j, t) for buf in c.bufs])
+            out = alpha * acc + beta * c32
+            for code, spec in enumerate(specs):
+                _, _, buf_dt, s_slices, s_sdt = spec
+                val = out
+                if s_slices > 1:
+                    val = recombine(
+                        split_slices(out, s_slices, jnp.dtype(s_sdt)))
+                tile_val = jnp.where(cls_c == code, val, 0.0).astype(
+                    jnp.dtype(buf_dt))
+                o_bufs[code] = jax.lax.dynamic_update_slice(
+                    o_bufs[code], tile_val, (i * t, j * t))
+
+    return MPMatrix(tuple(o_bufs), _HashableMap(c.cls.arr), t, c.shape,
+                    fset)
+
+
+__all__ = [
+    "FormatSet", "PrecisionFormat", "SplitFormat", "split_slices",
+    "slice_pair_order", "recombine", "split_dot_general",
+    "split_format_specs", "has_split", "split_variant", "split_gemm_ref",
+]

@@ -26,11 +26,21 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.formats import DEFAULT_FORMATS, FormatSet
+from repro.core.formats import DEFAULT_FORMATS, FormatSet, SplitFormat
 from repro.tune.device import DeviceSpec
 
 #: every execution path the dispatcher can route to
-PATHS = ("ref", "tile", "grouped", "ksplit_xla", "ksplit_pallas")
+PATHS = ("ref", "tile", "grouped", "ksplit_xla", "ksplit_pallas", "split")
+
+
+def split_c_classes(prob: "GemmProblem") -> tuple[int, ...]:
+    """C classes of ``prob`` whose format is a split compound format —
+    classes only the ``ref`` oracle and the ``split`` path compute
+    correctly (a plain tile dot at the slice dtype would silently drop
+    the recovery slices)."""
+    fset = prob.fset
+    return tuple(c for c in prob.c_classes
+                 if isinstance(fset.fmt(c), SplitFormat))
 
 
 def _fracs(cls_map: np.ndarray, fset: FormatSet) -> tuple[float, float]:
@@ -147,9 +157,10 @@ def plan_vmem_bytes(plan: GemmPlan, prob: GemmProblem) -> int:
     t, bm, bn, bk = prob.tile, plan.bm, plan.bn, plan.bk
     s = prob.stream_bytes_per_elem()   # Σ format bytes (multi-buffer stream)
     hb = prob.fset.role_bytes()[0]     # widest (accumulator-sized) buffer
-    if plan.path == "tile":
+    if plan.path in ("tile", "split"):
         # multi-buffer a/b/c inputs (Σ bytes/elem, double-buffered), fp32
-        # scratch, multi-buffer output
+        # scratch, multi-buffer output (split slices are extracted in
+        # registers from the streamed buffers — no extra VMEM residency)
         return int(t * t * (s * 2 * 3 + 4 + s))
     if plan.path == "grouped":
         # per class call: one candidate input tile per format for A and B,
@@ -178,6 +189,15 @@ def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
     if plan.path == "tile":
         if (plan.bm, plan.bn, plan.bk) != (t, t, t):
             bad.append(f"tile path requires bm=bn=bk=tile={t}")
+        if split_c_classes(prob):
+            bad.append("split-compound C classes need the split path "
+                       "(tile dot would drop the recovery slices)")
+    elif plan.path == "split":
+        if (plan.bm, plan.bn, plan.bk) != (t, t, t):
+            bad.append(f"split path requires bm=bn=bk=tile={t}")
+        if not split_c_classes(prob):
+            bad.append("split path needs at least one split-compound C "
+                       "class (use the tile path otherwise)")
     elif plan.path in ("ksplit_xla", "ksplit_pallas"):
         if not prob.b_k_constant:
             bad.append("ksplit paths need B map constant along N")
@@ -187,7 +207,13 @@ def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
             bad.append("ksplit paths need unpadded operands")
         if k % t:
             bad.append(f"K={k} not a multiple of tile={t}")
+        if any(isinstance(f, SplitFormat) for f in prob.fset.formats()):
+            bad.append("ksplit paths compute at the B-class slice dtype "
+                       "and do not support split compound formats")
     if plan.path == "grouped":
+        if split_c_classes(prob):
+            bad.append("split-compound C classes need the split path "
+                       "(grouped dot would drop the recovery slices)")
         if is_summa:
             # the SUMMA scan applies alpha/beta outside the per-step kernel,
             # but a static kernel grid needs equal per-shard C class counts
@@ -207,7 +233,7 @@ def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
         if t % plan.bk:
             bad.append(f"bk={plan.bk} must divide tile={t}")
 
-    if plan.path in ("tile", "grouped", "ksplit_pallas") \
+    if plan.path in ("tile", "grouped", "ksplit_pallas", "split") \
             and not dev.interpret:
         for name, b in (("bm", plan.bm), ("bn", plan.bn), ("bk", plan.bk)):
             if b % dev.alignment:
@@ -222,7 +248,7 @@ def validate_plan(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec,
 
 def _grid_steps(plan: GemmPlan, prob: GemmProblem) -> int:
     m, n, k, t = prob.m, prob.n, prob.k, prob.tile
-    if plan.path == "tile":
+    if plan.path in ("tile", "split"):
         return (m // t) * (n // t) * (k // t)
     if plan.path == "grouped":
         # one grid per C class over that class's output tiles × kt
@@ -246,8 +272,10 @@ def predict_time(plan: GemmPlan, prob: GemmProblem, dev: DeviceSpec) -> dict:
         w = sum(dev.format_cost(fset.names[c]) for c in prob.c_classes)
         compute = flops * w
         hbm = len(prob.c_classes) * (m * k + k * n) * 4.0 + 2 * m * n * 4.0
-    elif plan.path == "tile":
-        # operational precision = C tile class (paper Algorithm 1)
+    elif plan.path in ("tile", "split"):
+        # operational precision = C tile class (paper Algorithm 1); the
+        # split path's slices² low-precision passes are priced by the
+        # compound format's registered pass_cost inside class_weight
         w = dev.class_weight(prob.c_high, prob.c_low8, fset)
         compute = flops * w
         # multi-buffer layout streams EVERY format buffer (Σ bytes/elem);

@@ -151,6 +151,10 @@ def _exec_tile(plan, a, b, c, alpha, beta):
     return ops.mp_gemm(a, b, c, alpha=alpha, beta=beta)
 
 
+def _exec_split(plan, a, b, c, alpha, beta):
+    return ops.split_mp_gemm(a, b, c, alpha=alpha, beta=beta)
+
+
 def _exec_grouped(plan, a, b, c, alpha, beta):
     t = a.tile
     ac = CompactMPMatrix.from_dense(a.to_dense(), a.cls.arr, t, a.fset)
@@ -194,6 +198,7 @@ _EXECUTORS = {
     "grouped": _exec_grouped,
     "ksplit_xla": _exec_ksplit_xla,
     "ksplit_pallas": _exec_ksplit_pallas,
+    "split": _exec_split,
 }
 assert set(_EXECUTORS) == set(PATHS)
 
@@ -474,8 +479,10 @@ def resolve_plans_for_buckets(params_by_tag: dict, buckets, *,
 # ---------------------------------------------------------------------------
 
 #: GEMM paths valid for every map structure the solver can produce (ksplit
-#: paths need a K-constant B map, which trailing updates never have)
-SOLVE_PATHS = ("ref", "tile", "grouped")
+#: paths need a K-constant B map, which trailing updates never have);
+#: ``split`` serves the compute-higher escalation mode, where the HIGH
+#: role is a split compound format
+SOLVE_PATHS = ("ref", "tile", "grouped", "split")
 
 
 def solve_gemm_problem(pa: np.ndarray, tile: int, nrhs_t: int,

@@ -9,6 +9,9 @@ CI mode serves from can never silently rot.  Checks:
 * **no stale v1 keys** — every plan key has the full 9-segment v2 anatomy
   ``dev|op|MNK|tile|formats|ratioA|ratioB|ratioC|struct`` with a real
   format-set segment at index 4 (v1 keys predate format sets);
+* **live formats** — every format name a key references is registered in
+  this process's format registry (a checked-in cache must only name
+  builtins; ``PlanCache`` would silently shelve such entries forever);
 * **deterministic ordering** — the file is byte-identical to its own
   canonical re-dump (``indent=1, sort_keys=True`` — what ``PlanCache.save``
   emits), so diffs stay reviewable and caches merge cleanly;
@@ -27,6 +30,7 @@ import re
 import sys
 import tempfile
 
+from repro.core.formats import registry_signatures
 from repro.tune.search import CACHE_SCHEMA, PlanCache
 
 #: ``dev|op|MNK|tile|formats|ratio…`` — segment count of a v2 plan key
@@ -76,6 +80,14 @@ def validate_cache(path: str) -> list[str]:
         if unknown:
             problems.append(f"key references unstamped formats {unknown}: "
                             f"{key}")
+        live = registry_signatures()
+        unregistered = [n for n in segs[4].split("+") if n not in live]
+        if unregistered:
+            problems.append(
+                f"key names format(s) {unregistered} not registered in "
+                f"this process — a checked-in cache must only reference "
+                f"registered formats (PlanCache would shelve the entry "
+                f"and never serve it): {key}")
         missing = [f for f in ("path", "bm", "bn", "bk") if f not in ent]
         if missing:
             problems.append(f"entry missing fields {missing}: {key}")

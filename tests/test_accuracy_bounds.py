@@ -182,6 +182,54 @@ def test_ksplit_pallas_path_within_bound(size, ratio):
 
 
 # ---------------------------------------------------------------------------
+# split-accumulation compound formats (repro.split)
+# ---------------------------------------------------------------------------
+
+SPLIT_SETS = [format_set("fp16", "split2_fp16"),
+              format_set("fp16", "split3_e5m2"),
+              format_set("fp8_e5m2", "fp16", "split2_fp16")]
+
+
+@settings(max_examples=10, deadline=None)
+@given(size=st.sampled_from([32, 64]),
+       ratio=st.sampled_from([0.25, 0.5, 1.0]),
+       path=st.sampled_from(["ref", "split"]),
+       which=st.integers(0, len(SPLIT_SETS) - 1), seed=st.integers(0, 2))
+def test_split_paths_within_bound(size, ratio, path, which, seed):
+    """split2/split3 compound HIGH classes meet their registry-derived
+    (recovered-roundoff) bound on both the oracle and the kernel path."""
+    fset = SPLIT_SETS[which]
+    ratio8 = 0.25 if fset.low8 is not None else 0.0
+    _check_path(path, size, ratio, ratio8, seed, fset)
+
+
+def test_split_bound_is_fp32_grade():
+    """The split2 bound itself certifies ~fp32 accuracy: orders of
+    magnitude below the plain-fp16 class bound at the same K."""
+    fset = format_set("fp16", "split2_fp16")
+    hi = np.full((4, 4), fset.high, np.int8)
+    b = class_error_bounds(hi, hi, hi, k=64, fset=fset)[fset.high]
+    lo = np.full((4, 4), fset.low, np.int8)
+    b16 = class_error_bounds(lo, lo, lo, k=64, fset=fset)[fset.low]
+    assert b < b16 / 50.0
+
+
+def test_oracle_rejects_split_misdispatch():
+    """Negative control: uniform split2-HIGH maps with the product computed
+    at plain fp16 must violate the recovered-roundoff bound."""
+    fset = format_set("fp16", "split2_fp16")
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    pc = np.full((8, 8), fset.high, np.int8)
+    wrong = (jnp.asarray(a).astype(jnp.float16)
+             @ jnp.asarray(b).astype(jnp.float16)).astype(jnp.float32)
+    rep = check_against_fp64(np.asarray(wrong), a, b, np.zeros_like(a),
+                             pc, pc, pc, T, fset)
+    assert not rep["ok"]
+
+
+# ---------------------------------------------------------------------------
 # distributed SUMMA stays inside the same bound
 # ---------------------------------------------------------------------------
 

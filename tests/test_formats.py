@@ -24,7 +24,12 @@ from repro.core.formats import (DEFAULT_FORMATS, FormatSet, PrecisionFormat,
 E5M2_SET = format_set("fp8_e5m2", "bf16", "fp32")
 FP16_SET = format_set("fp16", "fp32")
 ALL_SETS = [DEFAULT_FORMATS, E5M2_SET, FP16_SET,
-            format_set("fp8_e5m2", "fp16", "fp32")]
+            format_set("fp8_e5m2", "fp16", "fp32"),
+            format_set("fp8_e4m3", "fp16", "fp32"),
+            # split compound HIGH roles (repro.split)
+            format_set("fp16", "split2_fp16"),
+            format_set("fp8_e5m2", "fp16", "split2_fp16"),
+            format_set("fp16", "split3_e5m2")]
 
 
 @pytest.fixture(autouse=True)

@@ -287,6 +287,32 @@ def test_hygiene_detects_drift(tmp_path):
     assert any("stamps" in msg for msg in validate_cache(str(p)))
 
 
+def test_hygiene_rejects_unregistered_format_keys(tmp_path):
+    """A checked-in cache entry naming a format that is not registered in
+    this process would be shelved forever by PlanCache — hygiene must
+    reject it with a descriptive error."""
+    import json
+
+    from repro.tune.hygiene import validate_cache
+    key = ("cpu-interpret|mp_gemm|M64N64K64|t16|bf16+fp99_custom"
+           "|50D50S|50D50S|50D50S|a1b1k0p1c1")
+    payload = {"schema": 2,
+               "formats": {"fp99_custom": "fp99_custom:sig"},
+               "plans": {key: {"path": "ref", "bm": 16, "bn": 16,
+                               "bk": 16}}}
+    p = tmp_path / "unreg.json"
+    p.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    msgs = validate_cache(str(p))
+    assert any("not registered" in m and "fp99_custom" in m for m in msgs)
+    # split compound formats ARE registered → no such problem
+    ok_key = key.replace("bf16+fp99_custom", "fp16+split2_fp16")
+    payload["plans"] = {ok_key: payload["plans"][key]}
+    payload["formats"] = {"fp16": "x", "split2_fp16": "y"}
+    p2 = tmp_path / "split.json"
+    p2.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    assert not any("not registered" in m for m in validate_cache(str(p2)))
+
+
 def test_hygiene_writer_emits_canonical_file(tmp_path):
     from repro.tune.costmodel import GemmPlan
     from repro.tune.hygiene import validate_cache
