@@ -8,7 +8,11 @@ archiving artifacts.
 What is compared — and deliberately not compared:
 
 * **wall-clock is never gated** (``us_per_call``, throughput/speedup keys):
-  shared CI runners make timing noise, not signal;
+  shared CI runners make timing noise, not signal — but dimensionless
+  *ratios* of two timings from the same run cancel the runner's speed, so
+  they carry absolute floors: a serve row whose ``speedup`` key drops
+  below 1.0× (batched slower than unbatched) fails the gate regardless of
+  the baseline value;
 * **counters and derived metrics are gated** with tolerance bands: every
   ``key=value`` pair in a row's ``derived`` string is compared — numeric
   values within ``max(rel_tol·|baseline|, abs_slack)`` (error-like keys on
@@ -38,8 +42,12 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 from benchmarks.bench_io import read_bench  # noqa: E402
 
-#: wall-clock-derived keys — reported, never gated
+#: wall-clock-derived keys — reported, never gated against the baseline
 IGNORE_KEYS = {"tokens_per_s", "speedup", "gemm_frac", "cache", "final"}
+#: absolute floors on same-run timing *ratios* (runner speed cancels):
+#: batched serving slower than the unbatched reference is a regression no
+#: matter what the baseline says
+FLOOR_KEYS = {"speedup": 1.0}
 #: audit counters that must match exactly (no band)
 EXACT_KEYS = {"conv", "fresh"}
 #: error-magnitude keys compared on a log scale (within one decade);
@@ -114,6 +122,16 @@ def compare_suite(base: dict, fresh: dict, *, rel_tol: float,
     frows = {r["name"]: r for r in fresh.get("rows", [])}
     for name in sorted(set(frows) - set(brows)):
         notes.append(f"new row {name} (not yet in baseline)")
+    # absolute floors run on every FRESH row (baselined or not): these are
+    # pass/fail properties of the run itself, not diffs
+    for name, frow in sorted(frows.items()):
+        for key, floor in FLOOR_KEYS.items():
+            val = parse_derived(frow["derived"]).get(key)
+            num = _numeric(val) if val is not None else None
+            if num is not None and num < floor:
+                regressions.append(
+                    f"{name}: {key}={val} below the {floor:g} floor "
+                    f"(batched serving must not lose to unbatched)")
     for name, brow in sorted(brows.items()):
         frow = frows.get(name)
         if frow is None:

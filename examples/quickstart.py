@@ -119,10 +119,13 @@ else:  # pragma: no cover — XLA_FLAGS was already set to fewer devices
 # The serving layer keeps the tuned kernels hot under heterogeneous
 # traffic: requests are bucketed by (padded length, format-set tag),
 # warmup() pre-resolves a GEMM plan and pre-compiles prefill/decode for
-# every bucket, and the continuous-batching engine then serves mixed
-# shapes in multi-request microbatches with ZERO steady-state recompiles —
-# bit-exact with unbatched decoding (right-padding + per-request
-# positions + a KV visibility mask).
+# every bucket, and the engine then runs TOKEN-LEVEL continuous batching:
+# on-device sampling (no host sync per step), rows that finish early
+# retire mid-decode and their slot is refilled from the pending queue,
+# and shared prompt prefixes are prefilled once (hash-keyed KV prefix
+# cache) — all bit-exact with unbatched decoding (right-padding +
+# per-request positions/PRNG streams + a KV visibility mask) and with
+# ZERO steady-state recompiles.
 import numpy as np                                             # noqa: E402
 
 from repro.configs import get, load_all, reduced               # noqa: E402
@@ -134,16 +137,21 @@ cfg = reduced(get("llama3-8b"), tp=2)
 params = T.init_model(jax.random.PRNGKey(0), cfg)
 eng = Engine(cfg, params, max_batch=3, max_seq=64)
 eng.warmup()                       # plans resolved + buckets compiled here
-stream = [Request(np.array(p, np.int32), max_new_tokens=4)
-          for p in ([1, 2, 3], [4, 5], [6, 7, 8, 9, 10], [3, 1], [2] * 7)]
+# mixed lengths AND mixed max_new_tokens: the short generations retire
+# early and the freed slots are refilled mid-decode
+stream = [Request(np.array(p, np.int32), max_new_tokens=n)
+          for p, n in [([1, 2, 3], 2), ([4, 5], 8), ([6, 7, 8, 9, 10], 4),
+                       ([3, 1], 8), ([2] * 7, 3), ([5, 6], 4)]]
 eng.generate(stream)
 st = eng.stats()
 print(f"served {st['requests']['served']} mixed-shape requests in "
       f"{st['microbatches']['total']} microbatches "
-      f"(multi-request: {st['microbatches']['multi_request']}), "
+      f"(multi-request: {st['microbatches']['multi_request']}, "
+      f"mid-decode refills: {st['microbatches']['refills']}), "
       f"bucket hit rate {st['bucket_hit_rate']:.2f}, "
       f"post-warmup recompiles: {st['compile']['post_warmup_recompiles']}")
 assert st["compile"]["post_warmup_recompiles"] == 0
+assert st["microbatches"]["refills"] >= 1  # occupancy held, mixed max_new
 
 # --- 8. adaptive-precision iterative refinement (repro.solve) ---------------
 # The precision map as a CONTROL VARIABLE: solve an ill-conditioned system

@@ -32,6 +32,18 @@ def main():
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip plan/compile warmup (cold buckets record "
                          "misses instead)")
+    ap.add_argument("--no-refill", action="store_true",
+                    help="disable mid-decode slot retire-and-refill "
+                         "(each wave of requests runs as its own "
+                         "microbatch)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix-reuse prefill (every prompt is "
+                         "prefilled in full)")
+    ap.add_argument("--prefix-entries", type=int, default=32,
+                    help="prefix-cache capacity (KV slabs held resident)")
+    ap.add_argument("--request-seed", type=int, default=0,
+                    help="base seed for per-request sampling streams "
+                         "(request i uses request-seed + i)")
     ap.add_argument("--stats", action="store_true",
                     help="print Engine.stats() JSON after serving")
     ap.add_argument("--trace", default="",
@@ -73,9 +85,14 @@ def main():
         sched = SchedulerConfig(pad_lens=pad_lens, waste_cap=args.waste_cap,
                                 max_batch=args.max_batch)
     eng = Engine(cfg, params, max_batch=args.max_batch,
-                 max_seq=args.max_seq, rng_seed=args.seed, scheduler=sched)
+                 max_seq=args.max_seq, rng_seed=args.seed, scheduler=sched,
+                 refill=not args.no_refill,
+                 prefix_cache=not args.no_prefix_cache,
+                 prefix_entries=args.prefix_entries)
     print(f"engine mode={eng.mode} buckets="
-          f"{sorted(k.pad_len for k in eng.scheduler.buckets)}")
+          f"{sorted(k.pad_len for k in eng.scheduler.buckets)} "
+          f"refill={eng.refill_enabled} "
+          f"prefix_cache={eng.prefix is not None}")
     if not args.no_warmup:
         rep = eng.warmup()
         print(f"warmup: {rep.pop('traces')} traces; "
@@ -83,8 +100,9 @@ def main():
     reqs = [Request(np.array([int(t) % cfg.vocab for t in p.split()],
                              np.int32),
                     max_new_tokens=args.max_new,
-                    temperature=args.temperature)
-            for p in args.prompts]
+                    temperature=args.temperature,
+                    seed=args.request_seed + i)
+            for i, p in enumerate(args.prompts)]
     rejected = 0
     for i, r in enumerate(eng.generate(reqs)):
         if r.error:

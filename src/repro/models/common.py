@@ -248,10 +248,13 @@ def decode_attention(params, x, dims: AttnDims, cache_k, cache_v, *,
     Returns (out [B, 1, d], new_k, new_v).
 
     ``position`` may be per-request ([B] or [B, 1]) — it then feeds RoPE
-    only, and the shared scalar cache ``slot`` plus an explicit ``kv_valid``
-    [B, S_max] visibility mask must be supplied (the serve scheduler's
-    right-padded microbatches: each request attends its own real prefix
-    plus the generated suffix, never another request's padding)."""
+    only, and the cache ``slot`` plus an explicit ``kv_valid`` [B, S_max]
+    visibility mask must be supplied (the serve scheduler's right-padded
+    microbatches: each request attends its own real prefix plus the
+    generated suffix, never another request's padding).  ``slot`` itself
+    may be a [B] vector — the continuous-decode engine's retire-and-refill
+    slots progress independently per row, so each row scatters its new KV
+    into its own cache position."""
     B = x.shape[0]
     nq, nkv, dh = dims.n_q, dims.n_kv, dims.head_dim
     S_max = cache_k.shape[1]
@@ -265,11 +268,19 @@ def decode_attention(params, x, dims: AttnDims, cache_k, cache_v, *,
     q, k, v = _qkv(params, x, dims, pos, rope_theta, use_rope)
     if slot is None:
         slot = position
-    slot = slot % S_max if window is not None else slot
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    if jnp.ndim(slot) != 0:
+        if window is not None:
+            raise ValueError("per-row slot vector is full-attention only")
+        rows = jnp.arange(B)
+        idx = jnp.reshape(slot, (B,))
+        cache_k = cache_k.at[rows, idx].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, idx].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        slot = slot % S_max if window is not None else slot
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), slot, axis=1)
     kk = _repeat_kv(cache_k, dims.group)      # [B, S_max, nq, dh]
     vv = _repeat_kv(cache_v, dims.group)
     scale = 1.0 / np.sqrt(dh)

@@ -341,9 +341,11 @@ def forward_decode(params, cfg: ArchConfig, tokens, caches, position, *,
 
     ``position`` is normally a shared scalar.  The serve scheduler's
     right-padded microbatches pass a per-request [B] position vector (true
-    token positions for RoPE) together with the shared scalar cache ``slot``
-    and a [B, S_max] ``kv_valid`` visibility mask; full-attention layers
-    then stay bit-exact with unbatched decoding despite padding."""
+    token positions for RoPE) together with the cache ``slot`` — a shared
+    scalar, or a [B] vector when continuous decode lets each row progress
+    independently (retire-and-refill) — and a [B, S_max] ``kv_valid``
+    visibility mask; full-attention layers then stay bit-exact with
+    unbatched decoding despite padding."""
     x = C.embed(params["embed"], tokens)
     B = x.shape[0]
     if jnp.ndim(position) != 0:

@@ -1,26 +1,49 @@
-"""Serving engine: shape-bucketed continuous batching with plan-warmed
-dispatch.
+"""Serving engine: shape-bucketed continuous batching with token-level
+continuous decode, plan-warmed dispatch, and prefix-reuse prefill.
 
 Requests are admitted into :class:`repro.serve.scheduler.ShapeBucketScheduler`
 and drained as fixed-shape microbatches — (bucket batch, padded length,
 format-set tag) — so the steady state re-uses pre-compiled executables and
 pre-resolved GEMM plans (``tune.resolve_plans_for_buckets``) and never
-recompiles or re-plans.  ``Engine.stats()`` exposes the counters CI and the
-serve-throughput benchmark assert on (bucket hits/misses, post-warmup
-recompiles, microbatch occupancy, per-request latency).
+recompiles or re-plans.  Three mechanisms make batching *pay*:
+
+* **On-device sampling.**  The jitted prefill/decode steps end in a fused
+  greedy/categorical sampler (per-request PRNG streams via
+  ``jax.random.fold_in``; filler rows never consume a real request's
+  draws), so multi-step decode runs dispatch-async with no device→host
+  logit round-trip per token.  The host only syncs when a request
+  retires — to read its tokens out and stamp its latency.
+* **Slot retire-and-refill.**  A request that reaches ``max_new_tokens``
+  retires *mid-decode*: its tokens are materialized, its latency stamped
+  at that step (not at microbatch end), and the next pending request for
+  the same bucket is pulled into the freed row — its prefill chunked into
+  the decode stream as a batch-1 call — so finished requests never squat
+  in their slots while neighbours keep decoding.
+* **Prefix-reuse prefill.**  Each bucket has a prefix length
+  ``P = pad_len // 2``; KV blocks for positions ``0..P-1`` are cached by a
+  digest of the prefix tokens (:mod:`repro.serve.prefix`).  When every
+  real row of a microbatch (or a refill) hits the cache, the prefix KV is
+  scattered in and only the suffix is prefilled — shared system prompts
+  are computed once, within and across microbatches.
+
+``Engine.stats()`` exposes the counters CI and the serve-throughput
+benchmark assert on (bucket hits/misses, post-warmup recompiles,
+microbatch occupancy, refills, prefix-cache hit rate, per-request
+latency).
 
 Exactness: microbatches are *right*-padded, so under causal attention a
 request's real tokens never attend padding; decode threads per-request
-positions (RoPE) plus a KV visibility mask through ``forward_decode``.
-Full-attention, non-MoE families are therefore bit-exact with unbatched
-serving ("masked" mode).  State-carrying mixers (Mamba/xLSTM), sliding
-windows, and MoE capacity routing cannot mask padding out of their state,
-so those families run in "equal" mode — a bucket only batches requests of
-one exact length (rows are then independent, still exact).
+positions (RoPE), per-row cache slots, and a KV visibility mask through
+``forward_decode``.  Full-attention non-MoE families are therefore
+bit-exact with unbatched serving ("masked" mode) — including refilled
+rows and prefix-reused prefills.  State-carrying mixers (Mamba/xLSTM),
+sliding windows, and MoE families batch equal-length-only ("equal" mode,
+also exact); they cannot mask per-row progress out of their state, so
+refill and prefix reuse are masked-mode-only.
 
 Format-set variants: ``Engine(..., variants={tag: params})`` serves a
-mixed-format request stream — each request carries a tag and is bucketed by
-(shape, tag), dispatching to that tag's weights.
+mixed-format request stream — each request carries a tag and is bucketed
+by (shape, tag), dispatching to that tag's weights.
 """
 from __future__ import annotations
 
@@ -36,6 +59,7 @@ from repro import obs
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.obs.metrics import MetricsRegistry
+from repro.serve.prefix import PrefixCache, prefix_digest
 from repro.serve.scheduler import (AdmissionError, BucketKey, QueueFullError,
                                    SchedulerConfig, ShapeBucketScheduler)
 
@@ -48,6 +72,7 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0      # 0 → greedy
     fset: str = "default"         # format-set tag (weight variant)
+    seed: int = 0                 # per-request PRNG stream (temperature>0)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     # --- per-request accounting (filled by the engine) -------------------
@@ -57,6 +82,37 @@ class Request:
     latency_s: float = 0.0        # admit → retire wall-clock
     dispatch_paths: tuple = ()    # GEMM paths resolved for its bucket
     error: str = ""               # admission failure (generate() sets it)
+
+
+@dataclasses.dataclass
+class _Row:
+    """Host-side state of one microbatch slot under continuous decode."""
+    req: Optional[Request]        # None → filler / retired slot
+    length: int                   # real prompt length
+    emitted: int = 0              # tokens sampled so far (incl. prefill's)
+    join: int = 0                 # step index of its first decode token
+    first_tok: Optional[int] = None   # refill: token sampled at prefill
+    active: bool = False
+    cold: bool = False
+
+
+def _sample_tokens(logits, temps, keys, n):
+    """Fused on-device sampling for one step.  ``logits`` [B, V]; ``temps``
+    [B]; ``keys`` [B, 2] per-request base PRNG keys; ``n`` [B] the index of
+    the token being sampled within its request (0 = the prefill token).
+
+    temperature 0 → argmax; temperature>0 → Gumbel-max categorical under
+    ``fold_in(key_i, n_i)``, so a request's stream depends only on its own
+    (seed, token index) — identical batched, refilled, or unbatched."""
+    logits = logits.astype(jnp.float32)
+    step_keys = jax.vmap(jax.random.fold_in)(keys, n)
+    u = jax.vmap(lambda k, row: jax.random.uniform(k, row.shape))(
+        step_keys, logits)
+    gumbel = -jnp.log(-jnp.log(jnp.clip(u, 1e-20, 1.0 - 1e-12)))
+    safe_t = jnp.where(temps > 0, temps, 1.0)
+    stoch = jnp.argmax(logits / safe_t[:, None] + gumbel, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(temps > 0, stoch, greedy).astype(jnp.int32)
 
 
 def _prefill_collect(params, cfg: ArchConfig, tokens, caches):
@@ -79,12 +135,34 @@ def _prefill_collect(params, cfg: ArchConfig, tokens, caches):
     return logits, caches
 
 
+def _prefill_suffix_collect(params, cfg: ArchConfig, tokens, caches,
+                            start: int):
+    """Continuation prefill: scan tokens for positions ``start .. start+S-1``
+    into caches whose rows already hold the (reused) prefix KV for
+    positions ``0 .. start-1``.  Numerically identical to the tail of a
+    full prefill — each step sees the same cache contents, token, and
+    scalar position."""
+    B, S = tokens.shape
+
+    def step(carry, s):
+        caches = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, s, 1, axis=1)
+        logits, caches = T.forward_decode(params, cfg, tok, caches,
+                                          start + s)
+        return caches, logits[:, 0]
+
+    caches, logits = jax.lax.scan(step, caches, jnp.arange(S))
+    return logits, caches
+
+
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
                  max_seq: int = 256, rng_seed: int = 0,
                  summa_grid: Optional[tuple] = None,
                  variants: Optional[dict] = None,
-                 scheduler: Optional[SchedulerConfig] = None):
+                 scheduler: Optional[SchedulerConfig] = None,
+                 refill: bool = True, prefix_cache: bool = True,
+                 prefix_entries: int = 32):
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
         self.variants = {"default": params, **(variants or {})}
@@ -110,6 +188,11 @@ class Engine:
                                   and cfg.n_experts == 0
                                   and cfg.frontend == "none")
                      else "equal")
+        # retire-and-refill + prefix reuse need per-row cache progress and
+        # snapshot-able KV blocks — full-attention masked mode only
+        self.refill_enabled = bool(refill) and self.mode == "masked"
+        self.prefix = (PrefixCache(prefix_entries)
+                       if prefix_cache and self.mode == "masked" else None)
         sched_cfg = scheduler or SchedulerConfig(
             pad_lens=tuple(cfg.serve_buckets or DEFAULT_PAD_LENS),
             max_batch=max_batch)
@@ -148,34 +231,92 @@ class Engine:
                 if self._warmed_once:
                     m.counter("serve.post_warmup_recompiles").inc()
 
-        def prefill_fn(p, toks, caches, lengths):
-            # gather each request's last-real-position logits on device so
-            # only [B, V] (not [S, B, V]) crosses to host per prefill
+        def prefill_fn(p, toks, caches, lengths, temps, keys):
+            # gather each request's last-real-position logits and sample
+            # its first token on device — only [B] int32 ever crosses to
+            # host, and only at retirement
             note()
             all_logits, caches = _prefill_collect(p, cfg, toks, caches)
             last = all_logits[lengths - 1, jnp.arange(toks.shape[0])]
-            return last, caches
+            tok0 = _sample_tokens(last, temps, keys,
+                                  jnp.zeros_like(lengths))
+            return tok0, caches
 
-        def decode_fn(p, tok, caches, pos):
+        def prefill_sfx_fn(p, toks, caches, lengths, temps, keys, start):
+            # prefix-reuse continuation: caches already hold positions
+            # 0..start-1; only the suffix runs
             note()
-            return T.forward_decode(p, cfg, tok, caches, pos)
+            logits, caches = _prefill_suffix_collect(p, cfg, toks, caches,
+                                                     start)
+            last = logits[lengths - 1 - start, jnp.arange(toks.shape[0])]
+            tok0 = _sample_tokens(last, temps, keys,
+                                  jnp.zeros_like(lengths))
+            return tok0, caches
 
-        def decode_masked_fn(p, tok, caches, lengths, t, pad_len):
+        def decode_cont_fn(p, tok, caches, lengths, slots, active, temps,
+                           keys, pad_len):
+            # token-level continuous decode: every row carries its own
+            # cache slot (retire-and-refill) and PRNG stream; positions,
+            # visibility mask, sampling AND the slot advance all derive on
+            # device, so the steady-state loop feeds (tok, caches, slots)
+            # straight back with zero per-step host->device transfers
             note()
-            slot = jnp.int32(pad_len) + t - 1
-            positions = lengths + t - 1
+            positions = lengths + slots - jnp.int32(pad_len)
             kv_pos = jnp.arange(max_seq)
             kv_valid = ((kv_pos[None, :] < lengths[:, None])
                         | ((kv_pos[None, :] >= pad_len)
-                           & (kv_pos[None, :] <= slot)))
-            return T.forward_decode(p, cfg, tok, caches, positions,
-                                    slot=slot, kv_valid=kv_valid)
+                           & (kv_pos[None, :] <= slots[:, None])))
+            logits, caches = T.forward_decode(p, cfg, tok, caches,
+                                              positions, slot=slots,
+                                              kv_valid=kv_valid)
+            n = slots - jnp.int32(pad_len) + 1
+            nxt = _sample_tokens(logits[:, 0], temps, keys, n)
+            return nxt, caches, slots + active
+
+        def decode_sample_fn(p, tok, caches, position, temps, keys, n):
+            # shared-scalar-position decode + sampling: equal mode and the
+            # unbatched reference
+            note()
+            logits, caches = T.forward_decode(p, cfg, tok, caches, position)
+            nxt = _sample_tokens(logits[:, 0], temps, keys, n)
+            return nxt, caches
 
         self._prefill = jax.jit(prefill_fn)
-        self._decode = jax.jit(decode_fn)
-        self._decode_masked = jax.jit(decode_masked_fn,
-                                      static_argnums=(5,))
-        self.rng = np.random.default_rng(rng_seed)
+        self._prefill_sfx = jax.jit(prefill_sfx_fn, static_argnums=(6,))
+        self._decode_cont = jax.jit(decode_cont_fn, static_argnums=(8,))
+        self._decode_sample = jax.jit(decode_sample_fn)
+
+        # KV data movement helpers (no model graph → not trace-counted):
+        # slice a prefix slab out of one cache row / scatter a slab or a
+        # whole batch-1 cache into a row of the batch cache
+        def extract_prefix_fn(caches, row, plen):
+            def one(c):
+                r = jax.lax.dynamic_slice_in_dim(c, row, 1, axis=1)
+                return jax.lax.slice_in_dim(r, 0, plen, axis=2)
+            return jax.tree.map(one, caches)
+
+        def scatter_fn(caches, slab, row):
+            def one(c, s):
+                start = (jnp.int32(0), row) + (jnp.int32(0),) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    c, s.astype(c.dtype), start)
+            return jax.tree.map(one, caches, slab)
+
+        self._extract_prefix = jax.jit(extract_prefix_fn,
+                                       static_argnums=(2,))
+        self._scatter_row = jax.jit(scatter_fn)
+        self._base_key = jax.random.PRNGKey(rng_seed)
+
+    def _req_key(self, req: Request) -> np.ndarray:
+        """Per-request base PRNG key — a fold of the engine seed and the
+        request's ``seed``, so batched/refilled/unbatched serving all draw
+        the same stream for the same request."""
+        return np.asarray(jax.random.fold_in(self._base_key,
+                                             int(req.seed)))
+
+    def _prefix_len(self, pad_len: int) -> int:
+        """Reusable-prefix length of a bucket (0 → prefix reuse off)."""
+        return pad_len // 2 if self.prefix is not None else 0
 
     # ------------------------------------------------------------------
     # warmup: pre-resolve tune plans + pre-compile every configured bucket
@@ -205,46 +346,63 @@ class Engine:
                               batch=bucket.batch):
                     self._compile_bucket(key, bucket.batch)
                 bucket.warmed = True
-                plans = plan_table.get((key.fset, bucket.batch), {})
+                plans = {**plan_table.get((key.fset, 1), {}),
+                         **plan_table.get((key.fset, bucket.batch), {})}
                 bucket.paths = tuple({p.path for p in plans.values()})
                 report[str(key)] = {"paths": sorted(bucket.paths)}
         finally:
             self._warmup_active = False
             self._warmed_once = True
+        # warm the per-request key fold (threefry compiles on first use —
+        # without this the first admitted request pays it)
+        jax.block_until_ready(jax.random.fold_in(self._base_key, 0))
         report["traces"] = int(self.metrics.value("serve.traces",
                                                   kind="warmup"))
         return report
 
     def _compile_bucket(self, key: BucketKey, batch: int) -> None:
-        """Trace+compile the bucket's prefill and first decode step on
-        dummy data (jit caches both; steady state is pure cache hits)."""
+        """Trace+compile every executable the bucket can dispatch in the
+        steady state on dummy data (jit caches all of them): full prefill,
+        suffix prefill (prefix reuse), the continuous decode step, and —
+        when refill is on — their batch-1 refill twins."""
         params = self.variants[key.fset]
         S = key.pad_len
         toks = jnp.zeros((batch, S), jnp.int32)
+        lengths = jnp.full((batch,), S, jnp.int32)
+        temps = jnp.zeros((batch,), jnp.float32)
+        kvec = jnp.tile(self._base_key[None], (batch, 1))
         caches = T.init_cache(self.cfg, batch, self.max_seq)
-        logits, caches = self._prefill(params, toks, caches,
-                                       jnp.full((batch,), S, jnp.int32))
-        tok = jnp.zeros((batch, 1), jnp.int32)
+        tok0, caches = self._prefill(params, toks, caches, lengths,
+                                     temps, kvec)
         if self.mode == "masked":
-            lengths = jnp.full((batch,), S, jnp.int32)
-            out = self._decode_masked(params, tok, caches, lengths,
-                                      jnp.int32(1), S)
+            P = self._prefix_len(S)
+            if P:
+                slab = self._extract_prefix(caches, jnp.int32(0), P)
+                caches = self._scatter_row(caches, slab, jnp.int32(0))
+                tok0, caches = self._prefill_sfx(
+                    params, toks[:, P:], caches, lengths, temps, kvec, P)
+            if self.refill_enabled:
+                c1 = T.init_cache(self.cfg, 1, self.max_seq)
+                t1, c1 = self._prefill(params, toks[:1], c1, lengths[:1],
+                                       temps[:1], kvec[:1])
+                if P:
+                    t1, c1 = self._prefill_sfx(
+                        params, toks[:1, P:], c1, lengths[:1], temps[:1],
+                        kvec[:1], P)
+                caches = self._scatter_row(caches, c1, jnp.int32(0))
+            slots = jnp.full((batch,), S, jnp.int32)
+            active = jnp.ones((batch,), jnp.int32)
+            out = self._decode_cont(params, tok0[:, None], caches, lengths,
+                                    slots, active, temps, kvec, S)
         else:
-            out = self._decode(params, tok, caches, jnp.int32(S))
+            out = self._decode_sample(params, tok0[:, None], caches,
+                                      jnp.int32(S), temps, kvec,
+                                      jnp.ones((batch,), jnp.int32))
         jax.block_until_ready(out[0])
 
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
-
-    def _sample(self, logits: np.ndarray, temps: np.ndarray) -> np.ndarray:
-        greedy = logits.argmax(-1)
-        out = greedy.copy()
-        for i, t in enumerate(temps):
-            if t > 0:
-                p = jax.nn.softmax(jnp.asarray(logits[i]) / t)
-                out[i] = self.rng.choice(len(p), p=np.asarray(p))
-        return out.astype(np.int32)
 
     def submit(self, req: Request) -> BucketKey:
         """Admit one request (raises AdmissionError / QueueFullError).
@@ -303,93 +461,355 @@ class Engine:
         return requests
 
     def run(self) -> None:
-        """Drain the admission queue, one microbatch at a time."""
+        """Drain the admission queue, one microbatch at a time (each
+        masked-mode microbatch keeps refilling from its bucket's queue
+        until the whole stream for that bucket drains)."""
         while True:
             mb = self.scheduler.next_microbatch()
             if mb is None:
                 return
             bucket, reqs = mb
             if reqs:
-                self._serve_microbatch(bucket, reqs)
+                if self.mode == "masked":
+                    self._serve_microbatch_masked(bucket, reqs)
+                else:
+                    self._serve_microbatch_equal(bucket, reqs)
 
-    def _serve_microbatch(self, bucket, reqs: list[Request]) -> None:
+    # -- retirement bookkeeping (shared by both modes) --------------------
+
+    def _finalize(self, row: _Row, i: int, bucket, hist, S: int,
+                  t0: float) -> None:
+        """Retire the request in slot ``i``: collect its tokens from the
+        materialized step history, stamp latency *now* (the step at which
+        it finished, not the microbatch end), and record accounting."""
+        r = row.req
+        m = self.metrics
+        n_new = r.max_new_tokens
+        toks_out = [] if row.first_tok is None else [row.first_tok]
+        need = n_new - len(toks_out)
+        toks_out += [int(hist[j][i]) for j in range(row.join,
+                                                    row.join + need)]
+        r.out_tokens = toks_out
+        r.done = True
+        r.bucket = str(bucket.key)
+        r.padded_to = S
+        r.cold = row.cold
+        r.dispatch_paths = bucket.paths
+        r.latency_s = time.perf_counter() - getattr(r, "_t_admit", t0)
+        row.req, row.active = None, False
+        bucket.served += 1
+        bucket.real_tokens += row.length
+        m.counter("serve.requests_served").inc()
+        m.counter("serve.tokens_generated").inc(n_new)
+        m.histogram("serve.request.latency_s").observe(r.latency_s)
+        if obs.is_enabled():
+            obs.event("serve.retire", "serve", bucket=str(bucket.key),
+                      slot=i, new_tokens=n_new, cold=r.cold,
+                      latency_s=round(r.latency_s, 6))
+
+    @staticmethod
+    def _drain(devbuf: list, hist: list) -> None:
+        """Materialize pending device token vectors into the host history
+        (the engine's only device→host sync, paid at retirement)."""
+        if devbuf:
+            hist.extend(np.stack([np.asarray(t) for t in devbuf]))
+            devbuf.clear()
+
+    @staticmethod
+    def _dev(a: np.ndarray) -> jax.Array:
+        """Snapshot a mutable host staging buffer onto the device.
+
+        ``jnp.asarray`` may alias suitably-aligned numpy memory zero-copy
+        on the CPU backend, and dispatch is async — so converting a buffer
+        the host later mutates (slot advance, retire-and-refill rewriting
+        a row of toks/lengths/temps/keys) would let an in-flight step read
+        the *post-mutation* values.  Every conversion therefore copies;
+        whether the copy is then aliased is irrelevant, it is immutable."""
+        return jnp.asarray(np.array(a))
+
+    # -- masked mode: token-level continuous decode -----------------------
+
+    def _serve_microbatch_masked(self, bucket, reqs: list[Request]) -> None:
         key = bucket.key
         params = self.variants[key.fset]
         S = key.pad_len
         B = bucket.batch
         n_real = len(reqs)
-        # fixed-shape microbatch: right-pad prompts to the bucket length and
-        # duplicate the last request into unused slots (outputs discarded)
-        toks = np.zeros((B, S), np.int32)
-        lengths = np.zeros((B,), np.int32)
-        for i in range(B):
-            r = reqs[min(i, n_real - 1)]
-            toks[i, : len(r.prompt)] = r.prompt
-            lengths[i] = len(r.prompt)
+        P = self._prefix_len(S)
         was_warm = bucket.warmed
         if was_warm:
             bucket.hits += 1
         else:
             bucket.misses += 1
+        m = self.metrics
         t0 = time.perf_counter()
-        max_new = max(r.max_new_tokens for r in reqs)
+
+        # fixed-shape microbatch: right-pad prompts to the bucket length
+        # and duplicate the last request into unused slots (fillers decode
+        # greedily under a null PRNG key — outputs discarded, and they
+        # never touch a real request's stream)
+        toks = np.zeros((B, S), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        keys = np.zeros((B, 2), np.uint32)
+        rows: list[_Row] = []
+        for i in range(B):
+            r = reqs[min(i, n_real - 1)]
+            toks[i, : len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+            if i < n_real:
+                temps[i] = r.temperature
+                keys[i] = self._req_key(r)
+                rows.append(_Row(req=r, length=int(lengths[i]),
+                                 emitted=1, join=0, active=True,
+                                 cold=not was_warm))
+            else:
+                rows.append(_Row(req=None, length=int(lengths[i])))
+        slots = np.full((B,), S, np.int32)
+        hist: list[np.ndarray] = []       # materialized [B] token steps
+        devbuf: list = []                 # device [B] steps not yet pulled
+
         with obs.span("serve.microbatch", "serve", bucket=str(key),
                       n_real=n_real, batch=B, pad_len=S, warm=was_warm):
             caches = T.init_cache(self.cfg, B, self.max_seq)
-            lengths_j = jnp.asarray(lengths)
-            with obs.span("serve.prefill", "serve", bucket=str(key),
-                          batch=B, pad_len=S):
-                logits, caches = self._prefill(params, jnp.asarray(toks),
-                                               caches, lengths_j)
-                logits = np.asarray(logits)              # [B, V]
-            temps = np.array([reqs[min(i, n_real - 1)].temperature
-                              for i in range(B)])
-            cur = self._sample(logits, temps)
-            for i, r in enumerate(reqs):
-                r.out_tokens.append(int(cur[i]))
-            with obs.span("serve.decode", "serve", bucket=str(key),
-                          steps=max_new - 1):
-                for step in range(1, max_new):
-                    if self.mode == "masked":
-                        logits, caches = self._decode_masked(
-                            params, jnp.asarray(cur[:, None]), caches,
-                            lengths_j, jnp.int32(step), S)
-                    else:
-                        pos = S + step - 1
-                        logits, caches = self._decode(
-                            params, jnp.asarray(cur[:, None]), caches,
-                            jnp.int32(pos))
-                    cur = self._sample(np.asarray(logits[:, 0]), temps)
-                    for i, r in enumerate(reqs):
-                        if len(r.out_tokens) < r.max_new_tokens:
-                            r.out_tokens.append(int(cur[i]))
-        dt = time.perf_counter() - t0
+            cur, caches = self._prefill_rows(
+                bucket, params, caches, toks, lengths, temps, keys,
+                n_real, P)
+            devbuf.append(cur)
+
+            def process_retirements() -> bool:
+                nonlocal cur, caches
+                changed = False
+                while True:
+                    ret = [i for i in range(B)
+                           if rows[i].active and rows[i].req is not None
+                           and rows[i].emitted
+                           >= rows[i].req.max_new_tokens]
+                    if not ret:
+                        return changed
+                    changed = True
+                    self._drain(devbuf, hist)
+                    cur_np = None
+                    for i in ret:
+                        self._finalize(rows[i], i, bucket, hist, S, t0)
+                        if not self.refill_enabled:
+                            continue
+                        nxt = self.scheduler.pop_pending(key)
+                        if nxt is None:
+                            continue
+                        first, caches = self._refill_slot(
+                            bucket, params, caches, i, nxt, toks, lengths,
+                            temps, keys, slots, rows, hist, P)
+                        if cur_np is None:
+                            cur_np = hist[-1].copy()
+                        cur_np[i] = first
+                    if cur_np is not None:
+                        cur = jnp.asarray(cur_np)
+
+            def sync_decode_state():
+                # snapshot the host staging buffers onto the device; paid
+                # only at microbatch start and after a retire/refill event
+                # mutates them — steady-state steps run device-resident
+                return (self._dev(lengths), self._dev(slots),
+                        self._dev(np.array(
+                            [1 if r.active else 0 for r in rows],
+                            np.int32)),
+                        self._dev(temps), self._dev(keys))
+
+            with obs.span("serve.decode", "serve", bucket=str(key)):
+                process_retirements()
+                lengths_d, slots_d, active_d, temps_d, keys_d = \
+                    sync_decode_state()
+                steps = 0
+                while any(row.active for row in rows):
+                    cur, caches, slots_d = self._decode_cont(
+                        params, cur[:, None], caches, lengths_d, slots_d,
+                        active_d, temps_d, keys_d, S)
+                    devbuf.append(cur)
+                    steps += 1
+                    for i in range(B):
+                        if rows[i].active:
+                            rows[i].emitted += 1
+                            slots[i] += 1
+                    if process_retirements():
+                        lengths_d, slots_d, active_d, temps_d, keys_d = \
+                            sync_decode_state()
+                m.counter("serve.decode_steps").inc(steps)
+        m.counter("serve.decode_time_s").inc(time.perf_counter() - t0)
         bucket.warmed = True        # compiled now — next time is a hit
-        bucket.served += n_real
-        bucket.real_tokens += int(lengths[:n_real].sum())
-        # waste = pad suffixes of real rows + entire filler (duplicate)
-        # rows, so the metric reflects all non-useful prefill compute
-        bucket.padded_tokens += int(B * S - lengths[:n_real].sum())
-        m = self.metrics
         m.histogram("serve.microbatch.size").observe(n_real)
         if n_real > 1:
             m.counter("serve.microbatch.multi").inc()
-        for r in reqs:
-            r.done = True
-            r.bucket = str(key)
-            r.padded_to = S
-            r.cold = not was_warm
-            r.dispatch_paths = bucket.paths
-            r.latency_s = time.perf_counter() - getattr(r, "_t_admit", t0)
-            m.counter("serve.requests_served").inc()
-            m.counter("serve.tokens_generated").inc(len(r.out_tokens))
-            m.histogram("serve.request.latency_s").observe(r.latency_s)
-            if obs.is_enabled():
-                obs.event("serve.retire", "serve", bucket=str(key),
-                          new_tokens=len(r.out_tokens), cold=r.cold,
-                          latency_s=round(r.latency_s, 6))
-        m.counter("serve.decode_steps").inc(max_new)
-        m.counter("serve.decode_time_s").inc(dt)
+
+    def _prefill_rows(self, bucket, params, caches, toks, lengths, temps,
+                      keys, n_real: int, P: int):
+        """Microbatch prefill: suffix-only when every real row hits the
+        prefix cache, else full (which then feeds the cache)."""
+        key = bucket.key
+        B, S = toks.shape
+        digs = [prefix_digest(key.fset, toks[i, :P])
+                if P and lengths[i] > P else None
+                for i in range(n_real)]
+        use_sfx = bool(digs) and all(
+            d is not None and self.prefix.contains(d) for d in digs)
+        lengths_j, temps_j, keys_j = (self._dev(lengths),
+                                      self._dev(temps), self._dev(keys))
+        with obs.span("serve.prefill", "serve", bucket=str(key), batch=B,
+                      pad_len=S, prefix_reuse=use_sfx):
+            if use_sfx:
+                for i in range(n_real):
+                    slab = self.prefix.lookup(digs[i])
+                    caches = self._scatter_row(caches, slab, jnp.int32(i))
+                cur, caches = self._prefill_sfx(
+                    params, self._dev(toks[:, P:]), caches, lengths_j,
+                    temps_j, keys_j, P)
+                self.metrics.counter("serve.prefix.reused_prefills").inc()
+                bucket.padded_tokens += int(
+                    B * (S - P)
+                    - np.maximum(lengths[:n_real] - P, 0).sum())
+            else:
+                for d in digs:
+                    if d is not None and not self.prefix.contains(d):
+                        self.prefix.misses += 1
+                cur, caches = self._prefill(params, self._dev(toks),
+                                            caches, lengths_j, temps_j,
+                                            keys_j)
+                bucket.padded_tokens += int(B * S - lengths[:n_real].sum())
+                for i in range(n_real):
+                    if digs[i] is not None \
+                            and not self.prefix.contains(digs[i]):
+                        slab = self._extract_prefix(caches, jnp.int32(i), P)
+                        self.prefix.insert(digs[i], slab)
+        return cur, caches
+
+    def _refill_slot(self, bucket, params, caches, i: int, nxt: Request,
+                     toks, lengths, temps, keys, slots, rows, hist,
+                     P: int):
+        """Pull ``nxt`` into freed slot ``i`` mid-decode: batch-1 prefill
+        (prefix-reused when its prefix is cached) chunked into the decode
+        stream, then scatter its cache row into the batch."""
+        key = bucket.key
+        S = toks.shape[1]
+        L2 = len(nxt.prompt)
+        toks[i, :] = 0
+        toks[i, :L2] = nxt.prompt
+        lengths[i] = L2
+        temps[i] = nxt.temperature
+        keys[i] = self._req_key(nxt)
+        dig = (prefix_digest(key.fset, toks[i, :P])
+               if P and L2 > P else None)
+        use_sfx = dig is not None and self.prefix.contains(dig)
+        c1 = T.init_cache(self.cfg, 1, self.max_seq)
+        l_j = self._dev(lengths[i:i + 1])
+        t_j = self._dev(temps[i:i + 1])
+        k_j = self._dev(keys[i:i + 1])
+        with obs.span("serve.prefill", "serve", bucket=str(key), batch=1,
+                      pad_len=S, prefix_reuse=use_sfx, refill_slot=i):
+            if use_sfx:
+                slab = self.prefix.lookup(dig)
+                c1 = self._scatter_row(c1, slab, jnp.int32(0))
+                tk, c1 = self._prefill_sfx(
+                    params, self._dev(toks[i:i + 1, P:]), c1, l_j, t_j,
+                    k_j, P)
+                bucket.padded_tokens += int((S - P) - max(L2 - P, 0))
+            else:
+                if dig is not None:
+                    self.prefix.misses += 1
+                tk, c1 = self._prefill(params, self._dev(toks[i:i + 1]),
+                                       c1, l_j, t_j, k_j)
+                bucket.padded_tokens += int(S - L2)
+                if dig is not None:
+                    slab = self._extract_prefix(c1, jnp.int32(0), P)
+                    self.prefix.insert(dig, slab)
+        caches = self._scatter_row(caches, c1, jnp.int32(i))
+        slots[i] = S
+        rows[i] = _Row(req=nxt, length=L2, emitted=1, join=len(hist),
+                       first_tok=int(np.asarray(tk)[0]), active=True,
+                       cold=False)
+        self.metrics.counter("serve.refills").inc()
+        if obs.is_enabled():
+            obs.event("serve.refill", "serve", bucket=str(key), slot=i,
+                      length=L2, prefix_reuse=use_sfx)
+        return rows[i].first_tok, caches
+
+    # -- equal mode: shared-position continuous decode --------------------
+
+    def _serve_microbatch_equal(self, bucket, reqs: list[Request]) -> None:
+        """Equal-length batching (state-carrying/windowed/MoE families):
+        rows share a scalar position, so no refill or prefix reuse — but
+        sampling still runs on device under per-request streams, requests
+        still retire (and stamp latency) the step they finish, and the
+        loop ends at the last real row's ``max_new``, not the slot max."""
+        key = bucket.key
+        params = self.variants[key.fset]
+        S = key.pad_len
+        B = bucket.batch
+        n_real = len(reqs)
+        was_warm = bucket.warmed
+        if was_warm:
+            bucket.hits += 1
+        else:
+            bucket.misses += 1
+        m = self.metrics
+        t0 = time.perf_counter()
+        toks = np.zeros((B, S), np.int32)
+        temps = np.zeros((B,), np.float32)
+        keys = np.zeros((B, 2), np.uint32)
+        rows: list[_Row] = []
+        for i in range(B):
+            r = reqs[min(i, n_real - 1)]
+            toks[i, : len(r.prompt)] = r.prompt
+            if i < n_real:
+                temps[i] = r.temperature
+                keys[i] = self._req_key(r)
+                rows.append(_Row(req=r, length=len(r.prompt), emitted=1,
+                                 join=0, active=True, cold=not was_warm))
+            else:
+                rows.append(_Row(req=None, length=len(r.prompt)))
+        hist: list[np.ndarray] = []
+        devbuf: list = []
+
+        def process_retirements():
+            ret = [i for i in range(B)
+                   if rows[i].active and rows[i].req is not None
+                   and rows[i].emitted >= rows[i].req.max_new_tokens]
+            if not ret:
+                return
+            self._drain(devbuf, hist)
+            for i in ret:
+                self._finalize(rows[i], i, bucket, hist, S, t0)
+
+        with obs.span("serve.microbatch", "serve", bucket=str(key),
+                      n_real=n_real, batch=B, pad_len=S, warm=was_warm):
+            caches = T.init_cache(self.cfg, B, self.max_seq)
+            lengths_j = jnp.full((B,), S, jnp.int32)
+            temps_j, keys_j = jnp.asarray(temps), jnp.asarray(keys)
+            with obs.span("serve.prefill", "serve", bucket=str(key),
+                          batch=B, pad_len=S, prefix_reuse=False):
+                cur, caches = self._prefill(params, self._dev(toks),
+                                            caches, lengths_j, temps_j,
+                                            keys_j)
+            devbuf.append(cur)
+            bucket.padded_tokens += int((B - n_real) * S)
+            with obs.span("serve.decode", "serve", bucket=str(key)):
+                process_retirements()
+                t = 1
+                while any(row.active for row in rows):
+                    cur, caches = self._decode_sample(
+                        params, cur[:, None], caches, jnp.int32(S + t - 1),
+                        temps_j, keys_j, jnp.full((B,), t, jnp.int32))
+                    devbuf.append(cur)
+                    m.counter("serve.decode_steps").inc()
+                    for row in rows:
+                        if row.active:
+                            row.emitted += 1
+                    t += 1
+                    process_retirements()
+        m.counter("serve.decode_time_s").inc(time.perf_counter() - t0)
+        bucket.warmed = True
+        m.histogram("serve.microbatch.size").observe(n_real)
+        if n_real > 1:
+            m.counter("serve.microbatch.multi").inc()
 
     # ------------------------------------------------------------------
     # unbatched reference (ground truth for parity tests / debugging)
@@ -398,8 +818,10 @@ class Engine:
     def generate_reference(self, requests: list[Request]) -> list[Request]:
         """Serve requests one at a time with no padding — the semantic
         baseline the scheduler path must match (masked/equal modes are
-        bit-exact for greedy decoding).  Its compiles are counted under
-        ``reference_traces``, not as recompiles of the serving path."""
+        bit-exact for greedy AND sampled decoding: the same fused sampler
+        runs under the same per-request PRNG stream).  Its compiles are
+        counted under ``reference_traces``, not as recompiles of the
+        serving path."""
         self._ref_active = True
         try:
             return self._generate_reference(requests)
@@ -412,18 +834,18 @@ class Engine:
             L = len(r.prompt)
             toks = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
             caches = T.init_cache(self.cfg, 1, self.max_seq)
-            logits, caches = self._prefill(params, toks, caches,
-                                           jnp.full((1,), L, jnp.int32))
-            temps = np.array([r.temperature])
-            cur = self._sample(np.asarray(logits), temps)
-            r.out_tokens.append(int(cur[0]))
+            temps = jnp.asarray([float(r.temperature)], jnp.float32)
+            keys = jnp.asarray(self._req_key(r)[None])
+            tok, caches = self._prefill(params, toks, caches,
+                                        jnp.full((1,), L, jnp.int32),
+                                        temps, keys)
+            out = [tok]
             for step in range(1, r.max_new_tokens):
-                pos = L + step - 1
-                logits, caches = self._decode(
-                    params, jnp.asarray(cur[:, None]), caches,
-                    jnp.int32(pos))
-                cur = self._sample(np.asarray(logits[:, 0]), temps)
-                r.out_tokens.append(int(cur[0]))
+                tok, caches = self._decode_sample(
+                    params, tok[:, None], caches, jnp.int32(L + step - 1),
+                    temps, keys, jnp.full((1,), step, jnp.int32))
+                out.append(tok)
+            r.out_tokens = [int(np.asarray(t)[0]) for t in out]
             r.done = True
         return requests
 
@@ -454,6 +876,7 @@ class Engine:
                 "multi_request": int(m.value("serve.microbatch.multi")),
                 "mean_size": mb.mean,
                 "max_size": int(mb.max) if mb.count else 0,
+                "refills": int(m.value("serve.refills")),
             },
             "bucket_hits": hits, "bucket_misses": misses,
             "bucket_hit_rate": hits / (hits + misses) if hits + misses
@@ -474,5 +897,7 @@ class Engine:
                 "mean": lat.mean,
                 "max": lat.max if lat.count else 0.0,
             },
+            "prefix_cache": (self.prefix.stats() if self.prefix is not None
+                             else None),
             "scheduler": self.scheduler.stats(),
         }

@@ -1,0 +1,99 @@
+"""Hash-keyed prefix cache over KV blocks for prefix-reuse prefill.
+
+Shared prompt prefixes (system prompts) are prefilled once: after a full
+prefill, the engine extracts each request's *prefix block* — the KV slab
+covering positions ``0 .. P-1`` where ``P`` is the bucket's prefix length
+(``pad_len // 2``) — and stores it here keyed by a digest of the prefix
+tokens.  A later request whose prompt starts with the same ``P`` tokens
+(and has at least one more real token, so its first sampled token still
+comes from a freshly computed position) skips recomputing the prefix: the
+cached slab is scattered into its cache row and only the *suffix*
+(positions ``P .. pad_len-1``) runs through the continuation prefill.
+
+Correctness: under causal attention the KV of positions ``0 .. P-1``
+depends only on tokens ``0 .. P-1``, so a cached slab is *bit-identical*
+to what a full prefill would have produced — prefix reuse preserves the
+engine's exact batched-vs-unbatched parity guarantee (masked mode only;
+state-carrying mixers cannot snapshot a prefix into reusable blocks).
+
+The cache is a bounded LRU: entries are whole KV pytrees (device arrays),
+``max_entries`` caps residency and the oldest entry is dropped first.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+__all__ = ["PrefixCache", "prefix_digest"]
+
+
+def prefix_digest(fset: str, tokens) -> bytes:
+    """Stable digest of (format-set tag, prefix token ids).
+
+    The token *values* key the entry (not the prompt object), so two
+    requests sharing a system prompt hit the same block chain; the tag is
+    folded in because different weight variants produce different KV."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(fset.encode())
+    h.update(np.ascontiguousarray(tokens, dtype=np.int32).tobytes())
+    return h.digest()
+
+
+class PrefixCache:
+    """LRU map ``digest -> KV slab pytree`` with hit/miss accounting.
+
+    The engine owns the device-array values; this class is pure host-side
+    bookkeeping (unit-testable without jax)."""
+
+    def __init__(self, max_entries: int = 32):
+        if max_entries < 1:
+            raise ValueError(f"max_entries {max_entries} < 1")
+        self.max_entries = max_entries
+        self._entries: dict[bytes, object] = {}   # insertion-ordered
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, digest: bytes):
+        """Cached KV slab for ``digest`` or None (counts a hit/miss and
+        refreshes LRU recency on hit)."""
+        slab = self._entries.get(digest)
+        if slab is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries[digest] = self._entries.pop(digest)   # LRU bump
+        return slab
+
+    def contains(self, digest: bytes) -> bool:
+        """Recency-neutral membership probe (microbatch planning peeks at
+        every row before deciding full vs. suffix prefill — only the
+        committed lookups should count)."""
+        return digest in self._entries
+
+    def insert(self, digest: bytes, slab) -> None:
+        if digest in self._entries:
+            self._entries[digest] = self._entries.pop(digest)
+            return
+        while len(self._entries) >= self.max_entries:
+            self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+        self._entries[digest] = slab
+        self.inserts += 1
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "max_entries": self.max_entries,
+            "hits": self.hits,
+            "misses": self.misses,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "hit_rate": self.hits / total if total else 0.0,
+        }

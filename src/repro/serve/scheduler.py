@@ -289,6 +289,25 @@ class ShapeBucketScheduler:
             self._dynamic_lru.move_to_end(key)
         return bucket, batch
 
+    def pop_pending(self, key: BucketKey):
+        """Pull the oldest pending request for ``key`` out of turn — the
+        engine's retire-and-refill hook: when a slot of an in-flight
+        microbatch frees mid-decode, the next request for the *same*
+        bucket joins it immediately rather than waiting for a fresh
+        microbatch.  Returns a request or None.
+
+        This trades strict global FIFO for occupancy: a refill may serve a
+        younger request of this bucket before an older request of another
+        bucket — but only into a slot no other bucket could use, so no
+        request is ever *delayed* by a refill."""
+        q = self._pending.get(key)
+        if not q:
+            return None
+        req = q.popleft()
+        self._drained.add(id(req))
+        self._queued_ids.discard(id(req))
+        return req
+
     def exact_bucket(self, length: int, fset: str, *,
                      commit: bool = True) -> BucketKey:
         """Bucket a request at its exact length, bypassing best-fit padding

@@ -241,11 +241,12 @@ def test_engine_stats_shape_parity():
     assert set(st) == {"mode", "requests", "tokens", "padding_waste",
                        "microbatches", "bucket_hits", "bucket_misses",
                        "bucket_hit_rate", "compile", "decode_steps",
-                       "decode_time_s", "latency_s", "scheduler"}
+                       "decode_time_s", "latency_s", "prefix_cache",
+                       "scheduler"}
     assert set(st["requests"]) == {"served", "rejected"}
     assert set(st["tokens"]) == {"prompt", "padded", "generated"}
     assert set(st["microbatches"]) == {"total", "multi_request",
-                                       "mean_size", "max_size"}
+                                       "mean_size", "max_size", "refills"}
     assert set(st["compile"]) == {"warmup_traces", "steady_traces",
                                   "reference_traces",
                                   "post_warmup_recompiles"}
@@ -265,7 +266,11 @@ def test_engine_stats_shape_parity():
     assert st["microbatches"]["max_size"] == 2
     assert st["microbatches"]["multi_request"] == 1
     assert st["latency_s"]["max"] >= st["latency_s"]["mean"] > 0.0
-    assert st["decode_steps"] == 2
+    # EXACT step accounting: prefill samples token 0 on device, so
+    # max_new=2 costs exactly ONE decode step (the old engine ran
+    # max_new−1 steps but counted max_new — the off-by-one is fixed by
+    # incrementing once per actual jitted decode dispatch)
+    assert st["decode_steps"] == 1
     # scheduler stream counters ride the same registry
     assert st["scheduler"]["rejected"] == eng.scheduler.rejected == 0
     json.dumps(st)                         # stats stay JSON-serializable

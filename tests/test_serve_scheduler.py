@@ -272,23 +272,139 @@ def test_stats_counter_correctness():
         max_batch=2, max_seq=32,
         scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
     eng.warmup()
-    reqs = _reqs(PROMPTS, max_new=2)      # 4 requests → 2 full microbatches
+    # 4 requests at max_batch 2: retire-and-refill serves the whole wave
+    # through ONE resident microbatch (2 initial rows + 2 refills)
+    reqs = _reqs(PROMPTS, max_new=2)
     eng.generate(reqs)
     st = eng.stats()
     assert st["requests"]["served"] == 4
-    assert st["microbatches"]["total"] == 2
-    assert st["microbatches"]["multi_request"] == 2
+    assert st["microbatches"]["total"] == 1
+    assert st["microbatches"]["multi_request"] == 1
     assert st["microbatches"]["max_size"] == 2
+    assert st["microbatches"]["refills"] == 2
     assert st["tokens"]["generated"] == 8
     assert st["tokens"]["prompt"] == sum(len(p) for p in PROMPTS)
     assert st["tokens"]["padded"] == sum(4 - len(p) for p in PROMPTS)
     assert 0.0 < st["padding_waste"] < 1.0
-    assert st["bucket_hits"] == 2 and st["bucket_misses"] == 0
+    assert st["bucket_hits"] == 1 and st["bucket_misses"] == 0
+    # prefill samples token 0, then one decode step per remaining token:
+    # 2 steps total (initial rows step once, refilled rows step once)
+    assert st["decode_steps"] == 2
     assert all(r.latency_s > 0 for r in reqs)
     assert all(r.bucket == "S4/default" and r.padded_to == 4 for r in reqs)
     sched = st["scheduler"]
     assert sched["pending"] == 0 and sched["mode"] == "masked"
     assert sched["buckets"]["S4/default"]["served"] == 4
+
+
+def test_refill_disabled_restores_microbatch_per_wave():
+    # --no-refill fallback: each wave of max_batch requests runs as its
+    # own microbatch, exactly the pre-continuous-decode schedule
+    cfg, params, eng = _mk_engine(
+        max_batch=2, max_seq=32, refill=False,
+        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    assert not eng.refill_enabled
+    eng.warmup()
+    reqs = _reqs(PROMPTS, max_new=2)
+    eng.generate(reqs)
+    refs = eng.generate_reference(_reqs(PROMPTS, max_new=2))
+    for r, ref in zip(reqs, refs):
+        assert r.out_tokens == ref.out_tokens
+    st = eng.stats()
+    assert st["microbatches"]["total"] == 2
+    assert st["microbatches"]["multi_request"] == 2
+    assert st["microbatches"]["refills"] == 0
+    assert st["compile"]["post_warmup_recompiles"] == 0
+
+
+def test_mixed_max_new_early_retirement_and_refill():
+    # rows retire the step they reach their own max_new — including one
+    # that finishes at prefill (max_new=1) — and pending requests are
+    # admitted into freed slots mid-decode; everything stays bit-exact
+    cfg, params, eng = _mk_engine(
+        max_batch=2, max_seq=32,
+        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    eng.warmup()
+    max_news = [1, 5, 2, 3]
+
+    def mk():
+        return [Request(np.asarray(p, np.int32), max_new_tokens=n)
+                for p, n in zip(PROMPTS, max_news)]
+
+    reqs = mk()
+    eng.generate(reqs)
+    refs = eng.generate_reference(mk())
+    for r, ref, n in zip(reqs, refs, max_news):
+        assert r.done and len(r.out_tokens) == n
+        assert r.out_tokens == ref.out_tokens
+    st = eng.stats()
+    assert st["microbatches"]["total"] == 1
+    assert st["microbatches"]["refills"] == 2
+    assert st["requests"]["served"] == 4
+    assert st["tokens"]["generated"] == sum(max_news)
+    # schedule: prefill retires r0 (refill r2) → step1 retires r2 (refill
+    # r3) → step2 → step3 retires r3 → step4 retires r1
+    assert st["decode_steps"] == 4
+    assert st["compile"]["post_warmup_recompiles"] == 0
+    # latency is stamped at each request's OWN retirement, not microbatch
+    # end: r1 (admitted first wave, retired last) must dominate them all
+    lat = eng.metrics.histogram("serve.request.latency_s")
+    assert lat.count == 4
+    assert lat.max == max(r.latency_s for r in reqs)
+    assert all(reqs[i].latency_s < reqs[1].latency_s for i in (0, 2, 3))
+
+
+def test_prefix_reuse_prefill_exact_and_counted():
+    # shared system prompt: wave 1 populates the prefix cache (P = pad//2
+    # leading tokens, keyed by digest); wave 2's rows ALL hit, so only the
+    # suffix is prefilled — and the tokens stay bit-exact vs unbatched
+    # (causal KV for positions < P depends only on tokens < P)
+    cfg, params, eng = _mk_engine(
+        max_batch=2, max_seq=32,
+        scheduler=SchedulerConfig(pad_lens=(8,), max_batch=2))
+    eng.warmup()
+    sys_prefix = [9, 8, 7, 6]     # == padded prefix: P = 8 // 2 = 4
+    wave1 = [sys_prefix + [1, 2], sys_prefix + [3]]
+    wave2 = [sys_prefix + [5, 5, 5], sys_prefix + [2, 9]]
+    r1 = _reqs(wave1)
+    eng.generate(r1)
+    assert eng.prefix.stats()["inserts"] == 1    # one digest, stored once
+    r2 = _reqs(wave2)
+    eng.generate(r2)
+    refs = eng.generate_reference(_reqs(wave1 + wave2))
+    for r, ref in zip(r1 + r2, refs):
+        assert r.out_tokens == ref.out_tokens
+    st = eng.stats()
+    pc = st["prefix_cache"]
+    assert pc["hits"] >= 2 and pc["hit_rate"] > 0.0
+    assert int(eng.metrics.value("serve.prefix.reused_prefills")) >= 1
+    assert st["compile"]["post_warmup_recompiles"] == 0
+
+
+def test_sampled_decode_batched_unbatched_parity():
+    # temperature > 0: per-request PRNG streams keyed by (engine seed,
+    # request seed, token index) make sampled decoding batch-invariant —
+    # and filler slots must not consume or perturb any real row's stream
+    cfg, params, eng = _mk_engine(
+        max_batch=3, max_seq=32,
+        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=3))
+    eng.warmup()
+
+    def mk():
+        return [Request(np.asarray(p, np.int32), max_new_tokens=4,
+                        temperature=t, seed=s)
+                for p, t, s in [([1, 2, 3], 0.8, 1), ([1, 2, 3], 0.8, 2),
+                                ([4, 5], 0.0, 3), ([2, 2, 2], 1.3, 4)]]
+
+    reqs = mk()
+    eng.generate(reqs)        # waves of 3 + 1 → one wave has 2 fillers
+    refs = eng.generate_reference(mk())
+    for r, ref in zip(reqs, refs):
+        assert r.out_tokens == ref.out_tokens
+    # same prompt + same temperature, different seed → streams diverge
+    # (otherwise this parity test would be vacuous)
+    assert reqs[0].out_tokens != reqs[1].out_tokens
+    assert eng.stats()["compile"]["post_warmup_recompiles"] == 0
 
 
 @pytest.mark.slow
