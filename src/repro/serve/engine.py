@@ -601,10 +601,14 @@ class Engine:
                             bucket, params, caches, i, nxt, toks, lengths,
                             temps, keys, slots, rows, hist, P)
                         if cur_np is None:
-                            cur_np = hist[-1].copy()
+                            # seed from the LIVE decode input, not hist[-1]:
+                            # a substitution made by an earlier iteration of
+                            # this pass (a refill that itself retired at
+                            # max_new_tokens == 1) exists only in ``cur``
+                            cur_np = np.asarray(cur).copy()
                         cur_np[i] = first
                     if cur_np is not None:
-                        cur = jnp.asarray(cur_np)
+                        cur = self._dev(cur_np)
 
             def sync_decode_state():
                 # snapshot the host staging buffers onto the device; paid
@@ -668,9 +672,21 @@ class Engine:
                     B * (S - P)
                     - np.maximum(lengths[:n_real] - P, 0).sum())
             else:
+                # mixed hit/miss wave: rows whose digest IS cached still
+                # count per-row hits (mirroring the per-row lookups of the
+                # suffix path — the reuse just can't be exploited, since
+                # suffix-only prefill is all-rows-or-none), and each
+                # distinct uncached digest counts ONE miss, matching the
+                # single insert it triggers below
+                missed = set()
                 for d in digs:
-                    if d is not None and not self.prefix.contains(d):
-                        self.prefix.misses += 1
+                    if d is None:
+                        continue
+                    if self.prefix.contains(d):
+                        self.prefix.hits += 1
+                    else:
+                        missed.add(d)
+                self.prefix.misses += len(missed)
                 cur, caches = self._prefill(params, self._dev(toks),
                                             caches, lengths_j, temps_j,
                                             keys_j)

@@ -354,6 +354,40 @@ def test_mixed_max_new_early_retirement_and_refill():
     assert all(reqs[i].latency_s < reqs[1].latency_s for i in (0, 2, 3))
 
 
+def test_double_refill_with_instant_retire_stays_exact():
+    # two slots retire together and BOTH are refilled, and one refill has
+    # max_new_tokens == 1 — it retires in the next iteration of the same
+    # retirement pass, whose refill rebuilds the decode input.  The rebuild
+    # must preserve the OTHER refilled slot's first token (regression:
+    # seeding the rebuild from hist[-1] reverted that slot to its retired
+    # predecessor's last token, silently breaking parity)
+    cfg, params, eng = _mk_engine(
+        max_batch=2, max_seq=32,
+        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    eng.warmup()
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [2, 2, 2], [3, 1]]
+    max_news = [1, 1, 1, 3, 2]
+    # schedule: prefill retires r0+r1 together (refill r2 → slot 0,
+    # r3 → slot 1); r2 retires instantly (max_new=1), refilling r4 into
+    # slot 0 while slot 1 has emitted nothing beyond its prefill token
+
+    def mk():
+        return [Request(np.asarray(p, np.int32), max_new_tokens=n)
+                for p, n in zip(prompts, max_news)]
+
+    reqs = mk()
+    eng.generate(reqs)
+    refs = eng.generate_reference(mk())
+    for r, ref, n in zip(reqs, refs, max_news):
+        assert r.done and len(r.out_tokens) == n
+        assert r.out_tokens == ref.out_tokens
+    st = eng.stats()
+    assert st["microbatches"]["total"] == 1
+    assert st["microbatches"]["refills"] == 3
+    assert st["requests"]["served"] == 5
+    assert st["compile"]["post_warmup_recompiles"] == 0
+
+
 def test_prefix_reuse_prefill_exact_and_counted():
     # shared system prompt: wave 1 populates the prefix cache (P = pad//2
     # leading tokens, keyed by digest); wave 2's rows ALL hit, so only the
@@ -379,6 +413,26 @@ def test_prefix_reuse_prefill_exact_and_counted():
     assert pc["hits"] >= 2 and pc["hit_rate"] > 0.0
     assert int(eng.metrics.value("serve.prefix.reused_prefills")) >= 1
     assert st["compile"]["post_warmup_recompiles"] == 0
+
+
+def test_prefix_cache_accounting_mixed_wave():
+    # mixed hit/miss wave (suffix-only prefill unusable): rows whose
+    # digest IS cached still count per-row hits, and rows sharing one
+    # uncached digest count a SINGLE miss — mirroring the one insert the
+    # wave performs — so stats()["prefix_cache"]["hit_rate"] reflects
+    # actual reuse potential
+    cfg, params, eng = _mk_engine(
+        max_batch=3, max_seq=32,
+        scheduler=SchedulerConfig(pad_lens=(8,), max_batch=3))
+    eng.warmup()
+    pre_a, pre_b = [9, 8, 7, 6], [5, 5, 5, 5]       # P = 8 // 2 = 4
+    eng.generate(_reqs([pre_a + [1, 2]]))           # miss → inserts A
+    pc = eng.prefix.stats()
+    assert (pc["hits"], pc["misses"], pc["inserts"]) == (0, 1, 1)
+    # wave 2: A cached (1 hit), B uncached on TWO rows (1 miss, 1 insert)
+    eng.generate(_reqs([pre_a + [3], pre_b + [1], pre_b + [2, 2]]))
+    pc = eng.prefix.stats()
+    assert (pc["hits"], pc["misses"], pc["inserts"]) == (1, 2, 2)
 
 
 def test_sampled_decode_batched_unbatched_parity():
