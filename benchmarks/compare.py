@@ -27,7 +27,7 @@ benchmarks locally and copy the fresh files over
 
     PYTHONPATH=src python benchmarks/compare.py \
         --baseline results/bench_baseline --fresh . \
-        --suites gemm,serve,solve,split
+        --suites gemm,serve,serve_cluster,solve,split
 """
 from __future__ import annotations
 
@@ -43,10 +43,15 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 from benchmarks.bench_io import read_bench  # noqa: E402
 
 #: wall-clock-derived keys — reported, never gated against the baseline
-IGNORE_KEYS = {"tokens_per_s", "speedup", "gemm_frac", "cache", "final"}
+#: (``gated``/``single_warmup_us`` are machine-dependent stamps: whether
+#: the host could run a perf gate, and a raw warmup timing)
+IGNORE_KEYS = {"tokens_per_s", "speedup", "gemm_frac", "cache", "final",
+               "gated", "single_warmup_us"}
 #: absolute floors on same-run timing *ratios* (runner speed cancels):
 #: batched serving slower than the unbatched reference is a regression no
-#: matter what the baseline says
+#: matter what the baseline says.  A fresh row stamped ``gated=0`` opts
+#: out — the bench itself declared the host ineligible for that perf
+#: gate (e.g. the multi-replica speedup on a single-core box).
 FLOOR_KEYS = {"speedup": 1.0}
 #: audit counters that must match exactly (no band)
 EXACT_KEYS = {"conv", "fresh"}
@@ -123,10 +128,14 @@ def compare_suite(base: dict, fresh: dict, *, rel_tol: float,
     for name in sorted(set(frows) - set(brows)):
         notes.append(f"new row {name} (not yet in baseline)")
     # absolute floors run on every FRESH row (baselined or not): these are
-    # pass/fail properties of the run itself, not diffs
+    # pass/fail properties of the run itself, not diffs — unless the row
+    # stamped itself gated=0 (host ineligible for that perf gate)
     for name, frow in sorted(frows.items()):
+        fd = parse_derived(frow["derived"])
+        if fd.get("gated") == "0":
+            continue
         for key, floor in FLOOR_KEYS.items():
-            val = parse_derived(frow["derived"]).get(key)
+            val = fd.get(key)
             num = _numeric(val) if val is not None else None
             if num is not None and num < floor:
                 regressions.append(
@@ -171,7 +180,8 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="results/bench_baseline")
     ap.add_argument("--fresh", default=".",
                     help="directory holding the fresh BENCH_<suite>.json")
-    ap.add_argument("--suites", default="gemm,serve,solve,split")
+    ap.add_argument("--suites",
+                    default="gemm,serve,serve_cluster,solve,split")
     ap.add_argument("--rel-tol", type=float, default=0.5)
     ap.add_argument("--abs-slack", type=float, default=1.0)
     args = ap.parse_args(argv)

@@ -53,7 +53,7 @@ def bench(smoke: bool = True, n_requests: int = 12, max_new: int = 16
 
     from repro.configs import get, load_all, reduced
     from repro.models import transformer as T
-    from repro.serve.engine import Engine, Request
+    from repro.serve import Engine, Request, ServeConfig
 
     load_all()
     cfg = reduced(get("llama3-8b"), tp=2)
@@ -63,7 +63,7 @@ def bench(smoke: bool = True, n_requests: int = 12, max_new: int = 16
         jax.random.PRNGKey(0),
         dataclasses.replace(cfg, mp_formats=alt_tag))
 
-    eng = Engine(cfg, params, max_batch=4, max_seq=64,
+    eng = Engine(cfg, params, ServeConfig(max_batch=4, max_seq=64),
                  variants={alt_tag: alt_params})
     t0 = time.perf_counter()
     eng.warmup()

@@ -130,12 +130,12 @@ import numpy as np                                             # noqa: E402
 
 from repro.configs import get, load_all, reduced               # noqa: E402
 from repro.models import transformer as T                      # noqa: E402
-from repro.serve.engine import Engine, Request                 # noqa: E402
+from repro.serve import Cluster, Engine, Request, ServeConfig  # noqa: E402
 
 load_all()
 cfg = reduced(get("llama3-8b"), tp=2)
 params = T.init_model(jax.random.PRNGKey(0), cfg)
-eng = Engine(cfg, params, max_batch=3, max_seq=64)
+eng = Engine(cfg, params, ServeConfig(max_batch=3, max_seq=64))
 eng.warmup()                       # plans resolved + buckets compiled here
 # mixed lengths AND mixed max_new_tokens: the short generations retire
 # early and the freed slots are refilled mid-decode
@@ -229,3 +229,35 @@ print(f"  solve: {' -> '.join(rep_a.ratio_history)} in {rep_a.sweeps} "
       f"sweeps, metric {rep_a.metric:.2g}, mid-solve retunes "
       f"{rep_a.fresh_resolutions}")
 assert rep_a.converged and rep_a.fresh_resolutions == 0
+
+# --- 11. scale out: a multi-replica cluster behind one front-end ------------
+# ServeConfig(replicas=N) puts N data-parallel engines (each optionally
+# SUMMA tensor-parallel inside) behind an async admission front-end:
+# bounded global queue, least-outstanding-tokens routing with
+# bucket/format affinity, and stall re-routing.  Every replica folds the
+# same rng_seed, so results are placement-independent — the cluster is
+# bit-exact with the single unbatched engine, and long prompts (beyond
+# every configured bucket) stream through chunked paged prefill with
+# zero recompiles.  Process-wide settings go through repro.configure —
+# the facade over the REPRO_* env vars (override > env > default); here
+# it turns the obs layer on so the router's serve.route events are live.
+import repro  # noqa: E402
+
+repro.configure(obs=True)
+cluster = Cluster(cfg, params, ServeConfig(buckets=(4, 8), max_batch=2,
+                                           max_seq=64, replicas=2))
+cluster.warmup()
+wave = [Request(np.array(p, np.int32), max_new_tokens=3)
+        for p in ([1, 2, 3], [4, 5], [6, 7, 8, 9], [2] * 11, [3, 1], [9, 9])]
+cluster.generate(wave)
+refs = cluster.replicas[0].generate_reference(
+    [Request(np.asarray(r.prompt), max_new_tokens=3) for r in wave])
+cst = cluster.stats()
+print(f"cluster: {cst['requests']['served']} requests over "
+      f"{cst['healthy']}/{cst['replicas']} replicas "
+      f"(placement: {[r.replica for r in wave]}), "
+      f"post-warmup recompiles: {cst['post_warmup_recompiles']}")
+assert all(r.out_tokens == ref.out_tokens for r, ref in zip(wave, refs))
+assert cst["post_warmup_recompiles"] == 0
+assert wave[3].bucket.startswith("S16")   # L=11 → chunked 2×8 prefill
+repro.configure(obs=False)

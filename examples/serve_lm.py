@@ -16,7 +16,7 @@ import jax
 
 from repro.configs import get, load_all, reduced
 from repro.models import transformer as T
-from repro.serve.engine import Engine, Request
+from repro.serve import Engine, Request, ServeConfig
 
 load_all()
 cfg = reduced(get("llama3-8b"), tp=2)      # full-attention → "masked" mode
@@ -25,7 +25,7 @@ params = T.init_model(jax.random.PRNGKey(0), cfg)
 alt_cfg = dataclasses.replace(cfg, mp_formats="fp8_e5m2+fp16+fp32")
 alt_params = T.init_model(jax.random.PRNGKey(0), alt_cfg)
 
-eng = Engine(cfg, params, max_batch=3, max_seq=64,
+eng = Engine(cfg, params, ServeConfig(max_batch=3, max_seq=64),
              variants={"fp8_e5m2+fp16+fp32": alt_params})
 rep = eng.warmup()
 print(f"warmup: {rep.pop('traces')} traces across "

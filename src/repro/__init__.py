@@ -1,0 +1,12 @@
+"""repro — tile-centric mixed-precision matmul reproduction toolkit.
+
+Top-level surface is deliberately tiny and jax-free at import time:
+:func:`repro.configure` is the global-settings facade (device forcing,
+tune-cache location, observability) — see :mod:`repro.config` for the
+precedence contract.  Everything else lives in the subpackages
+(``repro.core``, ``repro.tune``, ``repro.serve``, ``repro.obs``, …).
+"""
+from repro import config
+from repro.config import configure
+
+__all__ = ["config", "configure"]

@@ -1,12 +1,21 @@
 """Serving launcher: load (or init) a model and serve batched requests
-through the shape-bucketed scheduler.
+through the shape-bucketed scheduler — one engine, or a multi-replica
+cluster.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --prompts "1 2 3" "4 5" --max-new 8 --buckets 8,16,32
 
-The engine warms every configured bucket (plan resolution + compile) before
-serving unless ``--no-warmup`` is passed; ``--stats`` dumps the scheduler /
-compile counters after the stream drains.
+    # two data-parallel replicas behind the async front-end
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --replicas 2 --prompts "1 2 3" "4 5" "6 7 8" "9 9"
+
+Every knob maps 1:1 onto :class:`repro.serve.ServeConfig` — the launcher
+builds one and hands it to ``Engine``/``Cluster``; nothing is passed as
+loose kwargs.  Tracing goes through :func:`repro.configure`, the
+process-global settings facade.  The stack warms every configured bucket
+(plan resolution + compile) before serving unless ``--no-warmup`` is
+passed; ``--stats`` dumps the scheduler / compile counters after the
+stream drains.
 """
 import argparse
 import json
@@ -23,6 +32,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind the async "
+                         "front-end (1 → plain single engine)")
     ap.add_argument("--buckets", default="",
                     help="comma-separated padded prompt lengths "
                          "(default: ArchConfig.serve_buckets)")
@@ -37,15 +49,21 @@ def main():
                          "(each wave of requests runs as its own "
                          "microbatch)")
     ap.add_argument("--no-prefix-cache", action="store_true",
-                    help="disable prefix-reuse prefill (every prompt is "
-                         "prefilled in full)")
-    ap.add_argument("--prefix-entries", type=int, default=32,
-                    help="prefix-cache capacity (KV slabs held resident)")
+                    help="disable block-paged prefix-KV reuse (every "
+                         "prompt is prefilled in full)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="serve prompts longer than every bucket through "
+                         "cold exact-length compiles instead of chunked "
+                         "paged prefill")
+    ap.add_argument("--prefix-pages", type=int, default=128,
+                    help="page-pool capacity of the paged prefix-KV cache")
+    ap.add_argument("--page-tokens", type=int, default=4,
+                    help="KV positions per page")
     ap.add_argument("--request-seed", type=int, default=0,
                     help="base seed for per-request sampling streams "
                          "(request i uses request-seed + i)")
     ap.add_argument("--stats", action="store_true",
-                    help="print Engine.stats() JSON after serving")
+                    help="print stats() JSON after serving")
     ap.add_argument("--trace", default="",
                     help="record a repro.obs JSONL trace to this path "
                          "(a Perfetto-loadable .trace.json is written "
@@ -55,14 +73,13 @@ def main():
     import jax
     import numpy as np
 
-    from repro import obs
+    import repro
     from repro.configs import get, load_all, reduced
     from repro.models import transformer as T
-    from repro.serve.engine import Engine, Request
-    from repro.serve.scheduler import SchedulerConfig
+    from repro.serve import Cluster, Engine, Request, ServeConfig
 
     if args.trace:
-        obs.configure(enabled=True, trace_path=args.trace)
+        repro.configure(obs_trace=args.trace)
 
     load_all()
     cfg = get(args.arch)
@@ -78,25 +95,40 @@ def main():
         params = restored["params"]
         print(f"loaded checkpoint step {man['step']}")
 
-    sched = None
-    pad_lens = (tuple(int(b) for b in args.buckets.split(","))
-                if args.buckets else cfg.serve_buckets)
-    if pad_lens:
-        sched = SchedulerConfig(pad_lens=pad_lens, waste_cap=args.waste_cap,
-                                max_batch=args.max_batch)
-    eng = Engine(cfg, params, max_batch=args.max_batch,
-                 max_seq=args.max_seq, rng_seed=args.seed, scheduler=sched,
-                 refill=not args.no_refill,
-                 prefix_cache=not args.no_prefix_cache,
-                 prefix_entries=args.prefix_entries)
-    print(f"engine mode={eng.mode} buckets="
-          f"{sorted(k.pad_len for k in eng.scheduler.buckets)} "
-          f"refill={eng.refill_enabled} "
-          f"prefix_cache={eng.prefix is not None}")
-    if not args.no_warmup:
-        rep = eng.warmup()
-        print(f"warmup: {rep.pop('traces')} traces; "
-              f"paths={ {k: v['paths'] for k, v in rep.items()} }")
+    sc = ServeConfig(
+        buckets=(tuple(int(b) for b in args.buckets.split(","))
+                 if args.buckets else None),
+        waste_cap=args.waste_cap,
+        max_batch=args.max_batch,
+        max_seq=args.max_seq,
+        rng_seed=args.seed,
+        refill=not args.no_refill,
+        prefix_cache=not args.no_prefix_cache,
+        chunked_prefill=not args.no_chunked_prefill,
+        prefix_pages=args.prefix_pages,
+        page_tokens=args.page_tokens,
+        warmup=not args.no_warmup,
+        replicas=args.replicas,
+    )
+    if sc.replicas > 1:
+        server = Cluster(cfg, params, sc)
+        eng0 = server.replicas[0]
+        print(f"cluster replicas={sc.replicas} mode={eng0.mode} buckets="
+              f"{sorted(k.pad_len for k in eng0.scheduler.buckets)}")
+    else:
+        server = eng0 = Engine(cfg, params, sc)
+        print(f"engine mode={eng0.mode} buckets="
+              f"{sorted(k.pad_len for k in eng0.scheduler.buckets)} "
+              f"refill={eng0.refill_enabled} "
+              f"prefix_cache={eng0.prefix is not None}")
+    if sc.warmup:
+        rep = server.warmup()
+        if sc.replicas > 1:
+            traces = {k: v.pop("traces") for k, v in rep.items()}
+            print(f"warmup: traces per replica {traces}")
+        else:
+            print(f"warmup: {rep.pop('traces')} traces; "
+                  f"paths={ {k: v['paths'] for k, v in rep.items()} }")
     reqs = [Request(np.array([int(t) % cfg.vocab for t in p.split()],
                              np.int32),
                     max_new_tokens=args.max_new,
@@ -104,27 +136,34 @@ def main():
                     seed=args.request_seed + i)
             for i, p in enumerate(args.prompts)]
     rejected = 0
-    for i, r in enumerate(eng.generate(reqs)):
+    for i, r in enumerate(server.generate(reqs)):
         if r.error:
             rejected += 1
             print(f"request {i}: prompt={np.asarray(r.prompt).tolist()} "
                   f"REJECTED — {r.error}")
             continue
+        where = f" replica={r.replica}" if sc.replicas > 1 else ""
         print(f"request {i}: prompt={np.asarray(r.prompt).tolist()} "
               f"→ out={r.out_tokens}  "
               f"[bucket={r.bucket} padded_to={r.padded_to} "
-              f"cold={r.cold} latency={r.latency_s * 1e3:.0f}ms]")
-    st = eng.stats()
-    print(f"served={st['requests']['served']} "
-          f"microbatches={st['microbatches']['total']} "
-          f"(multi={st['microbatches']['multi_request']}) "
-          f"hit_rate={st['bucket_hit_rate']:.2f} "
-          f"post_warmup_recompiles={st['compile']['post_warmup_recompiles']}")
+              f"cold={r.cold}{where} latency={r.latency_s * 1e3:.0f}ms]")
+    st = server.stats()
+    if sc.replicas > 1:
+        print(f"served={st['requests']['served']} over "
+              f"{st['healthy']}/{st['replicas']} healthy replicas, "
+              f"post_warmup_recompiles={st['post_warmup_recompiles']}")
+    else:
+        print(f"served={st['requests']['served']} "
+              f"microbatches={st['microbatches']['total']} "
+              f"(multi={st['microbatches']['multi_request']}) "
+              f"hit_rate={st['bucket_hit_rate']:.2f} "
+              f"post_warmup_recompiles="
+              f"{st['compile']['post_warmup_recompiles']}")
     if args.stats:
         print(json.dumps(st, indent=1, sort_keys=True))
     if args.trace:
         from repro.obs.trace import export_chrome
-        obs.configure(enabled=False)     # flush + close the JSONL file
+        repro.configure(obs_trace=None, obs=False)  # flush + close JSONL
         chrome = export_chrome(args.trace)
         print(f"trace: {args.trace} (chrome: {chrome})")
     if rejected:

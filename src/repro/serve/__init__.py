@@ -1,0 +1,35 @@
+"""repro.serve — shape-bucketed, multi-replica serving stack.
+
+Public construction surface::
+
+    from repro.serve import Engine, Request, ServeConfig
+    eng = Engine(cfg, params, ServeConfig(max_batch=4))
+
+    from repro.serve import Cluster
+    cl = Cluster(cfg, params, ServeConfig(replicas=2))
+
+``ServeConfig`` (and the scheduler/kv-page control plane) import without
+jax; ``Engine``/``Cluster`` pull in the model stack lazily on first
+attribute access, so config handling stays cheap in tooling contexts.
+"""
+from repro.serve.config import DEFAULT_PAD_LENS, ServeConfig
+
+__all__ = [
+    "Cluster", "DEFAULT_PAD_LENS", "Engine", "Request", "ServeConfig",
+]
+
+_LAZY = {
+    "Engine": ("repro.serve.engine", "Engine"),
+    "Request": ("repro.serve.engine", "Request"),
+    "Cluster": ("repro.serve.cluster", "Cluster"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)

@@ -1,0 +1,257 @@
+"""Multi-replica serving front-end: data-parallel Engines behind one
+async admission queue.
+
+The paper scales tile-centric GEMM across nodes by giving every node the
+same static task decomposition and letting the runtime place work; the
+serving analogue at request granularity is this module.  ``replicas``
+data-parallel :class:`~repro.serve.engine.Engine` instances (each
+optionally SUMMA tensor-parallel *within* itself via
+``ServeConfig.summa_grid``) share one set of weights and one admission
+front-end:
+
+* **Bounded global queue.**  Total pending across the cluster is capped
+  at ``max_queue × replicas``; beyond that ``submit`` raises
+  :class:`~repro.serve.scheduler.QueueFullError` — backpressure
+  propagates to the caller exactly as on a single engine.
+* **Load-aware routing.**  Each admission goes to the healthy replica
+  with the fewest *outstanding tokens* (prompt + max_new of everything
+  routed there and not yet retired).  Ties (within ``AFFINITY_SLACK``)
+  prefer the replica that last served the request's (bucket, format-set)
+  — keeping that replica's prefix pages and warm executables hot — then
+  the lowest replica id.  Routing is a pure function of the submission
+  sequence, so a fixed request order maps to a fixed placement
+  (deterministic and unit-testable), and per-request results are
+  placement-independent anyway: every replica folds the same
+  ``rng_seed``, so any replica serves any request bit-identically.
+* **Graceful degradation.**  ``run()`` drains every replica on its own
+  worker thread while a monitor samples progress heartbeats (decode
+  steps + retirements).  A replica that throws, or makes no progress for
+  ``stall_timeout_s`` while holding work, is marked unhealthy
+  (``serve.replica_stall`` obs event), its still-queued requests are
+  pulled back (:meth:`ShapeBucketScheduler.drain_pending`) and re-routed
+  to healthy replicas (``serve.reroute``).  Requests already inside the
+  stalled replica's in-flight microbatch cannot be recalled — they
+  surface with ``error`` set rather than hanging the cluster.
+
+``Cluster`` deliberately mirrors the single-engine surface (``submit`` /
+``run`` / ``generate`` / ``warmup`` / ``stats``) so launch scripts and
+benches swap between them on ``ServeConfig.replicas`` alone.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro import obs
+from repro.serve.config import ServeConfig
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import AdmissionError, QueueFullError
+
+__all__ = ["Cluster"]
+
+#: outstanding-token slack within which format/bucket affinity may
+#: override strict least-loaded routing
+AFFINITY_SLACK = 0.25
+
+
+class Cluster:
+    """N data-parallel Engine replicas behind one admission front-end."""
+
+    def __init__(self, cfg, params, config: Optional[ServeConfig] = None,
+                 *, variants: Optional[dict] = None):
+        config = config or ServeConfig()
+        self.config = config
+        self.replicas = [Engine(cfg, params, config, variants=variants)
+                         for _ in range(config.replicas)]
+        self._healthy = [True] * config.replicas
+        # routing state: outstanding token cost per replica, and the
+        # replica that last served each (pad bucket, fset) pair
+        self._outstanding = [0] * config.replicas
+        self._affinity: dict[tuple, int] = {}
+        self._routed: list[list[Request]] = [[] for _ in self.replicas]
+        self._lock = threading.RLock()
+
+    # -- admission / routing ----------------------------------------------
+
+    @staticmethod
+    def _cost(req: Request) -> int:
+        return len(req.prompt) + req.max_new_tokens
+
+    def _affinity_key(self, req: Request) -> tuple:
+        """Routing-affinity key: the best-fit configured pad (coarse —
+        exact bucket choice is the replica's business) plus the format
+        tag, mirroring what makes a replica 'warm' for a request."""
+        L = len(req.prompt)
+        pads = self.replicas[0].scheduler.cfg.pad_lens
+        fits = [p for p in pads if p >= L]
+        return (fits[0] if fits else L, req.fset)
+
+    def _pick_replica(self, req: Request) -> int:
+        cand = [i for i, ok in enumerate(self._healthy)
+                if ok and self.replicas[i].scheduler.pending()
+                < self.config.max_queue]
+        if not cand:
+            raise QueueFullError(
+                "every healthy replica is at queue capacity")
+        best = min(cand, key=lambda i: (self._outstanding[i], i))
+        akey = self._affinity_key(req)
+        if self.config.affinity:
+            warm = self._affinity.get(akey)
+            if warm in cand and warm != best:
+                slack = max(1, int(self._cost(req)
+                                   + AFFINITY_SLACK
+                                   * max(self._outstanding[best], 1)))
+                if self._outstanding[warm] - self._outstanding[best] \
+                        <= slack:
+                    best = warm
+        self._affinity[akey] = best
+        return best
+
+    def submit(self, req: Request) -> int:
+        """Route one request to a replica; returns the replica id.
+        Raises AdmissionError/QueueFullError exactly like Engine.submit."""
+        with self._lock:
+            total_cap = self.config.max_queue * len(self.replicas)
+            if sum(e.scheduler.pending() for e in self.replicas) \
+                    >= total_cap:
+                raise QueueFullError(
+                    f"cluster queue full ({total_cap} pending)")
+            rid = self._pick_replica(req)
+            self.replicas[rid].submit(req)     # may raise AdmissionError
+            req.replica = rid
+            self._outstanding[rid] += self._cost(req)
+            self._routed[rid].append(req)
+            if obs.is_enabled():
+                obs.event("serve.route", "serve", replica=rid,
+                          length=len(req.prompt), fset=req.fset,
+                          outstanding=self._outstanding[rid])
+            return rid
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def warmup(self) -> dict:
+        return {f"replica{i}": e.warmup()
+                for i, e in enumerate(self.replicas)}
+
+    def _settle(self) -> None:
+        """Post-drain bookkeeping: outstanding cost and routed lists only
+        keep requests still in flight."""
+        with self._lock:
+            for rid, lst in enumerate(self._routed):
+                live = [r for r in lst if not r.done]
+                self._outstanding[rid] = sum(self._cost(r) for r in live)
+                self._routed[rid] = live
+
+    def run(self) -> None:
+        """Drain every replica concurrently; re-route on stall/crash."""
+        work = [i for i, e in enumerate(self.replicas)
+                if self._healthy[i] and e.scheduler.pending()]
+        while work:
+            errors: dict[int, BaseException] = {}
+
+            def drain(rid: int) -> None:
+                try:
+                    self.replicas[rid].run()
+                except BaseException as e:     # surfaced via stall path
+                    errors[rid] = e
+
+            threads = {rid: threading.Thread(target=drain, args=(rid,),
+                                             daemon=True)
+                       for rid in work}
+            for t in threads.values():
+                t.start()
+            stalled = self._watch(threads, errors)
+            rerouted = []
+            for rid in stalled:
+                self._healthy[rid] = False
+                pulled = self.replicas[rid].scheduler.drain_pending()
+                obs.event("serve.replica_stall", "serve", replica=rid,
+                          error=str(errors.get(rid, "no progress")),
+                          rerouted=len(pulled))
+                with self._lock:
+                    for r in pulled:
+                        self._routed[rid].remove(r)
+                    self._outstanding[rid] = 0
+                rerouted.extend(pulled)
+                # in-flight requests the stalled replica never finished
+                for r in self._routed[rid]:
+                    if not r.done and not r.error:
+                        r.error = ("ReplicaStall: replica "
+                                   f"{rid} stalled mid-flight")
+            for r in rerouted:
+                try:
+                    self.submit(r)
+                    if obs.is_enabled():
+                        obs.event("serve.reroute", "serve",
+                                  replica=r.replica)
+                except (AdmissionError, QueueFullError) as e:
+                    r.error = f"{type(e).__name__}: {e}"
+            self._settle()
+            work = [i for i, e in enumerate(self.replicas)
+                    if self._healthy[i] and e.scheduler.pending()]
+
+    def _watch(self, threads: dict, errors: dict) -> list[int]:
+        """Join worker threads while sampling progress heartbeats.
+        Returns the replica ids declared stalled (crashed or no heartbeat
+        movement for ``stall_timeout_s`` while others finished)."""
+
+        def beat(rid: int) -> int:
+            m = self.replicas[rid].metrics
+            return (int(m.value("serve.decode_steps"))
+                    + int(m.value("serve.requests_served"))
+                    + int(m.value("serve.refills")))
+
+        timeout = self.config.stall_timeout_s
+        last = {rid: (beat(rid), time.monotonic()) for rid in threads}
+        stalled: list[int] = []
+        live = dict(threads)
+        while live:
+            for rid, t in list(live.items()):
+                t.join(timeout=min(0.05, timeout / 10))
+                if not t.is_alive():
+                    del live[rid]
+                    if rid in errors:
+                        stalled.append(rid)
+                    continue
+                b = beat(rid)
+                prev, t0 = last[rid]
+                if b != prev:
+                    last[rid] = (b, time.monotonic())
+                elif time.monotonic() - t0 > timeout:
+                    # abandon the wedged daemon thread: if it ever wakes
+                    # it finds its queue drained and exits idle
+                    stalled.append(rid)
+                    del live[rid]
+        return stalled
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Route + drain a request list (mirrors ``Engine.generate``)."""
+        for r in requests:
+            try:
+                self.submit(r)
+            except (AdmissionError, QueueFullError) as e:
+                r.error = f"{type(e).__name__}: {e}"
+        self.run()
+        return requests
+
+    # -- reporting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        per = [e.stats() for e in self.replicas]
+        return {
+            "replicas": len(self.replicas),
+            "healthy": sum(self._healthy),
+            "requests": {
+                "served": sum(p["requests"]["served"] for p in per),
+                "rejected": sum(p["requests"]["rejected"] for p in per),
+            },
+            "tokens": {
+                k: sum(p["tokens"][k] for p in per)
+                for k in ("prompt", "padded", "generated")
+            },
+            "decode_steps": sum(p["decode_steps"] for p in per),
+            "post_warmup_recompiles": sum(
+                p["compile"]["post_warmup_recompiles"] for p in per),
+            "per_replica": per,
+        }

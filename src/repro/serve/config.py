@@ -1,0 +1,168 @@
+"""ServeConfig: the one public construction surface of the serve stack.
+
+``Engine.__init__`` grew a kwarg per PR (buckets, waste cap, refill,
+prefix cache, SUMMA grid, seeds, ...); the cluster front-end would have
+doubled that surface again.  This module freezes the whole knob set into
+one validated dataclass consumed by :class:`~repro.serve.engine.Engine`,
+:class:`~repro.serve.cluster.Cluster`, ``launch/serve.py``, and the
+examples/benches::
+
+    from repro.serve import Engine, ServeConfig
+    eng = Engine(cfg, params, ServeConfig(buckets=(8, 16), max_batch=4))
+
+The legacy kwargs (``Engine(cfg, params, max_batch=4, scheduler=...)``)
+keep working for one release through :func:`config_from_legacy`, which
+maps them onto a ServeConfig and warns once per process (a
+``DeprecationWarning`` plus a ``serve.deprecated_kwargs`` obs event).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro import obs
+from repro.serve.scheduler import SchedulerConfig
+
+__all__ = ["ServeConfig", "config_from_legacy"]
+
+#: engine defaults when neither ServeConfig.buckets nor
+#: ArchConfig.serve_buckets specify pad lengths
+DEFAULT_PAD_LENS = (16, 32, 64, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every serve-stack knob, validated once at construction.
+
+    Scheduler shape policy:
+
+    * ``buckets`` — configured pad lengths (None → ``ArchConfig.
+      serve_buckets``, then :data:`DEFAULT_PAD_LENS`).
+    * ``waste_cap`` / ``max_batch`` / ``max_queue`` / ``max_dynamic`` —
+      see :class:`~repro.serve.scheduler.SchedulerConfig`.
+
+    Engine:
+
+    * ``max_seq`` — KV-cache length (bounds prompt+generation).
+    * ``rng_seed`` — engine PRNG seed; per-request streams fold the
+      request seed and token index into it (replica-independent).
+    * ``summa_grid`` — run the SUMMA self-check for this grid at engine
+      construction (None → ``ArchConfig.summa_grid``).
+    * ``refill`` — mid-decode slot retire-and-refill (masked mode).
+    * ``prefix_cache`` — block-paged prefix-KV reuse (masked mode).
+    * ``prefix_pages`` — page-pool capacity: the prefix cache LRU-evicts
+      digests once this many pages are resident (was a hardcoded entry
+      count pre-paging).
+    * ``page_tokens`` — KV positions per page; bucket prefix points and
+      chunk skips align down to this granularity.
+    * ``chunked_prefill`` — serve prompts longer than every configured
+      bucket by chunked paged prefill through pre-warmed executables
+      (masked mode; off → such prompts use cold exact-length buckets).
+    * ``warmup`` — pre-resolve plans + pre-compile buckets at startup
+      (honored by launch/cluster; ``Engine.warmup()`` stays explicit).
+
+    Cluster:
+
+    * ``replicas`` — data-parallel engine count behind the front-end.
+    * ``affinity`` — prefer the replica that last served a request's
+      (bucket, format-set) when load is tied, keeping prefix pages and
+      warm plans hot per replica.
+    * ``stall_timeout_s`` — no-progress window after which a replica is
+      declared stalled and its pending work re-routed.
+    """
+    buckets: Optional[tuple] = None
+    waste_cap: float = 0.75
+    max_batch: int = 4
+    max_queue: int = 1024
+    max_dynamic: int = 8
+    max_seq: int = 256
+    rng_seed: int = 0
+    summa_grid: Optional[tuple] = None
+    refill: bool = True
+    prefix_cache: bool = True
+    prefix_pages: int = 128
+    page_tokens: int = 4
+    chunked_prefill: bool = True
+    warmup: bool = True
+    replicas: int = 1
+    affinity: bool = True
+    stall_timeout_s: float = 10.0
+
+    def __post_init__(self):
+        if self.buckets is not None:
+            object.__setattr__(self, "buckets",
+                               tuple(sorted(set(int(b)
+                                                for b in self.buckets))))
+        for field, lo in (("max_batch", 1), ("max_queue", 1),
+                          ("max_dynamic", 1), ("max_seq", 2),
+                          ("prefix_pages", 1), ("page_tokens", 1),
+                          ("replicas", 1)):
+            if getattr(self, field) < lo:
+                raise ValueError(f"{field} {getattr(self, field)} < {lo}")
+        if not 0.0 <= self.waste_cap <= 1.0:
+            raise ValueError(f"waste_cap {self.waste_cap} not in [0, 1]")
+        if self.stall_timeout_s <= 0:
+            raise ValueError(f"stall_timeout_s {self.stall_timeout_s} <= 0")
+
+    def pad_lens(self, arch_buckets: Optional[tuple] = None) -> tuple:
+        """Configured pad lengths with the documented fallback chain."""
+        return tuple(self.buckets or arch_buckets or DEFAULT_PAD_LENS)
+
+    def scheduler_config(self,
+                         arch_buckets: Optional[tuple] = None,
+                         ) -> SchedulerConfig:
+        return SchedulerConfig(pad_lens=self.pad_lens(arch_buckets),
+                               waste_cap=self.waste_cap,
+                               max_batch=self.max_batch,
+                               max_queue=self.max_queue,
+                               max_dynamic=self.max_dynamic)
+
+
+#: legacy Engine kwarg -> ServeConfig field (None = structured mapping)
+_LEGACY_FIELDS = {
+    "max_batch": "max_batch", "max_seq": "max_seq",
+    "rng_seed": "rng_seed", "summa_grid": "summa_grid",
+    "refill": "refill", "prefix_cache": "prefix_cache",
+    "scheduler": None, "prefix_entries": None,
+}
+
+_warned_legacy = False
+
+
+def config_from_legacy(legacy: dict) -> ServeConfig:
+    """Map pre-ServeConfig ``Engine`` kwargs onto a ServeConfig.
+
+    Warns once per process: a ``DeprecationWarning`` and a
+    ``serve.deprecated_kwargs`` obs event.  Unknown kwargs raise
+    ``TypeError`` exactly like a normal bad keyword would."""
+    global _warned_legacy
+    unknown = set(legacy) - set(_LEGACY_FIELDS)
+    if unknown:
+        raise TypeError(
+            f"Engine() got unexpected keyword argument(s) "
+            f"{sorted(unknown)}")
+    if not _warned_legacy:
+        _warned_legacy = True
+        warnings.warn(
+            f"Engine keyword arguments {sorted(legacy)} are deprecated; "
+            f"pass a repro.serve.ServeConfig instead",
+            DeprecationWarning, stacklevel=3)
+        obs.event("serve.deprecated_kwargs", "serve",
+                  kwargs=sorted(legacy))
+    fields = {}
+    for name, value in legacy.items():
+        target = _LEGACY_FIELDS[name]
+        if target is not None:
+            fields[target] = value
+    sched = legacy.get("scheduler")
+    if sched is not None:
+        fields.update(buckets=sched.pad_lens, waste_cap=sched.waste_cap,
+                      max_batch=sched.max_batch, max_queue=sched.max_queue,
+                      max_dynamic=sched.max_dynamic)
+    entries = legacy.get("prefix_entries")
+    if entries is not None:
+        # an old entry held one pad//2-position slab; pages are finer, so
+        # grant pages generously enough that old capacity is not shrunk
+        fields["prefix_pages"] = max(1, int(entries)) * 4
+    return ServeConfig(**fields)

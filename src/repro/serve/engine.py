@@ -1,11 +1,11 @@
 """Serving engine: shape-bucketed continuous batching with token-level
-continuous decode, plan-warmed dispatch, and prefix-reuse prefill.
+continuous decode, plan-warmed dispatch, and block-paged prefix-KV reuse.
 
 Requests are admitted into :class:`repro.serve.scheduler.ShapeBucketScheduler`
 and drained as fixed-shape microbatches — (bucket batch, padded length,
 format-set tag) — so the steady state re-uses pre-compiled executables and
 pre-resolved GEMM plans (``tune.resolve_plans_for_buckets``) and never
-recompiles or re-plans.  Three mechanisms make batching *pay*:
+recompiles or re-plans.  Four mechanisms make batching *pay*:
 
 * **On-device sampling.**  The jitted prefill/decode steps end in a fused
   greedy/categorical sampler (per-request PRNG streams via
@@ -19,31 +19,48 @@ recompiles or re-plans.  Three mechanisms make batching *pay*:
   the same bucket is pulled into the freed row — its prefill chunked into
   the decode stream as a batch-1 call — so finished requests never squat
   in their slots while neighbours keep decoding.
-* **Prefix-reuse prefill.**  Each bucket has a prefix length
-  ``P = pad_len // 2``; KV blocks for positions ``0..P-1`` are cached by a
-  digest of the prefix tokens (:mod:`repro.serve.prefix`).  When every
-  real row of a microbatch (or a refill) hits the cache, the prefix KV is
-  scattered in and only the suffix is prefilled — shared system prompts
-  are computed once, within and across microbatches.
+* **Block-paged prefix reuse.**  Each bucket has a prefix point
+  ``P = pad_len // 2`` aligned down to the KV page size; KV for positions
+  ``0..P-1`` is cached as ref-counted fixed-size *pages* keyed by a
+  digest chain over the prefix tokens (:mod:`repro.serve.kv_pages`).
+  Pages are shared across buckets (and chunked long-prompt prefills)
+  within the engine: when every real row of a microbatch (or a refill)
+  covers its chain, the pages are scattered in and only the suffix is
+  prefilled.  In-flight rows pin their pages through per-row block
+  tables, released at retirement — LRU eviction can never free KV a live
+  row still references.
+* **Chunked long-prompt prefill.**  Prompts longer than every configured
+  bucket no longer force a cold exact-length compile: they round up to a
+  multiple of the largest bucket width ``C`` and prefill chunk-by-chunk
+  through ONE pre-warmed ``[B, C]`` executable with a *traced* position
+  offset, then decode through the shared traced-pad-length decode step —
+  zero recompiles at any admissible prompt length.  Leading whole chunks
+  whose page chains are cached are skipped (paged reuse at chunk scale).
 
 ``Engine.stats()`` exposes the counters CI and the serve-throughput
 benchmark assert on (bucket hits/misses, post-warmup recompiles,
-microbatch occupancy, refills, prefix-cache hit rate, per-request
-latency).
+microbatch occupancy, refills, prefix-cache hit rate, page-pool
+residency, per-request latency).
 
 Exactness: microbatches are *right*-padded, so under causal attention a
 request's real tokens never attend padding; decode threads per-request
 positions (RoPE), per-row cache slots, and a KV visibility mask through
 ``forward_decode``.  Full-attention non-MoE families are therefore
 bit-exact with unbatched serving ("masked" mode) — including refilled
-rows and prefix-reused prefills.  State-carrying mixers (Mamba/xLSTM),
-sliding windows, and MoE families batch equal-length-only ("equal" mode,
-also exact); they cannot mask per-row progress out of their state, so
-refill and prefix reuse are masked-mode-only.
+rows, page-reused prefills, and chunked long-prompt prefills (a cached
+page is bit-identical to what a fresh prefill would produce; a chunked
+scan sees the same caches, tokens, and positions as a monolithic one).
+State-carrying mixers (Mamba/xLSTM), sliding windows, and MoE families
+batch equal-length-only ("equal" mode, also exact); they cannot mask
+per-row progress out of their state, so refill, paging, and chunking are
+masked-mode-only.
 
-Format-set variants: ``Engine(..., variants={tag: params})`` serves a
-mixed-format request stream — each request carries a tag and is bucketed
-by (shape, tag), dispatching to that tag's weights.
+Construction: ``Engine(cfg, params, ServeConfig(...))`` is the public
+path (see :mod:`repro.serve.config`); the pre-ServeConfig kwargs still
+work through a deprecation shim that warns once.  Format-set variants:
+``Engine(..., variants={tag: params})`` serves a mixed-format request
+stream — each request carries a tag and is bucketed by (shape, tag),
+dispatching to that tag's weights.
 """
 from __future__ import annotations
 
@@ -59,11 +76,14 @@ from repro import obs
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.obs.metrics import MetricsRegistry
-from repro.serve.prefix import PrefixCache, prefix_digest
+from repro.serve.config import (DEFAULT_PAD_LENS, ServeConfig,
+                                config_from_legacy)
+from repro.serve.kv_pages import (BlockTable, PagePool, PagedPrefixCache,
+                                  page_digests)
 from repro.serve.scheduler import (AdmissionError, BucketKey, QueueFullError,
-                                   SchedulerConfig, ShapeBucketScheduler)
+                                   ShapeBucketScheduler)
 
-DEFAULT_PAD_LENS = (16, 32, 64, 128)
+__all__ = ["DEFAULT_PAD_LENS", "Engine", "Request", "ServeConfig"]
 
 
 @dataclasses.dataclass(eq=False)
@@ -82,6 +102,7 @@ class Request:
     latency_s: float = 0.0        # admit → retire wall-clock
     dispatch_paths: tuple = ()    # GEMM paths resolved for its bucket
     error: str = ""               # admission failure (generate() sets it)
+    replica: int = -1             # cluster: replica id that served it
 
 
 @dataclasses.dataclass
@@ -94,6 +115,7 @@ class _Row:
     first_tok: Optional[int] = None   # refill: token sampled at prefill
     active: bool = False
     cold: bool = False
+    table: Optional[BlockTable] = None    # pages pinned by this row
 
 
 def _sample_tokens(logits, temps, keys, n):
@@ -135,13 +157,14 @@ def _prefill_collect(params, cfg: ArchConfig, tokens, caches):
     return logits, caches
 
 
-def _prefill_suffix_collect(params, cfg: ArchConfig, tokens, caches,
-                            start: int):
+def _prefill_suffix_collect(params, cfg: ArchConfig, tokens, caches, start):
     """Continuation prefill: scan tokens for positions ``start .. start+S-1``
     into caches whose rows already hold the (reused) prefix KV for
-    positions ``0 .. start-1``.  Numerically identical to the tail of a
-    full prefill — each step sees the same cache contents, token, and
-    scalar position."""
+    positions ``0 .. start-1``.  Numerically identical to the matching
+    span of a full prefill — each step sees the same cache contents,
+    token, and position.  ``start`` is a *traced* scalar, so one compiled
+    executable serves every chunk offset of a chunked long-prompt
+    prefill (and every bucket's suffix point)."""
     B, S = tokens.shape
 
     def step(carry, s):
@@ -156,15 +179,19 @@ def _prefill_suffix_collect(params, cfg: ArchConfig, tokens, caches,
 
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
-                 max_seq: int = 256, rng_seed: int = 0,
-                 summa_grid: Optional[tuple] = None,
-                 variants: Optional[dict] = None,
-                 scheduler: Optional[SchedulerConfig] = None,
-                 refill: bool = True, prefix_cache: bool = True,
-                 prefix_entries: int = 32):
+    def __init__(self, cfg: ArchConfig, params,
+                 config: Optional[ServeConfig] = None, *,
+                 variants: Optional[dict] = None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either a ServeConfig or legacy keyword "
+                    "arguments, not both")
+            config = config_from_legacy(legacy)
+        config = config or ServeConfig()
+        self.config = config
         self.cfg, self.params = cfg, params
-        self.max_batch, self.max_seq = max_batch, max_seq
+        self.max_batch, self.max_seq = config.max_batch, config.max_seq
         self.variants = {"default": params, **(variants or {})}
         # tune-once at setup: resolve a GEMM plan for every mixed-precision
         # layer at the decode batch size, so the jitted decode/prefill
@@ -172,12 +199,13 @@ class Engine:
         from repro.tune import dispatch as _tune
         self._tune = _tune
         _tune.warm_registry()
-        self.gemm_plans = _tune.tune_linear_params(params, m_hint=max_batch)
-        # distributed SUMMA path (selectable from ArchConfig or explicitly):
+        self.gemm_plans = _tune.tune_linear_params(
+            params, m_hint=self.max_batch)
+        # distributed SUMMA path (selectable from ArchConfig or ServeConfig):
         # validate it against the single-device reference at this config's
         # tile/policy/format set and warm the distributed plan key.
         self.summa_report = None
-        grid = summa_grid or cfg.summa_grid
+        grid = config.summa_grid or cfg.summa_grid
         if grid:
             from repro.core.summa import config_selfcheck
             self.summa_report = config_selfcheck(cfg, grid)
@@ -188,32 +216,43 @@ class Engine:
                                   and cfg.n_experts == 0
                                   and cfg.frontend == "none")
                      else "equal")
-        # retire-and-refill + prefix reuse need per-row cache progress and
-        # snapshot-able KV blocks — full-attention masked mode only
-        self.refill_enabled = bool(refill) and self.mode == "masked"
-        self.prefix = (PrefixCache(prefix_entries)
-                       if prefix_cache and self.mode == "masked" else None)
-        sched_cfg = scheduler or SchedulerConfig(
-            pad_lens=tuple(cfg.serve_buckets or DEFAULT_PAD_LENS),
-            max_batch=max_batch)
+        # retire-and-refill + paged prefix reuse + chunked prefill need
+        # per-row cache progress and snapshot-able KV blocks —
+        # full-attention masked mode only
+        self.refill_enabled = config.refill and self.mode == "masked"
+        if config.prefix_cache and self.mode == "masked":
+            self.pool = PagePool(config.page_tokens, config.prefix_pages)
+            self.prefix = PagedPrefixCache(self.pool)
+        else:
+            self.pool = None
+            self.prefix = None
+        sched_cfg = config.scheduler_config(cfg.serve_buckets)
         # drop configured buckets that cannot decode even one token within
         # the KV cache (pad_len + 1 > max_seq) instead of crashing warmup
         fitting = tuple(p for p in sched_cfg.pad_lens
-                        if p + 1 <= max_seq)
+                        if p + 1 <= self.max_seq)
         if not fitting:
             raise ValueError(
-                f"no serve bucket fits max_seq={max_seq} "
+                f"no serve bucket fits max_seq={self.max_seq} "
                 f"(pad_lens={sched_cfg.pad_lens})")
         if fitting != sched_cfg.pad_lens:
             sched_cfg = dataclasses.replace(sched_cfg, pad_lens=fitting)
+        # chunked long-prompt prefill: prompts longer than every configured
+        # bucket round up to a multiple of the largest bucket width and
+        # prefill through the pre-warmed [B, C] chunk executable
+        self._max_cfg_pad = max(fitting)
+        self._chunk = (self._max_cfg_pad
+                       if config.chunked_prefill and self.mode == "masked"
+                       else 0)
+        self._chunk_warmed = False
         # per-engine metrics registry (shared with the scheduler) so two
         # engines in one process never clobber each other's counters
         self.metrics = MetricsRegistry()
         # prompts longer than every bucket are still admissible up to the
-        # KV-cache bound — they serve through exact-length cold buckets
+        # KV-cache bound — chunked when possible, exact-length cold else
         self.scheduler = ShapeBucketScheduler(
             sched_cfg, fsets=tuple(self.variants), mode=self.mode,
-            max_prompt=max_seq - 1, metrics=self.metrics)
+            max_prompt=self.max_seq - 1, metrics=self.metrics)
 
         # --- compile counters (incremented at jit *trace* time only) -----
         self._warmup_active = False
@@ -243,8 +282,11 @@ class Engine:
             return tok0, caches
 
         def prefill_sfx_fn(p, toks, caches, lengths, temps, keys, start):
-            # prefix-reuse continuation: caches already hold positions
-            # 0..start-1; only the suffix runs
+            # continuation prefill at traced offset ``start``: caches
+            # already hold positions 0..start-1 (reused pages or earlier
+            # chunks).  The sampled token is only meaningful when a row's
+            # last real position falls inside this span — mid-chunk calls
+            # discard it (the clamped gather reads garbage, harmlessly)
             note()
             logits, caches = _prefill_suffix_collect(p, cfg, toks, caches,
                                                      start)
@@ -259,17 +301,19 @@ class Engine:
             # cache slot (retire-and-refill) and PRNG stream; positions,
             # visibility mask, sampling AND the slot advance all derive on
             # device, so the steady-state loop feeds (tok, caches, slots)
-            # straight back with zero per-step host->device transfers
+            # straight back with zero per-step host->device transfers.
+            # ``pad_len`` is traced: ONE executable per batch width serves
+            # every bucket length, configured or chunked-dynamic
             note()
-            positions = lengths + slots - jnp.int32(pad_len)
-            kv_pos = jnp.arange(max_seq)
+            positions = lengths + slots - pad_len
+            kv_pos = jnp.arange(self.max_seq)
             kv_valid = ((kv_pos[None, :] < lengths[:, None])
                         | ((kv_pos[None, :] >= pad_len)
                            & (kv_pos[None, :] <= slots[:, None])))
             logits, caches = T.forward_decode(p, cfg, tok, caches,
                                               positions, slot=slots,
                                               kv_valid=kv_valid)
-            n = slots - jnp.int32(pad_len) + 1
+            n = slots - pad_len + 1
             nxt = _sample_tokens(logits[:, 0], temps, keys, n)
             return nxt, caches, slots + active
 
@@ -282,41 +326,60 @@ class Engine:
             return nxt, caches
 
         self._prefill = jax.jit(prefill_fn)
-        self._prefill_sfx = jax.jit(prefill_sfx_fn, static_argnums=(6,))
-        self._decode_cont = jax.jit(decode_cont_fn, static_argnums=(8,))
+        self._prefill_sfx = jax.jit(prefill_sfx_fn)
+        self._decode_cont = jax.jit(decode_cont_fn)
         self._decode_sample = jax.jit(decode_sample_fn)
 
         # KV data movement helpers (no model graph → not trace-counted):
-        # slice a prefix slab out of one cache row / scatter a slab or a
-        # whole batch-1 cache into a row of the batch cache
-        def extract_prefix_fn(caches, row, plen):
+        # slice one page out of a cache row / scatter a page or a whole
+        # batch-1 cache into a row of the batch cache
+        def extract_page_fn(caches, row, start, width):
             def one(c):
                 r = jax.lax.dynamic_slice_in_dim(c, row, 1, axis=1)
-                return jax.lax.slice_in_dim(r, 0, plen, axis=2)
+                return jax.lax.dynamic_slice_in_dim(r, start, width, axis=2)
             return jax.tree.map(one, caches)
 
-        def scatter_fn(caches, slab, row):
+        def scatter_page_fn(caches, page, row, start):
             def one(c, s):
-                start = (jnp.int32(0), row) + (jnp.int32(0),) * (c.ndim - 2)
+                at = ((jnp.int32(0), row, start)
+                      + (jnp.int32(0),) * (c.ndim - 3))
                 return jax.lax.dynamic_update_slice(
-                    c, s.astype(c.dtype), start)
+                    c, s.astype(c.dtype), at)
+            return jax.tree.map(one, caches, page)
+
+        def scatter_row_fn(caches, slab, row):
+            def one(c, s):
+                at = (jnp.int32(0), row) + (jnp.int32(0),) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    c, s.astype(c.dtype), at)
             return jax.tree.map(one, caches, slab)
 
-        self._extract_prefix = jax.jit(extract_prefix_fn,
-                                       static_argnums=(2,))
-        self._scatter_row = jax.jit(scatter_fn)
-        self._base_key = jax.random.PRNGKey(rng_seed)
+        self._extract_page = jax.jit(extract_page_fn, static_argnums=(3,))
+        self._scatter_page = jax.jit(scatter_page_fn)
+        self._scatter_row = jax.jit(scatter_row_fn)
+        self._base_key = jax.random.PRNGKey(config.rng_seed)
 
     def _req_key(self, req: Request) -> np.ndarray:
         """Per-request base PRNG key — a fold of the engine seed and the
         request's ``seed``, so batched/refilled/unbatched serving all draw
-        the same stream for the same request."""
+        the same stream for the same request (and any replica of a
+        same-seeded cluster draws identically)."""
         return np.asarray(jax.random.fold_in(self._base_key,
                                              int(req.seed)))
 
     def _prefix_len(self, pad_len: int) -> int:
-        """Reusable-prefix length of a bucket (0 → prefix reuse off)."""
-        return pad_len // 2 if self.prefix is not None else 0
+        """Reusable-prefix point of a bucket: ``pad_len // 2`` aligned
+        down to whole KV pages (0 → prefix reuse off for this bucket)."""
+        if self.prefix is None:
+            return 0
+        pt = self.pool.page_tokens
+        return (pad_len // 2) // pt * pt
+
+    def _is_chunked(self, pad_len: int) -> bool:
+        """Buckets wider than every configured pad serve through chunked
+        prefill when their width is a whole number of chunks."""
+        return bool(self._chunk) and pad_len > self._max_cfg_pad \
+            and pad_len % self._chunk == 0
 
     # ------------------------------------------------------------------
     # warmup: pre-resolve tune plans + pre-compile every configured bucket
@@ -324,7 +387,8 @@ class Engine:
 
     def warmup(self, keys=None) -> dict:
         """Pre-resolve GEMM plans and pre-compile the prefill/decode
-        executables for every configured bucket (or the given keys), so
+        executables for every configured bucket (or the given keys), plus
+        the chunk executables that serve arbitrarily long prompts, so
         steady-state serving never recompiles.  Returns a report."""
         keys = list(keys) if keys is not None else [
             k for k, b in self.scheduler.buckets.items() if b.configured]
@@ -350,6 +414,13 @@ class Engine:
                          **plan_table.get((key.fset, bucket.batch), {})}
                 bucket.paths = tuple({p.path for p in plans.values()})
                 report[str(key)] = {"paths": sorted(bucket.paths)}
+            if self._chunk and keys:
+                for fset in sorted({k.fset for k in keys}):
+                    with obs.span("serve.warmup", "serve",
+                                  bucket=f"chunk{self._chunk}/{fset}",
+                                  batch=self.scheduler.cfg.max_batch):
+                        self._compile_chunk(fset)
+                self._chunk_warmed = True
         finally:
             self._warmup_active = False
             self._warmed_once = True
@@ -363,7 +434,7 @@ class Engine:
     def _compile_bucket(self, key: BucketKey, batch: int) -> None:
         """Trace+compile every executable the bucket can dispatch in the
         steady state on dummy data (jit caches all of them): full prefill,
-        suffix prefill (prefix reuse), the continuous decode step, and —
+        suffix prefill (page reuse), the continuous decode step, and —
         when refill is on — their batch-1 refill twins."""
         params = self.variants[key.fset]
         S = key.pad_len
@@ -377,10 +448,14 @@ class Engine:
         if self.mode == "masked":
             P = self._prefix_len(S)
             if P:
-                slab = self._extract_prefix(caches, jnp.int32(0), P)
-                caches = self._scatter_row(caches, slab, jnp.int32(0))
+                pt = self.pool.page_tokens
+                page = self._extract_page(caches, jnp.int32(0),
+                                          jnp.int32(0), pt)
+                caches = self._scatter_page(caches, page, jnp.int32(0),
+                                            jnp.int32(0))
                 tok0, caches = self._prefill_sfx(
-                    params, toks[:, P:], caches, lengths, temps, kvec, P)
+                    params, toks[:, P:], caches, lengths, temps, kvec,
+                    jnp.int32(P))
             if self.refill_enabled:
                 c1 = T.init_cache(self.cfg, 1, self.max_seq)
                 t1, c1 = self._prefill(params, toks[:1], c1, lengths[:1],
@@ -388,17 +463,39 @@ class Engine:
                 if P:
                     t1, c1 = self._prefill_sfx(
                         params, toks[:1, P:], c1, lengths[:1], temps[:1],
-                        kvec[:1], P)
+                        kvec[:1], jnp.int32(P))
                 caches = self._scatter_row(caches, c1, jnp.int32(0))
             slots = jnp.full((batch,), S, jnp.int32)
             active = jnp.ones((batch,), jnp.int32)
             out = self._decode_cont(params, tok0[:, None], caches, lengths,
-                                    slots, active, temps, kvec, S)
+                                    slots, active, temps, kvec,
+                                    jnp.int32(S))
         else:
             out = self._decode_sample(params, tok0[:, None], caches,
                                       jnp.int32(S), temps, kvec,
                                       jnp.ones((batch,), jnp.int32))
         jax.block_until_ready(out[0])
+
+    def _compile_chunk(self, fset: str) -> None:
+        """Compile the ``[B, C]`` (and refill ``[1, C]``) chunk-prefill
+        executables.  The traced start offset means these two cover every
+        chunk of every long bucket; the traced-pad decode step compiled by
+        ``_compile_bucket`` already covers long-bucket decoding."""
+        params = self.variants[fset]
+        C = self._chunk
+        B = self.scheduler.cfg.max_batch
+        toks = jnp.zeros((B, C), jnp.int32)
+        lengths = jnp.full((B,), C, jnp.int32)
+        temps = jnp.zeros((B,), jnp.float32)
+        kvec = jnp.tile(self._base_key[None], (B, 1))
+        caches = T.init_cache(self.cfg, B, self.max_seq)
+        tok, _ = self._prefill_sfx(params, toks, caches, lengths, temps,
+                                   kvec, jnp.int32(0))
+        if self.refill_enabled:
+            c1 = T.init_cache(self.cfg, 1, self.max_seq)
+            tok, _ = self._prefill_sfx(params, toks[:1], c1, lengths[:1],
+                                       temps[:1], kvec[:1], jnp.int32(0))
+        jax.block_until_ready(tok)
 
     # ------------------------------------------------------------------
     # serving
@@ -411,9 +508,13 @@ class Engine:
         ``pad_len + max_new − 2`` (the final sampled token is never written
         back), and every co-batched request passed this same check, so the
         per-request bound ``pad_len + max_new − 1 ≤ max_seq`` covers the
-        batch maximum too.  A request whose *padded* length breaks the
-        bound but whose exact length fits falls back to an exact-length
-        (cold) bucket instead of being rejected.
+        batch maximum too.
+
+        Prompts longer than every configured bucket round up to a chunk
+        multiple and serve through a chunked-prefill bucket (pre-warmed
+        executables — no recompile).  A request whose padded/chunked
+        length breaks the KV bound but whose exact length fits falls back
+        to an exact-length (cold) bucket instead of being rejected.
 
         All checks run against a *prospective* (commit=False) bucket key,
         so a rejected request never creates/evicts buckets or skews the
@@ -429,8 +530,14 @@ class Engine:
         except AdmissionError:
             self.scheduler.reject()
             raise
-        use_exact = False
-        if key.pad_len + req.max_new_tokens - 1 > self.max_seq:
+        use_exact = use_chunk = False
+        if self._chunk and L > self._max_cfg_pad:
+            pad = -(-L // self._chunk) * self._chunk
+            if pad + req.max_new_tokens - 1 <= self.max_seq:
+                use_chunk = True
+                chunk_pad = pad
+        if not use_chunk \
+                and key.pad_len + req.max_new_tokens - 1 > self.max_seq:
             if L + req.max_new_tokens - 1 <= self.max_seq:
                 use_exact = True
             else:
@@ -440,8 +547,16 @@ class Engine:
                     f"{req.max_new_tokens} new tokens exceeds max_seq "
                     f"{self.max_seq}")
         # definitely admissible — commit the bucket choice
-        key = (self.scheduler.exact_bucket(L, req.fset) if use_exact
-               else self.scheduler.bucket_for(L, req.fset))
+        if use_chunk:
+            key = self.scheduler.exact_bucket(chunk_pad, req.fset)
+            bucket = self.scheduler.buckets[key]
+            if self._chunk_warmed and not bucket.warmed:
+                # served entirely through pre-warmed chunk executables
+                bucket.warmed = True
+        elif use_exact:
+            key = self.scheduler.exact_bucket(L, req.fset)
+        else:
+            key = self.scheduler.bucket_for(L, req.fset)
         req._t_admit = time.perf_counter()
         return self.scheduler.admit(req, L, req.fset, key=key)
 
@@ -481,7 +596,8 @@ class Engine:
                   t0: float) -> None:
         """Retire the request in slot ``i``: collect its tokens from the
         materialized step history, stamp latency *now* (the step at which
-        it finished, not the microbatch end), and record accounting."""
+        it finished, not the microbatch end), release the KV pages the row
+        pinned, and record accounting."""
         r = row.req
         m = self.metrics
         n_new = r.max_new_tokens
@@ -496,6 +612,9 @@ class Engine:
         r.cold = row.cold
         r.dispatch_paths = bucket.paths
         r.latency_s = time.perf_counter() - getattr(r, "_t_admit", t0)
+        if row.table is not None:
+            row.table.release()
+            row.table = None
         row.req, row.active = None, False
         bucket.served += 1
         bucket.real_tokens += row.length
@@ -574,7 +693,7 @@ class Engine:
             caches = T.init_cache(self.cfg, B, self.max_seq)
             cur, caches = self._prefill_rows(
                 bucket, params, caches, toks, lengths, temps, keys,
-                n_real, P)
+                n_real, P, rows)
             devbuf.append(cur)
 
             def process_retirements() -> bool:
@@ -628,7 +747,7 @@ class Engine:
                 while any(row.active for row in rows):
                     cur, caches, slots_d = self._decode_cont(
                         params, cur[:, None], caches, lengths_d, slots_d,
-                        active_d, temps_d, keys_d, S)
+                        active_d, temps_d, keys_d, jnp.int32(S))
                     devbuf.append(cur)
                     steps += 1
                     for i in range(B):
@@ -645,65 +764,158 @@ class Engine:
         if n_real > 1:
             m.counter("serve.microbatch.multi").inc()
 
+    # -- prefill paths (full / page-reused suffix / chunked) --------------
+
+    def _row_digests(self, fset: str, toks, lengths, i: int, P: int):
+        """Page-digest chain for row ``i``'s prefix span (None → row has
+        no reusable prefix: too short or paging disabled)."""
+        if not P or lengths[i] <= P:
+            return None
+        return page_digests(fset, toks[i, :P], self.pool.page_tokens)
+
+    def _scatter_chain(self, caches, digests, row: int) -> tuple:
+        """Commit a cached chain into ``row``: LRU-refresh + scatter each
+        page and pin them all in a fresh block table.  Returns
+        ``(caches, table)``."""
+        pt = self.pool.page_tokens
+        pids = self.prefix.lookup(digests)
+        self.prefix.hits += 1
+        table = BlockTable(self.pool)
+        for j, pid in enumerate(pids):
+            caches = self._scatter_page(caches, self.pool.payload(pid),
+                                        jnp.int32(row), jnp.int32(j * pt))
+            table.append_page(pid)
+        return caches, table
+
+    def _insert_chain_from_row(self, caches, digests, row: int) -> None:
+        """Feed the cache: extract the pages of ``row``'s freshly computed
+        prefix span and insert the chain (skipping already-resident
+        pages)."""
+        pt = self.pool.page_tokens
+        self.prefix.insert_chain(
+            digests,
+            lambda j: self._extract_page(caches, jnp.int32(row),
+                                         jnp.int32(j * pt), pt))
+
     def _prefill_rows(self, bucket, params, caches, toks, lengths, temps,
-                      keys, n_real: int, P: int):
-        """Microbatch prefill: suffix-only when every real row hits the
-        prefix cache, else full (which then feeds the cache)."""
+                      keys, n_real: int, P: int, rows: list):
+        """Microbatch prefill: chunked for long buckets; otherwise
+        suffix-only when every real row covers its page chain, else full
+        (which then feeds the page cache)."""
         key = bucket.key
         B, S = toks.shape
-        digs = [prefix_digest(key.fset, toks[i, :P])
-                if P and lengths[i] > P else None
+        if self._is_chunked(S):
+            return self._prefill_chunked(bucket, params, caches, toks,
+                                         lengths, temps, keys, n_real,
+                                         rows)
+        digs = [self._row_digests(key.fset, toks, lengths, i, P)
                 for i in range(n_real)]
         use_sfx = bool(digs) and all(
-            d is not None and self.prefix.contains(d) for d in digs)
+            d is not None and self.prefix.covers(d) for d in digs)
         lengths_j, temps_j, keys_j = (self._dev(lengths),
                                       self._dev(temps), self._dev(keys))
         with obs.span("serve.prefill", "serve", bucket=str(key), batch=B,
                       pad_len=S, prefix_reuse=use_sfx):
             if use_sfx:
                 for i in range(n_real):
-                    slab = self.prefix.lookup(digs[i])
-                    caches = self._scatter_row(caches, slab, jnp.int32(i))
+                    caches, rows[i].table = self._scatter_chain(
+                        caches, digs[i], i)
                 cur, caches = self._prefill_sfx(
                     params, self._dev(toks[:, P:]), caches, lengths_j,
-                    temps_j, keys_j, P)
+                    temps_j, keys_j, jnp.int32(P))
                 self.metrics.counter("serve.prefix.reused_prefills").inc()
                 bucket.padded_tokens += int(
                     B * (S - P)
                     - np.maximum(lengths[:n_real] - P, 0).sum())
             else:
-                # mixed hit/miss wave: rows whose digest IS cached still
+                # mixed hit/miss wave: rows whose chain IS cached still
                 # count per-row hits (mirroring the per-row lookups of the
                 # suffix path — the reuse just can't be exploited, since
                 # suffix-only prefill is all-rows-or-none), and each
-                # distinct uncached digest counts ONE miss, matching the
+                # distinct uncovered chain counts ONE miss, matching the
                 # single insert it triggers below
-                missed = set()
-                for d in digs:
+                missed: dict[tuple, int] = {}
+                for i, d in enumerate(digs):
                     if d is None:
                         continue
-                    if self.prefix.contains(d):
+                    if self.prefix.covers(d):
                         self.prefix.hits += 1
                     else:
-                        missed.add(d)
+                        missed.setdefault(tuple(d), i)
                 self.prefix.misses += len(missed)
                 cur, caches = self._prefill(params, self._dev(toks),
                                             caches, lengths_j, temps_j,
                                             keys_j)
                 bucket.padded_tokens += int(B * S - lengths[:n_real].sum())
+                for i in missed.values():
+                    self._insert_chain_from_row(caches, digs[i], i)
+        return cur, caches
+
+    def _prefill_chunked(self, bucket, params, caches, toks, lengths,
+                         temps, keys, n_real: int, rows: list):
+        """Long-prompt prefill through the pre-warmed ``[B, C]`` chunk
+        executable with a traced position offset.  Every row of a chunked
+        bucket has its last real token in the final chunk (bucketing
+        rounds L up to the next chunk multiple), so only the final call's
+        sampled token is kept.  Leading whole chunks covered by every
+        row's cached page chain are skipped — paged reuse at chunk scale;
+        an uncovered wave feeds its full-page chains back to the cache."""
+        key = bucket.key
+        B, S = toks.shape
+        C = self._chunk
+        n_chunks = S // C
+        pt = self.pool.page_tokens if self.prefix is not None else 0
+        paged = bool(pt) and C % pt == 0
+        digs = []
+        n_skip = 0
+        if paged:
+            # full-page chains over each prompt minus its last token (the
+            # first sampled token must come from a fresh computation)
+            digs = [page_digests(key.fset, toks[i], pt,
+                                 limit=int(lengths[i]) - 1)
+                    for i in range(n_real)]
+            covered = [len(self.prefix.chain(d)) * pt // C for d in digs]
+            n_skip = min(min(c, n_chunks - 1) for c in covered)
+        lengths_j, temps_j, keys_j = (self._dev(lengths),
+                                      self._dev(temps), self._dev(keys))
+        with obs.span("serve.prefill", "serve", bucket=str(key), batch=B,
+                      pad_len=S, prefix_reuse=n_skip > 0,
+                      chunks=n_chunks, chunks_skipped=n_skip):
+            missed: dict[tuple, int] = {}
+            if n_skip:
+                npages = n_skip * C // pt
                 for i in range(n_real):
-                    if digs[i] is not None \
-                            and not self.prefix.contains(digs[i]):
-                        slab = self._extract_prefix(caches, jnp.int32(i), P)
-                        self.prefix.insert(digs[i], slab)
+                    caches, rows[i].table = self._scatter_chain(
+                        caches, digs[i][:npages], i)
+                self.metrics.counter("serve.prefix.reused_prefills").inc()
+            elif paged:
+                for i, d in enumerate(digs):
+                    if not d:
+                        continue
+                    if self.prefix.covers(d):
+                        self.prefix.hits += 1
+                    else:
+                        missed.setdefault(tuple(d), i)
+                self.prefix.misses += len(missed)
+            cur = None
+            for c in range(n_skip, n_chunks):
+                cur, caches = self._prefill_sfx(
+                    params, self._dev(toks[:, c * C:(c + 1) * C]), caches,
+                    lengths_j, temps_j, keys_j, jnp.int32(c * C))
+            self.metrics.counter("serve.chunked_prefills").inc()
+            bucket.padded_tokens += int(
+                B * (S - n_skip * C)
+                - np.maximum(lengths[:n_real] - n_skip * C, 0).sum())
+            for i in missed.values():
+                self._insert_chain_from_row(caches, digs[i], i)
         return cur, caches
 
     def _refill_slot(self, bucket, params, caches, i: int, nxt: Request,
                      toks, lengths, temps, keys, slots, rows, hist,
                      P: int):
         """Pull ``nxt`` into freed slot ``i`` mid-decode: batch-1 prefill
-        (prefix-reused when its prefix is cached) chunked into the decode
-        stream, then scatter its cache row into the batch."""
+        (page-reused / chunked as its bucket demands) chunked into the
+        decode stream, then scatter its cache row into the batch."""
         key = bucket.key
         S = toks.shape[1]
         L2 = len(nxt.prompt)
@@ -712,41 +924,83 @@ class Engine:
         lengths[i] = L2
         temps[i] = nxt.temperature
         keys[i] = self._req_key(nxt)
-        dig = (prefix_digest(key.fset, toks[i, :P])
-               if P and L2 > P else None)
-        use_sfx = dig is not None and self.prefix.contains(dig)
         c1 = T.init_cache(self.cfg, 1, self.max_seq)
         l_j = self._dev(lengths[i:i + 1])
         t_j = self._dev(temps[i:i + 1])
         k_j = self._dev(keys[i:i + 1])
-        with obs.span("serve.prefill", "serve", bucket=str(key), batch=1,
-                      pad_len=S, prefix_reuse=use_sfx, refill_slot=i):
-            if use_sfx:
-                slab = self.prefix.lookup(dig)
-                c1 = self._scatter_row(c1, slab, jnp.int32(0))
-                tk, c1 = self._prefill_sfx(
-                    params, self._dev(toks[i:i + 1, P:]), c1, l_j, t_j,
-                    k_j, P)
-                bucket.padded_tokens += int((S - P) - max(L2 - P, 0))
-            else:
-                if dig is not None:
-                    self.prefix.misses += 1
-                tk, c1 = self._prefill(params, self._dev(toks[i:i + 1]),
-                                       c1, l_j, t_j, k_j)
-                bucket.padded_tokens += int(S - L2)
-                if dig is not None:
-                    slab = self._extract_prefix(c1, jnp.int32(0), P)
-                    self.prefix.insert(dig, slab)
+        table = None
+        if self._is_chunked(S):
+            tk, c1, table = self._refill_chunked(
+                bucket, params, c1, toks, lengths, i, l_j, t_j, k_j)
+        else:
+            dig = self._row_digests(key.fset, toks, lengths, i, P)
+            use_sfx = dig is not None and self.prefix.covers(dig)
+            with obs.span("serve.prefill", "serve", bucket=str(key),
+                          batch=1, pad_len=S, prefix_reuse=use_sfx,
+                          refill_slot=i):
+                if use_sfx:
+                    c1, table = self._scatter_chain(c1, dig, 0)
+                    tk, c1 = self._prefill_sfx(
+                        params, self._dev(toks[i:i + 1, P:]), c1, l_j,
+                        t_j, k_j, jnp.int32(P))
+                    bucket.padded_tokens += int((S - P) - max(L2 - P, 0))
+                else:
+                    if dig is not None:
+                        self.prefix.misses += 1
+                    tk, c1 = self._prefill(
+                        params, self._dev(toks[i:i + 1]), c1, l_j, t_j,
+                        k_j)
+                    bucket.padded_tokens += int(S - L2)
+                    if dig is not None:
+                        self._insert_chain_from_row(c1, dig, 0)
         caches = self._scatter_row(caches, c1, jnp.int32(i))
         slots[i] = S
         rows[i] = _Row(req=nxt, length=L2, emitted=1, join=len(hist),
                        first_tok=int(np.asarray(tk)[0]), active=True,
-                       cold=False)
+                       cold=False, table=table)
         self.metrics.counter("serve.refills").inc()
         if obs.is_enabled():
             obs.event("serve.refill", "serve", bucket=str(key), slot=i,
-                      length=L2, prefix_reuse=use_sfx)
+                      length=L2, prefix_reuse=table is not None)
         return rows[i].first_tok, caches
+
+    def _refill_chunked(self, bucket, params, c1, toks, lengths, i: int,
+                        l_j, t_j, k_j):
+        """Batch-1 chunked prefill for a refill into a long bucket — the
+        same pre-warmed ``[1, C]`` executable at every chunk offset."""
+        key = bucket.key
+        S = toks.shape[1]
+        C = self._chunk
+        n_chunks = S // C
+        L2 = int(lengths[i])
+        pt = self.pool.page_tokens if self.prefix is not None else 0
+        paged = bool(pt) and C % pt == 0
+        digs = (page_digests(key.fset, toks[i], pt, limit=L2 - 1)
+                if paged else [])
+        n_skip = 0
+        table = None
+        if digs:
+            n_skip = min(len(self.prefix.chain(digs)) * pt // C,
+                         n_chunks - 1)
+        with obs.span("serve.prefill", "serve", bucket=str(key), batch=1,
+                      pad_len=S, prefix_reuse=n_skip > 0, refill_slot=i,
+                      chunks=n_chunks, chunks_skipped=n_skip):
+            if n_skip:
+                c1, table = self._scatter_chain(
+                    c1, digs[:n_skip * C // pt], 0)
+            elif digs:
+                self.prefix.misses += 1
+            tk = None
+            for c in range(n_skip, n_chunks):
+                tk, c1 = self._prefill_sfx(
+                    params, self._dev(toks[i:i + 1, c * C:(c + 1) * C]),
+                    c1, l_j, t_j, k_j, jnp.int32(c * C))
+            self.metrics.counter("serve.chunked_prefills").inc()
+            bucket.padded_tokens += int((S - n_skip * C)
+                                        - max(L2 - n_skip * C, 0))
+            if digs and not n_skip:
+                self._insert_chain_from_row(c1, digs, 0)
+        return tk, c1, table
 
     # -- equal mode: shared-position continuous decode --------------------
 
@@ -909,11 +1163,14 @@ class Engine:
             },
             "decode_steps": int(m.value("serve.decode_steps")),
             "decode_time_s": m.value("serve.decode_time_s"),
+            "chunked_prefills": int(m.value("serve.chunked_prefills")),
             "latency_s": {
                 "mean": lat.mean,
                 "max": lat.max if lat.count else 0.0,
             },
             "prefix_cache": (self.prefix.stats() if self.prefix is not None
                              else None),
+            "kv_pages": (self.pool.stats() if self.pool is not None
+                         else None),
             "scheduler": self.scheduler.stats(),
         }

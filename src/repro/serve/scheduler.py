@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Optional
 
 from repro import obs
@@ -148,6 +149,9 @@ class ShapeBucketScheduler:
         self._queued_ids: set[int] = set()   # admission de-dup (id()s)
         self._drained: set[int] = set()   # id()s already pulled via a batch
         self._dynamic_lru: collections.OrderedDict = collections.OrderedDict()
+        # cluster front-end: the router thread admits while a replica's
+        # worker thread drains — every queue/bucket mutation holds this
+        self._lock = threading.RLock()
 
     # -- registry-backed stream counters ----------------------------------
 
@@ -193,17 +197,19 @@ class ShapeBucketScheduler:
         if fset not in self.fsets:
             raise AdmissionError(
                 f"unknown format-set tag {fset!r} (have {self.fsets})")
-        if self.mode == "equal":
+        with self._lock:
+            if self.mode == "equal":
+                return self._dynamic_or_configured(length, fset,
+                                                   commit=commit)
+            fits = [p for p in self.cfg.pad_lens if p >= length]
+            if fits:
+                pad = fits[0]      # best fit = least padding
+                waste = (pad - length) / pad
+                if waste <= self.cfg.waste_cap:
+                    return BucketKey(pad, fset)
+                if commit:
+                    self.metrics.counter("serve.waste_redirects").inc()
             return self._dynamic_or_configured(length, fset, commit=commit)
-        fits = [p for p in self.cfg.pad_lens if p >= length]
-        if fits:
-            pad = fits[0]          # best fit = least padding
-            waste = (pad - length) / pad
-            if waste <= self.cfg.waste_cap:
-                return BucketKey(pad, fset)
-            if commit:
-                self.metrics.counter("serve.waste_redirects").inc()
-        return self._dynamic_or_configured(length, fset, commit=commit)
 
     def _dynamic_or_configured(self, length: int, fset: str, *,
                                commit: bool = True) -> BucketKey:
@@ -244,28 +250,30 @@ class ShapeBucketScheduler:
         :class:`AdmissionError` / :class:`QueueFullError`.  Callers that
         already resolved the bucket (the engine's pre-admission checks)
         pass ``key`` so redirect/LRU bookkeeping is not done twice."""
-        if self.pending() >= self.cfg.max_queue:
-            self.reject()
-            raise QueueFullError(
-                f"admission queue full ({self.cfg.max_queue} pending)")
-        if id(req) in self._queued_ids:
-            self.reject()
-            raise AdmissionError("request is already queued")
-        try:
-            key = key or self.bucket_for(length, fset)
-        except AdmissionError:
-            self.reject()
-            raise
-        self._queue.append((key, req))
-        self._pending[key].append(req)
-        self._queued_ids.add(id(req))
+        with self._lock:
+            if self.pending() >= self.cfg.max_queue:
+                self.reject()
+                raise QueueFullError(
+                    f"admission queue full ({self.cfg.max_queue} pending)")
+            if id(req) in self._queued_ids:
+                self.reject()
+                raise AdmissionError("request is already queued")
+            try:
+                key = key or self.bucket_for(length, fset)
+            except AdmissionError:
+                self.reject()
+                raise
+            self._queue.append((key, req))
+            self._pending[key].append(req)
+            self._queued_ids.add(id(req))
         if obs.is_enabled():
             obs.event("serve.admit", "serve", bucket=str(key),
                       length=length, fset=fset)
         return key
 
     def pending(self) -> int:
-        return sum(len(q) for q in self._pending.values())
+        with self._lock:
+            return sum(len(q) for q in self._pending.values())
 
     # -- microbatch formation --------------------------------------------
 
@@ -273,21 +281,22 @@ class ShapeBucketScheduler:
         """FIFO-fair draining: serve the bucket owning the oldest pending
         request, batching up to its slot count.  Returns
         ``(Bucket, [requests])`` or ``None`` when idle."""
-        while self._queue and id(self._queue[0][1]) in self._drained:
-            self._drained.discard(id(self._queue[0][1]))
-            self._queue.popleft()    # already drained via its bucket
-        if not self._queue:
-            return None
-        key = self._queue[0][0]
-        bucket = self.buckets[key]
-        q = self._pending[key]
-        batch = [q.popleft() for _ in range(min(bucket.batch, len(q)))]
-        for r in batch:
-            self._drained.add(id(r))
-            self._queued_ids.discard(id(r))
-        if not bucket.configured and key in self._dynamic_lru:
-            self._dynamic_lru.move_to_end(key)
-        return bucket, batch
+        with self._lock:
+            while self._queue and id(self._queue[0][1]) in self._drained:
+                self._drained.discard(id(self._queue[0][1]))
+                self._queue.popleft()    # already drained via its bucket
+            if not self._queue:
+                return None
+            key = self._queue[0][0]
+            bucket = self.buckets[key]
+            q = self._pending[key]
+            batch = [q.popleft() for _ in range(min(bucket.batch, len(q)))]
+            for r in batch:
+                self._drained.add(id(r))
+                self._queued_ids.discard(id(r))
+            if not bucket.configured and key in self._dynamic_lru:
+                self._dynamic_lru.move_to_end(key)
+            return bucket, batch
 
     def pop_pending(self, key: BucketKey):
         """Pull the oldest pending request for ``key`` out of turn — the
@@ -300,20 +309,39 @@ class ShapeBucketScheduler:
         younger request of this bucket before an older request of another
         bucket — but only into a slot no other bucket could use, so no
         request is ever *delayed* by a refill."""
-        q = self._pending.get(key)
-        if not q:
-            return None
-        req = q.popleft()
-        self._drained.add(id(req))
-        self._queued_ids.discard(id(req))
-        return req
+        with self._lock:
+            q = self._pending.get(key)
+            if not q:
+                return None
+            req = q.popleft()
+            self._drained.add(id(req))
+            self._queued_ids.discard(id(req))
+            return req
+
+    def drain_pending(self) -> list:
+        """Remove and return EVERY pending request, oldest first — the
+        cluster front-end's stall hook: when a replica stops making
+        progress, its undrained queue is pulled back out and re-routed to
+        healthy replicas.  Requests already pulled into an in-flight
+        microbatch are not (and cannot be) recalled."""
+        with self._lock:
+            out = []
+            for key, req in list(self._queue):
+                if id(req) not in self._queued_ids:
+                    continue        # already drained into a microbatch
+                out.append(req)
+                self._queued_ids.discard(id(req))
+                self._drained.add(id(req))
+                self._pending[key].remove(req)   # identity ==  (eq=False)
+            return out
 
     def exact_bucket(self, length: int, fset: str, *,
                      commit: bool = True) -> BucketKey:
         """Bucket a request at its exact length, bypassing best-fit padding
         (the engine's KV-headroom fallback: a prompt whose *padded* length
         cannot fit ``max_new`` tokens in the cache may still fit unpadded)."""
-        return self._dynamic_or_configured(length, fset, commit=commit)
+        with self._lock:
+            return self._dynamic_or_configured(length, fset, commit=commit)
 
     # -- reporting --------------------------------------------------------
 

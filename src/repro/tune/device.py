@@ -124,10 +124,12 @@ _KIND_PATTERNS = (
 def detect_device(device: "jax.Device | None" = None) -> DeviceSpec:
     """Map the running accelerator to a DeviceSpec.
 
-    ``REPRO_TUNE_DEVICE`` overrides detection with a table key — this is how
-    a CPU host builds (or validates) a plan cache for a TPU target.
+    ``repro.configure(device=…)`` (or the ``REPRO_TUNE_DEVICE`` env var it
+    wraps) overrides detection with a table key — this is how a CPU host
+    builds (or validates) a plan cache for a TPU target.
     """
-    forced = os.environ.get("REPRO_TUNE_DEVICE")
+    from repro import config
+    forced = config.get("device")
     if forced:
         if forced not in DEVICE_TABLE:
             raise KeyError(

@@ -6,13 +6,15 @@ plans the cost model considers viable on this device, *measure* the top few
 (warmup, ``block_until_ready``, median of k), and persist the winner keyed by
 ``(device_kind, op, M, N, K, tile, ratio_string)``.
 
-Environment knobs:
+Settings (via ``repro.configure(...)``, falling back to env vars — see
+:mod:`repro.config` for the precedence contract):
 
-* ``REPRO_TUNE_CACHE``       — path of the JSON plan cache
+* ``tune_cache`` / ``REPRO_TUNE_CACHE`` — path of the JSON plan cache
   (default ``~/.cache/repro-tune/plans.json``).
-* ``REPRO_TUNE_CACHE_ONLY=1`` — never measure (CI mode): serve cached plans,
-  fall back to the cost model's best valid plan on a miss.
-* ``REPRO_TUNE_DEVICE``      — see ``tune.device.detect_device``.
+* ``tune_cache_only`` / ``REPRO_TUNE_CACHE_ONLY=1`` — never measure (CI
+  mode): serve cached plans, fall back to the cost model's best valid
+  plan on a miss.
+* ``device`` / ``REPRO_TUNE_DEVICE`` — see ``tune.device.detect_device``.
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ from typing import Callable, Iterable
 
 import jax
 
+from repro import config
 from repro.core.formats import DEFAULT_FORMATS, registry_signatures
 from repro.tune.costmodel import (GemmPlan, GemmProblem, PATHS, predict_time,
                                   validate_plan)
@@ -38,11 +41,11 @@ CACHE_SCHEMA = 2
 
 
 def cache_path() -> str:
-    return os.environ.get("REPRO_TUNE_CACHE", _DEFAULT_CACHE)
+    return str(config.get("tune_cache") or _DEFAULT_CACHE)
 
 
 def cache_only() -> bool:
-    return os.environ.get("REPRO_TUNE_CACHE_ONLY", "") not in ("", "0")
+    return config.get_bool("tune_cache_only")
 
 
 def plan_key(dev: DeviceSpec, prob: GemmProblem) -> str:

@@ -226,13 +226,13 @@ def test_hygiene_rejects_schema_drift(tmp_path):
 def test_engine_stats_shape_parity():
     from repro.configs import load_all, reduced
     from repro.models import transformer as T
+    from repro.serve import ServeConfig
     from repro.serve.engine import Engine, Request
-    from repro.serve.scheduler import SchedulerConfig
 
     cfg = reduced(load_all()["llama3-8b"], tp=2)
     params = T.init_model(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_batch=2, max_seq=32,
-                 scheduler=SchedulerConfig(pad_lens=(8,), max_batch=2))
+    eng = Engine(cfg, params,
+                 ServeConfig(max_batch=2, max_seq=32, buckets=(8,)))
     reqs = [Request(np.array([1, 2, 3], np.int32), max_new_tokens=2),
             Request(np.array([4, 5], np.int32), max_new_tokens=2)]
     eng.generate(reqs)
@@ -241,8 +241,8 @@ def test_engine_stats_shape_parity():
     assert set(st) == {"mode", "requests", "tokens", "padding_waste",
                        "microbatches", "bucket_hits", "bucket_misses",
                        "bucket_hit_rate", "compile", "decode_steps",
-                       "decode_time_s", "latency_s", "prefix_cache",
-                       "scheduler"}
+                       "decode_time_s", "chunked_prefills", "latency_s",
+                       "prefix_cache", "kv_pages", "scheduler"}
     assert set(st["requests"]) == {"served", "rejected"}
     assert set(st["tokens"]) == {"prompt", "padded", "generated"}
     assert set(st["microbatches"]) == {"total", "multi_request",

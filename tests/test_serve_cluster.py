@@ -1,0 +1,176 @@
+"""Multi-replica cluster front-end: routing, parity, stall re-routing.
+
+The acceptance gates: per-request outputs are bit-exact with unbatched
+single-engine serving no matter which replica serves them, routing is a
+deterministic function of the submission sequence, a stalled replica's
+queued work is re-routed instead of hanging the cluster, and prompts
+longer than every configured bucket serve through chunked paged prefill.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import load_all, reduced
+from repro.models import transformer as T
+from repro.serve import Cluster, ServeConfig
+from repro.serve.engine import Request
+from repro.serve.scheduler import QueueFullError
+
+
+def _model(arch="llama3-8b"):
+    cfg = reduced(load_all()[arch], tp=2)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(prompts, max_new=2, seeds=None):
+    return [Request(np.asarray(p, np.int32), max_new_tokens=max_new,
+                    seed=(seeds[i] if seeds else 0))
+            for i, p in enumerate(prompts)]
+
+
+PROMPTS = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [2, 2, 2], [5, 1], [9, 9, 9]]
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig validation (host-side, no jax work)
+# ---------------------------------------------------------------------------
+
+def test_serve_config_validation():
+    sc = ServeConfig(buckets=(16, 8, 8))
+    assert sc.buckets == (8, 16)                 # sorted, deduped
+    assert sc.pad_lens() == (8, 16)
+    assert sc.pad_lens(None) == (8, 16)
+    assert ServeConfig().pad_lens((4,)) == (4,)  # arch fallback
+    for bad in (dict(replicas=0), dict(max_batch=0), dict(max_seq=1),
+                dict(waste_cap=1.5), dict(stall_timeout_s=0.0),
+                dict(prefix_pages=0), dict(page_tokens=0)):
+        with pytest.raises(ValueError):
+            ServeConfig(**bad)
+    with pytest.raises(Exception):
+        sc.replicas = 4                          # frozen
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def _route_only(cl, reqs):
+    """Submit without draining; returns the placement sequence."""
+    return [cl.submit(r) for r in reqs]
+
+
+def test_routing_is_deterministic_and_load_aware():
+    cfg, params = _model()
+    sc = ServeConfig(buckets=(4,), max_batch=2, max_seq=32, replicas=2)
+    placements = []
+    for _ in range(2):
+        cl = Cluster(cfg, params, sc)
+        placements.append(_route_only(cl, _reqs([p for p in PROMPTS])))
+    # identical submission sequence → identical placement, run to run
+    assert placements[0] == placements[1]
+    # least-outstanding-tokens routing actually spreads the load
+    assert set(placements[0]) == {0, 1}
+    # every request records the replica that owns it
+    cl = Cluster(cfg, params, sc)
+    for r in _reqs(PROMPTS):
+        rid = cl.submit(r)
+        assert r.replica == rid
+
+
+def test_affinity_keeps_equal_load_sticky():
+    cfg, params = _model()
+    cl = Cluster(cfg, params, ServeConfig(buckets=(4, 8), max_batch=2,
+                                          max_seq=32, replicas=2))
+    # same (bucket, fset) twice with idle replicas: affinity keeps the
+    # second on the first's replica despite the outstanding-token tie
+    a = _reqs([[1, 2, 3], [3, 2, 1]], max_new=1)
+    first = cl.submit(a[0])
+    assert cl.submit(a[1]) == first
+    # a different bucket is NOT sticky — it takes the less-loaded replica
+    b = Request(np.asarray([5] * 7, np.int32), max_new_tokens=1)
+    assert cl.submit(b) != first
+
+
+def test_cluster_queue_backpressure():
+    cfg, params = _model()
+    cl = Cluster(cfg, params, ServeConfig(buckets=(4,), max_batch=2,
+                                          max_seq=32, max_queue=2,
+                                          replicas=2))
+    for r in _reqs([[1, 2]] * 4, max_new=1):
+        cl.submit(r)                             # 2 per replica = cap
+    with pytest.raises(QueueFullError):
+        cl.submit(Request(np.asarray([1], np.int32), max_new_tokens=1))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: parity, stall re-route, long prompts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cluster_serves_bit_exact_with_zero_recompiles():
+    cfg, params = _model()
+    sc = ServeConfig(buckets=(4,), max_batch=2, max_seq=32, replicas=2)
+    cl = Cluster(cfg, params, sc)
+    cl.warmup()
+    reqs = _reqs(PROMPTS, max_new=3, seeds=list(range(6)))
+    cl.generate(reqs)
+    # unbatched single-engine ground truth (same params + rng_seed →
+    # results are replica- and placement-independent)
+    refs = cl.replicas[0].generate_reference(
+        _reqs(PROMPTS, max_new=3, seeds=list(range(6))))
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.error == ""
+        assert r.out_tokens == ref.out_tokens
+    st = cl.stats()
+    assert st["requests"]["served"] == len(PROMPTS)
+    assert st["post_warmup_recompiles"] == 0
+    assert st["healthy"] == 2
+    # the load balancer used both replicas
+    assert all(p["requests"]["served"] >= 1 for p in st["per_replica"])
+
+
+@pytest.mark.slow
+def test_stalled_replica_work_is_rerouted():
+    cfg, params = _model()
+    cl = Cluster(cfg, params, ServeConfig(buckets=(4,), max_batch=2,
+                                          max_seq=32, replicas=2,
+                                          stall_timeout_s=2.0))
+    cl.warmup()
+    reqs = _reqs(PROMPTS, max_new=2)
+    for r in reqs:
+        cl.submit(r)
+    dead = next(rid for rid in (0, 1)
+                if cl.replicas[rid].scheduler.pending())
+    cl.replicas[dead].run = lambda: (_ for _ in ()).throw(
+        RuntimeError("injected replica crash"))
+    cl.run()
+    live = 1 - dead
+    assert cl.stats()["healthy"] == 1
+    refs = cl.replicas[live].generate_reference(_reqs(PROMPTS, max_new=2))
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.error == ""          # nobody stranded
+        assert r.out_tokens == ref.out_tokens
+        assert r.replica == live                 # all re-routed
+    assert cl.replicas[live].stats()["requests"]["served"] == len(PROMPTS)
+
+
+@pytest.mark.slow
+def test_long_prompt_chunked_prefill_through_cluster():
+    cfg, params = _model()
+    cl = Cluster(cfg, params, ServeConfig(buckets=(4, 8), max_batch=2,
+                                          max_seq=32, replicas=2))
+    cl.warmup()
+    long_prompt = list(range(1, 12))             # L=11 > max bucket 8
+    prompts = [long_prompt, [7] * 10, [1, 2, 3], [4, 5]]
+    reqs = _reqs(prompts, max_new=3)
+    cl.generate(reqs)
+    eng = cl.replicas[0]
+    refs = eng.generate_reference(_reqs(prompts, max_new=3))
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.out_tokens == ref.out_tokens
+    assert reqs[0].bucket == "S16/default" and reqs[0].cold is False
+    st = cl.stats()
+    assert st["post_warmup_recompiles"] == 0     # chunked, not cold-exact
+    assert sum(p["chunked_prefills"] for p in st["per_replica"]) >= 1

@@ -7,7 +7,7 @@ import jax
 from repro.configs import load_all, reduced
 from repro.data.pipeline import Prefetcher, batch_spec, make_batch
 from repro.models import transformer as T
-from repro.serve.engine import Engine, Request
+from repro.serve import Engine, Request, ServeConfig
 
 
 def test_pipeline_deterministic():
@@ -53,7 +53,7 @@ def test_batch_spec_matches_batch():
 def test_engine_greedy_deterministic():
     cfg = reduced(load_all()["llama3-8b"], tp=2)
     params = T.init_model(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_batch=2, max_seq=32)
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_seq=32))
     prompts = [np.array([1, 2, 3], np.int32), np.array([4, 5], np.int32)]
     r1 = eng.generate([Request(p, max_new_tokens=4) for p in prompts])
     r2 = eng.generate([Request(p, max_new_tokens=4) for p in prompts])

@@ -14,6 +14,7 @@ import jax
 
 from repro.configs import load_all, reduced
 from repro.models import transformer as T
+from repro.serve import ServeConfig
 from repro.serve.engine import Engine, Request
 from repro.serve.scheduler import (AdmissionError, BucketKey, QueueFullError,
                                    SchedulerConfig, ShapeBucketScheduler)
@@ -130,7 +131,7 @@ def test_equal_mode_buckets_are_exact_length():
 def _mk_engine(arch="llama3-8b", **kw):
     cfg = reduced(load_all()[arch], tp=2)
     params = T.init_model(jax.random.PRNGKey(0), cfg)
-    return cfg, params, Engine(cfg, params, **kw)
+    return cfg, params, Engine(cfg, params, ServeConfig(**kw))
 
 
 def _reqs(prompts, max_new=3, fsets=None):
@@ -144,9 +145,7 @@ PROMPTS = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [2, 2, 2]]
 
 def test_warmed_mixed_shape_stream_exact_and_no_recompiles():
     cfg, params, eng = _mk_engine(
-        max_batch=3, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(4,), waste_cap=0.75,
-                                  max_batch=3))
+        max_batch=3, max_seq=32, buckets=(4,), waste_cap=0.75)
     assert eng.mode == "masked"
     eng.warmup()
     assert eng.stats()["compile"]["warmup_traces"] > 0
@@ -164,9 +163,7 @@ def test_warmed_mixed_shape_stream_exact_and_no_recompiles():
 
 def test_cold_bucket_fallback_records_miss_not_crash():
     cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(4, 8), waste_cap=0.5,
-                                  max_batch=2))
+        max_batch=2, max_seq=32, buckets=(4, 8), waste_cap=0.5)
     eng.warmup([BucketKey(4, "default")])   # bucket 8 deliberately skipped
     reqs = _reqs([[1, 2, 3, 4], [9, 8, 7, 6, 5]])   # L=4 warm, L=5 → 8 cold
     eng.generate(reqs)
@@ -185,9 +182,7 @@ def test_cold_bucket_fallback_records_miss_not_crash():
 
 
 def test_engine_rejects_unservable_requests():
-    cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=16,
-        scheduler=SchedulerConfig(pad_lens=(4, 8), max_batch=2))
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=16, buckets=(4, 8))
     with pytest.raises(AdmissionError):
         # 12 + 16 (default max_new) − 1 > max_seq even at the exact length
         eng.submit(Request(np.arange(12, dtype=np.int32)))
@@ -217,9 +212,7 @@ def test_engine_rejects_unservable_requests():
 
 
 def test_generate_serves_admissible_and_flags_rejects():
-    cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=16,
-        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=16, buckets=(4,))
     good = Request(np.asarray([1, 2, 3], np.int32), max_new_tokens=2)
     bad = Request(np.arange(12, dtype=np.int32), max_new_tokens=8)
     eng.generate([good, bad])    # 12 + 8 − 1 > max_seq even unpadded
@@ -257,20 +250,17 @@ def test_engine_filters_buckets_that_cannot_fit_max_seq():
     # a configured pad_len with no decode head-room (pad+1 > max_seq) is
     # dropped at engine construction instead of crashing warmup — the
     # launcher's default (buckets up to 128, --max-seq 128) relies on this
-    cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=16,
-        scheduler=SchedulerConfig(pad_lens=(4, 8, 16, 128), max_batch=2))
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=16,
+                                  buckets=(4, 8, 16, 128))
     assert sorted(k.pad_len for k in eng.scheduler.buckets) == [4, 8]
     eng.warmup()          # must not raise
     with pytest.raises(ValueError):
-        Engine(cfg, params, max_batch=2, max_seq=4,
-               scheduler=SchedulerConfig(pad_lens=(16, 32), max_batch=2))
+        Engine(cfg, params, ServeConfig(max_batch=2, max_seq=4,
+                                        buckets=(16, 32)))
 
 
 def test_stats_counter_correctness():
-    cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=32, buckets=(4,))
     eng.warmup()
     # 4 requests at max_batch 2: retire-and-refill serves the whole wave
     # through ONE resident microbatch (2 initial rows + 2 refills)
@@ -301,8 +291,7 @@ def test_refill_disabled_restores_microbatch_per_wave():
     # --no-refill fallback: each wave of max_batch requests runs as its
     # own microbatch, exactly the pre-continuous-decode schedule
     cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=32, refill=False,
-        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+        max_batch=2, max_seq=32, refill=False, buckets=(4,))
     assert not eng.refill_enabled
     eng.warmup()
     reqs = _reqs(PROMPTS, max_new=2)
@@ -321,9 +310,7 @@ def test_mixed_max_new_early_retirement_and_refill():
     # rows retire the step they reach their own max_new — including one
     # that finishes at prefill (max_new=1) — and pending requests are
     # admitted into freed slots mid-decode; everything stays bit-exact
-    cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=32, buckets=(4,))
     eng.warmup()
     max_news = [1, 5, 2, 3]
 
@@ -361,9 +348,7 @@ def test_double_refill_with_instant_retire_stays_exact():
     # must preserve the OTHER refilled slot's first token (regression:
     # seeding the rebuild from hist[-1] reverted that slot to its retired
     # predecessor's last token, silently breaking parity)
-    cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=32, buckets=(4,))
     eng.warmup()
     prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [2, 2, 2], [3, 1]]
     max_news = [1, 1, 1, 3, 2]
@@ -393,9 +378,7 @@ def test_prefix_reuse_prefill_exact_and_counted():
     # leading tokens, keyed by digest); wave 2's rows ALL hit, so only the
     # suffix is prefilled — and the tokens stay bit-exact vs unbatched
     # (causal KV for positions < P depends only on tokens < P)
-    cfg, params, eng = _mk_engine(
-        max_batch=2, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(8,), max_batch=2))
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=32, buckets=(8,))
     eng.warmup()
     sys_prefix = [9, 8, 7, 6]     # == padded prefix: P = 8 // 2 = 4
     wave1 = [sys_prefix + [1, 2], sys_prefix + [3]]
@@ -421,9 +404,7 @@ def test_prefix_cache_accounting_mixed_wave():
     # uncached digest count a SINGLE miss — mirroring the one insert the
     # wave performs — so stats()["prefix_cache"]["hit_rate"] reflects
     # actual reuse potential
-    cfg, params, eng = _mk_engine(
-        max_batch=3, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(8,), max_batch=3))
+    cfg, params, eng = _mk_engine(max_batch=3, max_seq=32, buckets=(8,))
     eng.warmup()
     pre_a, pre_b = [9, 8, 7, 6], [5, 5, 5, 5]       # P = 8 // 2 = 4
     eng.generate(_reqs([pre_a + [1, 2]]))           # miss → inserts A
@@ -439,9 +420,7 @@ def test_sampled_decode_batched_unbatched_parity():
     # temperature > 0: per-request PRNG streams keyed by (engine seed,
     # request seed, token index) make sampled decoding batch-invariant —
     # and filler slots must not consume or perturb any real row's stream
-    cfg, params, eng = _mk_engine(
-        max_batch=3, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=3))
+    cfg, params, eng = _mk_engine(max_batch=3, max_seq=32, buckets=(4,))
     eng.warmup()
 
     def mk():
@@ -461,6 +440,68 @@ def test_sampled_decode_batched_unbatched_parity():
     assert eng.stats()["compile"]["post_warmup_recompiles"] == 0
 
 
+def test_legacy_kwargs_shim_maps_and_warns_once():
+    # pre-ServeConfig Engine kwargs still construct — mapped onto a
+    # ServeConfig with ONE process-wide DeprecationWarning — but mixing
+    # them with a ServeConfig (or typo-ing them) stays a TypeError
+    import warnings
+
+    import repro.serve.config as serve_config
+
+    cfg = reduced(load_all()["llama3-8b"], tp=2)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    serve_config._warned_legacy = False
+    with pytest.warns(DeprecationWarning):
+        eng = Engine(cfg, params, max_batch=2, max_seq=16, refill=False,
+                     scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2),
+                     prefix_entries=8)
+    sc = eng.config
+    assert isinstance(sc, ServeConfig)
+    assert sc.max_batch == 2 and sc.max_seq == 16 and sc.refill is False
+    assert sc.buckets == (4,)
+    assert sc.prefix_pages == 32      # 8 legacy entries, 4 pages apiece
+    # second legacy construction in the same process is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        Engine(cfg, params, max_batch=2, max_seq=16)
+    with pytest.raises(TypeError):
+        Engine(cfg, params, ServeConfig(), max_batch=2)   # both paths
+    with pytest.raises(TypeError):
+        Engine(cfg, params, max_batsh=2)                  # unknown kwarg
+
+
+def test_chunked_long_prompt_prefill_exact_and_page_reused():
+    # prompts longer than every configured bucket serve through chunked
+    # prefill at a rounded-up dynamic bucket — bit-exact, zero recompiles
+    # (the [B, C] chunk executable has a traced offset, decode a traced
+    # pad) — and a repeat wave skips leading chunks via the page cache
+    cfg, params, eng = _mk_engine(max_batch=2, max_seq=32, buckets=(4, 8))
+    eng.warmup()
+    prompts = [list(range(1, 12)), [7] * 10]       # L = 11, 10 > pad 8
+    reqs = _reqs(prompts, max_new=3)
+    eng.generate(reqs)
+    refs = eng.generate_reference(_reqs(prompts, max_new=3))
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.out_tokens == ref.out_tokens
+        assert r.bucket == "S16/default" and r.padded_to == 16
+        assert r.cold is False         # pre-warmed chunk path, not cold
+    st = eng.stats()
+    assert st["compile"]["post_warmup_recompiles"] == 0
+    assert st["chunked_prefills"] >= 1
+    # repeat wave: both rows' leading whole chunk is page-cached now
+    again = _reqs(prompts, max_new=3)
+    eng.generate(again)
+    for r, ref in zip(again, refs):
+        assert r.out_tokens == ref.out_tokens
+    st = eng.stats()
+    assert st["compile"]["post_warmup_recompiles"] == 0
+    assert st["prefix_cache"]["hits"] >= 2
+    # no page leak: every retired row released its block table — the only
+    # live references left are the cache entries themselves
+    assert st["kv_pages"]["in_use"] == st["prefix_cache"]["entries"]
+    assert st["kv_pages"]["in_use"] <= eng.config.prefix_pages
+
+
 @pytest.mark.slow
 def test_mixed_format_stream_parity():
     cfg = reduced(load_all()["llama3-8b"], tp=2)
@@ -468,9 +509,9 @@ def test_mixed_format_stream_parity():
     alt_tag = "fp8_e5m2+fp16+fp32"
     alt = T.init_model(jax.random.PRNGKey(0),
                        dataclasses.replace(cfg, mp_formats=alt_tag))
-    eng = Engine(cfg, params, max_batch=2, max_seq=32,
-                 variants={alt_tag: alt},
-                 scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+    eng = Engine(cfg, params,
+                 ServeConfig(max_batch=2, max_seq=32, buckets=(4,)),
+                 variants={alt_tag: alt})
     eng.warmup()
     fsets = ["default", alt_tag, alt_tag, "default"]
     reqs = _reqs(PROMPTS, fsets=fsets)
@@ -494,8 +535,7 @@ def test_equal_mode_family_parity():
     # local:global attention (gemma3) cannot mask padding → "equal" mode:
     # only same-length requests share a microbatch, rows stay independent
     cfg, params, eng = _mk_engine(
-        "gemma3-4b", max_batch=2, max_seq=32,
-        scheduler=SchedulerConfig(pad_lens=(4,), max_batch=2))
+        "gemma3-4b", max_batch=2, max_seq=32, buckets=(4,))
     assert eng.mode == "equal"
     eng.warmup()
     prompts = [[1, 2, 3, 4], [5, 6, 7, 8], [9, 9]]

@@ -259,11 +259,11 @@ def test_engine_summa_grid_wiring(host_grid_devices):
     serve engine setup."""
     from repro.configs import load_all, reduced
     from repro.models import transformer as Tm
-    from repro.serve.engine import Engine
+    from repro.serve import Engine, ServeConfig
     cfg = dataclasses.replace(reduced(load_all()["internlm2-1.8b"], tp=2),
                               summa_grid=(2, 2))
     params = Tm.init_model(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_batch=1, max_seq=16)
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_seq=16))
     assert eng.summa_report is not None
     assert eng.summa_report["grid"] == "2x2"
     assert eng.summa_report["rel_err"] < 1e-2

@@ -57,7 +57,7 @@ def test_norm_topk_policy_trains():
 def test_train_then_serve_roundtrip(tmp_path):
     """Train a few steps → checkpoint → restore → decode greedily."""
     from repro.checkpoint import ckpt
-    from repro.serve.engine import Engine, Request
+    from repro.serve import Engine, Request, ServeConfig
     cfg = reduced(load_all()["internlm2-1.8b"], tp=2)
     ocfg = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
     params = T.init_model(jax.random.PRNGKey(0), cfg)
@@ -68,7 +68,8 @@ def test_train_then_serve_roundtrip(tmp_path):
                               make_batch(cfg, 16, 2, kind="train", step=s))
     ckpt.save(str(tmp_path / "ck"), {"params": params}, step=3)
     restored, _ = ckpt.restore(str(tmp_path / "ck"), {"params": params})
-    eng = Engine(cfg, restored["params"], max_batch=1, max_seq=32)
+    eng = Engine(cfg, restored["params"],
+                 ServeConfig(max_batch=1, max_seq=32))
     [req] = eng.generate([Request(np.array([1, 2, 3], np.int32),
                                   max_new_tokens=3)])
     assert len(req.out_tokens) == 3
