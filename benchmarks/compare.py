@@ -27,7 +27,7 @@ benchmarks locally and copy the fresh files over
 
     PYTHONPATH=src python benchmarks/compare.py \
         --baseline results/bench_baseline --fresh . \
-        --suites gemm,serve,serve_cluster,solve,split
+        --suites gemm,serve,serve_cluster,solve,split,quant
 """
 from __future__ import annotations
 
@@ -54,7 +54,7 @@ IGNORE_KEYS = {"tokens_per_s", "speedup", "gemm_frac", "cache", "final",
 #: gate (e.g. the multi-replica speedup on a single-core box).
 FLOOR_KEYS = {"speedup": 1.0}
 #: audit counters that must match exactly (no band)
-EXACT_KEYS = {"conv", "fresh"}
+EXACT_KEYS = {"conv", "fresh", "calib_ok"}
 #: error-magnitude keys compared on a log scale (within one decade);
 #: keys prefixed ``log10_`` are already logs and band on the raw value
 LOG_KEYS = {"rel_err"}
@@ -181,7 +181,7 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", default=".",
                     help="directory holding the fresh BENCH_<suite>.json")
     ap.add_argument("--suites",
-                    default="gemm,serve,serve_cluster,solve,split")
+                    default="gemm,serve,serve_cluster,solve,split,quant")
     ap.add_argument("--rel-tol", type=float, default=0.5)
     ap.add_argument("--abs-slack", type=float, default=1.0)
     args = ap.parse_args(argv)

@@ -1,0 +1,127 @@
+"""Quantized-inference benchmark: bytes saved vs forward error per map.
+
+Each row runs the same ksplit linear (the production MPLinear path) under
+one weight map — uniform ``int8_pt``, uniform ``int4_pt``, and the
+activation-aware calibrated mix (quiet K-blocks int8, loud ones kept
+fp32) — against a synthetic loud-channel operator, and reports
+
+* ``bytes_frac`` — storage bytes (scale metadata included) over the
+  uniform-fp32 weight,
+* ``rel_err``    — max forward error vs the fp64 oracle, normalized by
+  the output magnitude,
+* ``calib_ok``   — the calibrated mix must beat uniform int8 accuracy
+  while staying below half the fp32 bytes (the tradeoff the map buys).
+
+``rel_err`` is gated log-scale (same decade) by ``benchmarks/compare.py``;
+bytes fractions are deterministic layout facts.
+
+    PYTHONPATH=src python benchmarks/quant_inference.py --smoke \
+        --out BENCH_quant.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _operator(n: int, loud_frac: float = 0.125, loud_gain: float = 30.0):
+    """Weight + activations with a contiguous band of loud input channels
+    (the shape the activation-aware calibrator exists for: the loud band
+    is resolvable at K-block granularity, so the calibrated map can keep
+    exactly those blocks in the float format)."""
+    import numpy as np
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((n, n)).astype(np.float32)
+    x = rng.standard_normal((8, n)).astype(np.float32)
+    x[:, : int(n * loud_frac)] *= loud_gain
+    return w, x
+
+
+def _row(name: str, w, x, cls, tile: int, fset) -> tuple:
+    import jax
+    import numpy as np
+
+    from repro.core.layout import KSplitWeight, ksplit_matmul
+
+    W = KSplitWeight.from_dense(jax.numpy.asarray(w), cls, tile, fset)
+    y = jax.block_until_ready(ksplit_matmul(jax.numpy.asarray(x), W))
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        jax.block_until_ready(ksplit_matmul(jax.numpy.asarray(x), W))
+    us = (time.perf_counter() - t0) / iters * 1e6
+
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    rel = float(np.abs(np.asarray(y, np.float64) - exact).max()
+                / np.abs(exact).max())
+    frac = float(W.storage_bytes()) / (w.size * 4)
+    return name, us, rel, frac
+
+
+def bench(smoke: bool = True) -> list[tuple]:
+    import numpy as np
+
+    from repro.core.formats import format_set
+    from repro.quant import ActStats, block_scores, calibrated_cls
+
+    n, tile = (64, 16) if smoke else (512, 32)
+    w, x = _operator(n)
+    kt = n // tile
+    s8 = format_set("int8_pt", "fp32")
+    s4 = format_set("int4_pt", "fp32")
+    maps = {
+        "int8_uniform": (s8, np.full(kt, s8.low, np.int8)),
+        "int4_uniform": (s4, np.full(kt, s4.low, np.int8)),
+        "mixed_calibrated": (s8, calibrated_cls(
+            block_scores(w, ActStats().observe(x).get(n), tile), 0.25, s8)),
+    }
+    raw = {tag: _row(f"quant_{tag}_{n}", w, x, cls, tile, fs)
+           for tag, (fs, cls) in maps.items()}
+
+    rows = []
+    for tag, (name, us, rel, frac) in raw.items():
+        calib_ok = 1
+        if tag == "mixed_calibrated":
+            calib_ok = int(rel < raw["int8_uniform"][2] and frac < 0.5)
+        derived = (f"rel_err={rel:.3g};bytes_frac={frac:.4f};"
+                   f"calib_ok={calib_ok}")
+        rows.append((name, us, derived, bool(calib_ok)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    rows = bench(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    bad = []
+    for name, us, derived, ok in rows:
+        print(f"{name},{us:.1f},{derived}")
+        if not ok:
+            bad.append(name)
+    if args.out:
+        from benchmarks.bench_io import write_bench
+        write_bench(args.out, "quant",
+                    [(name, us, derived) for name, us, derived, _ in rows],
+                    meta={"smoke": args.smoke},
+                    errors=[{"name": n, "error": "calibrated mix did not "
+                             "beat uniform int8 under the bytes cap"}
+                            for n in bad])
+        print(f"wrote {args.out}")
+    if bad:
+        print(f"FAILED cases: {bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -261,3 +261,38 @@ assert all(r.out_tokens == ref.out_tokens for r, ref in zip(wave, refs))
 assert cst["post_warmup_recompiles"] == 0
 assert wave[3].bucket.startswith("S16")   # L=11 → chunked 2×8 prefill
 repro.configure(obs=False)
+
+# --- 12. int8 serving: the quantized-inference format zoo (repro.quant) -----
+# The registry's integer formats store per-tile symmetric-absmax scales
+# (int8_pt = 1 B/elem + one fp32 scale per tile) through the
+# encode/decode protocol.  quantize_params() rebuilds every ksplit
+# weight of a checkpoint under an int set with an ACTIVATION-AWARE map:
+# K-blocks multiplying loud input channels keep the float HIGH format
+# (their weight rounding is amplified by the activation magnitude), the
+# quiet rest drops to int8.  The result is an ordinary params pytree,
+# served as an Engine weight variant next to the float weights — same
+# buckets, zero extra machinery, zero post-warmup recompiles.
+from repro.core.formats import FormatSet      # noqa: E402
+from repro.core.layout import KSplitWeight    # noqa: E402
+from repro.quant import map_report, quantize_params  # noqa: E402
+
+qset = FormatSet.parse("int8:d")              # aliases: int8_pt + fp32
+qparams = quantize_params(params, fset=qset, ratio_high=0.25)
+leaves = [w for w in jax.tree_util.tree_leaves(
+    qparams, is_leaf=lambda v: isinstance(v, KSplitWeight))
+    if isinstance(w, KSplitWeight)]
+rep_q = map_report(leaves[0])
+qtag = qset.key()
+eng_q = Engine(cfg, params, ServeConfig(buckets=(4,), max_batch=2,
+                                        max_seq=32), variants={qtag: qparams})
+eng_q.warmup()
+qreqs = [Request(np.array(p, np.int32), max_new_tokens=3, fset=f)
+         for p, f in [([1, 2, 3], "default"), ([4, 5], qtag),
+                      ([6, 7, 8, 9], qtag), ([2, 2, 2], "default")]]
+eng_q.generate(qreqs)
+qst = eng_q.stats()
+print(f"int8 serving: weight bytes {rep_q['bytes_vs_fp32']:.2f}x fp32 "
+      f"(classes {rep_q['classes']}), served float+{qtag} side by side, "
+      f"post-warmup recompiles: {qst['compile']['post_warmup_recompiles']}")
+assert qst["compile"]["post_warmup_recompiles"] == 0
+assert {r.bucket for r in qreqs} == {"S4/default", f"S4/{qtag}"}

@@ -82,6 +82,31 @@ def class_error_bounds(pa: np.ndarray, pb: np.ndarray, pc: np.ndarray,
     return out
 
 
+def _tile_max_envelope(x_abs: np.ndarray, cls_map: np.ndarray, tile: int,
+                       fset: FormatSet) -> np.ndarray:
+    """``x_abs`` with every per-tile-scaled tile replaced by its tile-wide
+    max.  A per-tile symmetric-absmax format ties each element's
+    quantization error to the tile's absmax (|Δx| ≤ u_q·amax_tile), not the
+    element's own magnitude, so the error-scale envelope must be flat per
+    tile wherever such a class sits.  No-op (returns ``x_abs`` unchanged)
+    when no per-tile-scaled class is present."""
+    cls_map = np.asarray(cls_map)
+    scaled = {int(c) for c in np.unique(cls_map)
+              if fset.fmt(int(c)).per_tile_scaled}
+    if not scaled:
+        return x_abs
+    out = np.array(x_abs, np.float64, copy=True)
+    mt, nt = cls_map.shape
+    for i in range(mt):
+        for j in range(nt):
+            if int(cls_map[i, j]) not in scaled:
+                continue
+            blk = out[i * tile:(i + 1) * tile, j * tile:(j + 1) * tile]
+            if blk.size:
+                blk[...] = blk.max()
+    return out
+
+
 def error_scale(a: np.ndarray, b: np.ndarray, c: np.ndarray | None = None,
                 beta: float = 0.0) -> np.ndarray:
     """Per-element magnitude the relative bounds scale by:
@@ -186,7 +211,17 @@ def check_against_fp64(out_dense, a, b, c, pa: np.ndarray, pb: np.ndarray,
            else np.asarray(c, np.float64))
     exact = alpha * (a64 @ b64) + beta * c64
     err = np.abs(np.asarray(out_dense, np.float64) - exact)
-    scale = abs(alpha) * error_scale(a64, b64, c64, beta) + 1e-30
+    # per-tile-scaled (integer) classes: widen |A|/|B|/|C| to tile-absmax
+    # envelopes, and pool the resulting scale to its per-tile max under int
+    # C tiles — the storeback quantization error there is u_store·amax of
+    # the whole output tile, not of each element
+    aa = _tile_max_envelope(np.abs(a64), pa, tile, fset)
+    bb = _tile_max_envelope(np.abs(b64), pb, tile, fset)
+    cc = _tile_max_envelope(np.abs(c64), pc, tile, fset)
+    scale = aa @ bb
+    if beta:
+        scale = scale + abs(beta) * cc
+    scale = _tile_max_envelope(abs(alpha) * scale, pc, tile, fset) + 1e-30
     bounds = class_error_bounds(pa, pb, pc, a64.shape[1], fset, safety)
     sel = np.repeat(np.repeat(np.asarray(pc), tile, 0), tile, 1)
     sel = sel[: err.shape[0], : err.shape[1]]

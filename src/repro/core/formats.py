@@ -25,10 +25,91 @@ HIGH=2.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Mapping
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTile:
+    """Result of :meth:`PrecisionFormat.encode`: storage payload + metadata.
+
+    ``payload`` is the array in the format's ``storage_dtype``; ``meta`` is
+    the quantization metadata needed to decode it — ``None`` for formats
+    whose storage round-trip is metadata-free (fp and split formats), a
+    per-tile fp32 scale array ``[..., rb, cb]`` for per-tile-scaled integer
+    formats.  ``tile`` records the block edge the scales were computed at
+    (``None`` → one block over the trailing two dims).
+    """
+
+    payload: object
+    meta: object = None
+    tile: int | None = None
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedTile,
+    lambda qt: ((qt.payload, qt.meta), qt.tile),
+    lambda tile, kids: QuantizedTile(kids[0], kids[1], tile))
+
+
+def tile_absmax(x: jax.Array, tile: int | None = None) -> jax.Array:
+    """Per-(tile × tile)-block absolute max over the trailing two dims.
+
+    Ragged trailing blocks are allowed (zero-padded — zeros never win the
+    max).  ``tile=None`` (or ndim < 2) reduces the whole trailing extent to
+    a single block.  Max reductions are exact, so the result is bitwise
+    independent of how the blocks were sliced up by the caller — the
+    property that keeps layout-time and kernel-epilogue quantization
+    bit-identical.
+    """
+    xf = jnp.abs(jnp.asarray(x).astype(jnp.float32))
+    if xf.ndim < 2:
+        return jnp.max(xf) if xf.size else jnp.zeros((), jnp.float32)
+    r, c = int(xf.shape[-2]), int(xf.shape[-1])
+    t = int(tile) if tile else max(r, c, 1)
+    rb, cb = -(-r // t), -(-c // t)
+    pad = [(0, 0)] * (xf.ndim - 2) + [(0, rb * t - r), (0, cb * t - c)]
+    xp = jnp.pad(xf, pad).reshape(*xf.shape[:-2], rb, t, cb, t)
+    return jnp.max(xp, axis=(-3, -1))
+
+
+def expand_tile_scale(scale: jax.Array, tile: int | None,
+                      shape: tuple[int, ...]) -> jax.Array:
+    """Broadcast a per-tile scale ``[..., rb, cb]`` back to ``shape``."""
+    s = jnp.asarray(scale)
+    if s.ndim < 2 or len(shape) < 2:
+        return jnp.broadcast_to(s, shape) if s.ndim else s
+    t = int(tile) if tile else max(int(shape[-2]), int(shape[-1]), 1)
+    rb, cb = int(s.shape[-2]), int(s.shape[-1])
+    e = jnp.broadcast_to(s[..., :, None, :, None],
+                         (*s.shape[:-2], rb, t, cb, t))
+    e = e.reshape(*s.shape[:-2], rb * t, cb * t)
+    return e[..., :shape[-2], :shape[-1]]
+
+
+_warned_legacy_store = False
+
+
+def _warn_legacy(api: str) -> None:
+    """One-shot process-wide deprecation warning for the pre-encode API
+    (mirrors the ServeConfig legacy-kwargs shim)."""
+    global _warned_legacy_store
+    if _warned_legacy_store:
+        return
+    _warned_legacy_store = True
+    warnings.warn(
+        f"PrecisionFormat.{api}() is deprecated: use encode()/decode() "
+        f"(or to_buffer() for the layout-buffer value) — the dtype-cast "
+        f"protocol cannot carry quantization metadata", DeprecationWarning,
+        stacklevel=3)
+    try:
+        from repro.obs import event
+        event("formats.legacy_api", "formats", api=api)
+    except Exception:
+        pass
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +126,7 @@ class PrecisionFormat:
     name: str                     # registry key, also used in cache keys
     storage_dtype: object         # dtype tiles are stored/communicated in
     compute_dtype: object         # operational dtype of the dot
-    bytes_per_elem: int           # storage bytes per element
+    bytes_per_elem: float         # storage bytes per element (0.5 for int4)
     dot_precision: jax.lax.Precision = jax.lax.Precision.DEFAULT
     accum_dtype: object = jnp.float32   # accumulator (fp32 everywhere today)
     pass_cost: Mapping[str, float] = dataclasses.field(
@@ -68,15 +149,56 @@ class PrecisionFormat:
         mirror into a wider buffer while keeping their own rounding)."""
         return self.storage_dtype
 
+    @property
+    def per_tile_scaled(self) -> bool:
+        """True when storage error is bounded per tile *absmax* (scaled
+        integer formats) rather than per element magnitude — accuracy
+        bounds must then use tile-envelope error scales."""
+        return False
+
+    @property
+    def meta_bytes_per_tile(self) -> float:
+        """Quantization-metadata bytes carried per (tile × tile) tile
+        (e.g. one fp32 scale for per-tile-scaled integer formats)."""
+        return 0.0
+
+    # -- the quantization protocol ------------------------------------------
+    def encode(self, x: jax.Array, *, tile: int | None = None
+               ) -> QuantizedTile:
+        """Encode ``x`` into storage: payload in ``storage_dtype`` plus
+        first-class quantization metadata (identity/``None`` for plain fp
+        formats).  ``tile`` is the block edge metadata is computed per."""
+        return QuantizedTile(jnp.asarray(x).astype(self.storage_dtype))
+
+    def decode(self, qt: QuantizedTile) -> jax.Array:
+        """Exact fp32 value a consumer reconstructs from storage."""
+        return jnp.asarray(qt.payload).astype(jnp.float32)
+
+    def to_buffer(self, x: jax.Array, *, tile: int | None = None
+                  ) -> jax.Array:
+        """Value a layout buffer holds for ``x``: the encode round-trip
+        landed in ``buffer_dtype`` (payload itself when metadata-free, the
+        decoded mirror when metadata is needed to reconstruct)."""
+        qt = self.encode(x, tile=tile)
+        if qt.meta is None:
+            return jnp.asarray(qt.payload).astype(self.buffer_dtype)
+        return self.decode(qt).astype(self.buffer_dtype)
+
+    def roundtrip(self, x: jax.Array, *, tile: int | None = None
+                  ) -> jax.Array:
+        """fp32 decode∘encode round-trip (what a consumer sees)."""
+        return self.decode(self.encode(x, tile=tile))
+
+    # -- deprecated dtype-cast protocol (pre-encode/decode) ------------------
     def store(self, x: jax.Array) -> jax.Array:
-        """Value a layout buffer holds for ``x``: rounded to this format's
-        storage precision, in ``buffer_dtype``."""
-        return x.astype(self.storage_dtype)
+        """Deprecated: use :meth:`to_buffer` (or :meth:`encode`)."""
+        _warn_legacy("store")
+        return self.to_buffer(x)
 
     def quantize(self, x: jax.Array) -> jax.Array:
-        """Round-trip through storage precision (receiver-side conversion
-        produces exactly this value at the consumer)."""
-        return x.astype(self.storage_dtype).astype(jnp.float32)
+        """Deprecated: use :meth:`roundtrip` (decode∘encode)."""
+        _warn_legacy("quantize")
+        return self.roundtrip(x)
 
     def storage_roundoff(self) -> float:
         """Unit roundoff of values surviving a storage round-trip."""
@@ -117,9 +239,31 @@ def register_format(fmt: PrecisionFormat | None = None, /, **kwargs
     if prev is not None and prev.signature() != fmt.signature():
         raise ValueError(
             f"format {fmt.name!r} already registered with a different "
-            f"definition ({prev.signature()} vs {fmt.signature()})")
+            f"definition — mismatched fields: "
+            f"{'; '.join(_field_diffs(prev, fmt))} "
+            f"({prev.signature()} vs {fmt.signature()})")
     _REGISTRY[fmt.name] = fmt
     return fmt
+
+
+def _field_diffs(prev: PrecisionFormat, new: PrecisionFormat) -> list[str]:
+    """Human-readable ``field: old -> new`` list for a re-registration
+    conflict (the signature says *that* they differ; this says *where*)."""
+    missing = object()
+    names = sorted({f.name for f in dataclasses.fields(prev)}
+                   | {f.name for f in dataclasses.fields(new)})
+    diffs = []
+    if type(prev) is not type(new):
+        diffs.append(f"class: {type(prev).__name__} -> {type(new).__name__}")
+    for n in names:
+        pv, nv = getattr(prev, n, missing), getattr(new, n, missing)
+        if pv is missing:
+            diffs.append(f"{n}: <absent> -> {nv!r}")
+        elif nv is missing:
+            diffs.append(f"{n}: {pv!r} -> <absent>")
+        elif pv != nv:
+            diffs.append(f"{n}: {pv!r} -> {nv!r}")
+    return diffs or ["<signature-only difference>"]
 
 
 def get_format(name: str) -> PrecisionFormat:
@@ -214,15 +358,16 @@ class SplitFormat(PrecisionFormat):
     def buffer_dtype(self):
         return jnp.float32
 
-    def store(self, x: jax.Array) -> jax.Array:
-        parts = split_slices(x, self.slices, self.slice_dtype)
+    def encode(self, x: jax.Array, *, tile: int | None = None
+               ) -> QuantizedTile:
+        """Payload is the fp32 recombination of the slice expansion (the
+        value *is* representable as a sum of slice-dtype terms, so no
+        metadata is needed to decode it)."""
+        parts = split_slices(jnp.asarray(x), self.slices, self.slice_dtype)
         out = parts[0].astype(jnp.float32)
         for s in parts[1:]:
             out = out + s.astype(jnp.float32)
-        return out
-
-    def quantize(self, x: jax.Array) -> jax.Array:
-        return self.store(x)
+        return QuantizedTile(out)
 
     def recovered_roundoff(self) -> float:
         """Unit roundoff recovered by the full slice expansion."""
@@ -256,6 +401,93 @@ SPLIT3_E5M2 = register_format(SplitFormat(
     compute_dtype=jnp.bfloat16, bytes_per_elem=3,
     pass_cost={"default": 9.0, "gpu": 2.25, "cpu": 4.5},
     short="D", slices=3, slice_dtype=jnp.float8_e5m2))
+
+
+# ---------------------------------------------------------------------------
+# Scaled integer formats (quantized-inference zoo)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IntFormat(PrecisionFormat):
+    """Symmetric per-tile-absmax scaled integer storage.
+
+    A tile is stored as ``qbits``-bit integer codes in an int8 payload
+    container plus one fp32 scale per (tile × tile) tile — the metadata the
+    encode/decode protocol exists to carry.  ``scale = absmax / qmax`` and
+    ``q = clip(round(x / scale), ±qmax)``, so the round-trip error is at
+    most ``scale/2 = storage_roundoff() · absmax`` per element (relative to
+    the tile's loudest element, not each element's own magnitude — which is
+    why :attr:`per_tile_scaled` flips the accuracy oracle to tile-envelope
+    error scales).
+
+    Layout buffers mirror the *dequantized* value in fp32 (the split-format
+    idiom), so every layout/kernel keeps single-dtype tile buffers; the dot
+    itself models exact int8×int8→int32 accumulation as an fp32 HIGHEST
+    dot of the dequantized mirrors (products of ≤8-bit-significand values
+    scaled per tile are exact in fp32).
+    """
+
+    qbits: int = 8
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.qbits - 1) - 1
+
+    @property
+    def buffer_dtype(self):
+        return jnp.float32
+
+    @property
+    def per_tile_scaled(self) -> bool:
+        return True
+
+    @property
+    def meta_bytes_per_tile(self) -> float:
+        return 4.0          # one fp32 scale per tile
+
+    def encode(self, x: jax.Array, *, tile: int | None = None
+               ) -> QuantizedTile:
+        xf = jnp.asarray(x).astype(jnp.float32)
+        am = tile_absmax(xf, tile)
+        scale = jnp.where(am > 0, am / self.qmax, 1.0).astype(jnp.float32)
+        se = expand_tile_scale(scale, tile, xf.shape)
+        q = jnp.clip(jnp.round(xf / se), -self.qmax, self.qmax)
+        return QuantizedTile(q.astype(jnp.int8), scale,
+                             int(tile) if tile else None)
+
+    def decode(self, qt: QuantizedTile) -> jax.Array:
+        q = jnp.asarray(qt.payload).astype(jnp.float32)
+        if qt.meta is None:
+            return q
+        return q * expand_tile_scale(jnp.asarray(qt.meta), qt.tile, q.shape)
+
+    def storage_roundoff(self) -> float:
+        """Quantization half-step relative to the per-tile absmax."""
+        return 0.5 / self.qmax
+
+    def operational_roundoff(self) -> float:
+        # dequantized fp32 mirrors under a HIGHEST dot: fp32 grade
+        return float(2.0 ** -24)
+
+    def signature(self) -> str:
+        return (f"{super().signature()}:int{self.qbits}pt"
+                f":meta{self.meta_bytes_per_tile:g}B")
+
+
+#: int8 + per-tile scale: the production quantized-inference workhorse.
+INT8_PT = register_format(IntFormat(
+    name="int8_pt", storage_dtype=jnp.int8, compute_dtype=jnp.float32,
+    bytes_per_elem=1, dot_precision=jax.lax.Precision.HIGHEST,
+    pass_cost={"default": 1.0, "gpu": 0.5, "cpu": 0.75},
+    short="Q", qbits=8))
+
+#: int4 + per-tile scale (codes live in an int8 container; ``bytes_per_elem``
+#: prices the packed wire/storage footprint).
+INT4_PT = register_format(IntFormat(
+    name="int4_pt", storage_dtype=jnp.int8, compute_dtype=jnp.float32,
+    bytes_per_elem=0.5, dot_precision=jax.lax.Precision.HIGHEST,
+    pass_cost={"default": 1.0, "gpu": 0.25, "cpu": 0.75},
+    short="Q", qbits=4))
 
 
 # ---------------------------------------------------------------------------
@@ -338,8 +570,16 @@ class FormatSet:
     def storage_dtype(self, code: int):
         return self.fmt(code).storage_dtype
 
-    def bytes_of(self, code: int) -> int:
+    def bytes_of(self, code: int) -> float:
         return self.fmt(code).bytes_per_elem
+
+    def meta_bytes_of(self, code: int) -> float:
+        """Quantization-metadata bytes per (tile × tile) tile of a class."""
+        return self.fmt(code).meta_bytes_per_tile
+
+    def tile_bytes(self, code: int, tile: int) -> float:
+        """Total storage bytes of one (tile × tile) tile incl. metadata."""
+        return self.bytes_of(code) * tile * tile + self.meta_bytes_of(code)
 
     def role_bytes(self) -> tuple[float, float, float]:
         """(high, low, low8) storage bytes per element; low8 0.0 if absent."""
@@ -356,8 +596,34 @@ class FormatSet:
     def from_key(cls, key: str) -> "FormatSet":
         return cls(tuple(key.split("+")))
 
+    @classmethod
+    def parse(cls, spec: str) -> "FormatSet":
+        """Parse a CLI/user format spec into a FormatSet.
+
+        Accepts registry names and role aliases (``d``/``s``/``q`` → the
+        default-role formats, ``int8``/``int4`` → the per-tile-scaled
+        integer formats) separated by ``:``, ``+`` or ``,``; names are
+        stably sorted into ascending storage cost, so specs may be written
+        in paper role order: ``FormatSet.parse("d:s:int8_pt")`` ==
+        ``format_set("int8_pt", "bf16", "fp32")``.
+        """
+        import re
+        toks = [t.strip() for t in re.split("[:+,]", spec) if t.strip()]
+        names = [SPEC_ALIASES.get(t.lower(), t) for t in toks]
+        for n in names:
+            get_format(n)   # unknown names fail here, not in sort
+        names.sort(key=lambda n: float(get_format(n).bytes_per_elem))
+        return cls(tuple(names))
+
     def signatures(self) -> dict[str, str]:
         return {n: get_format(n).signature() for n in self.names}
+
+
+#: role / shorthand aliases accepted by :meth:`FormatSet.parse`
+SPEC_ALIASES: dict[str, str] = {
+    "d": "fp32", "s": "bf16", "q": "fp8_e4m3",
+    "fp8": "fp8_e4m3", "int8": "int8_pt", "int4": "int4_pt",
+}
 
 
 def format_set(*names: str) -> FormatSet:

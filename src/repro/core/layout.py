@@ -128,7 +128,8 @@ class MPMatrix:
         cmap = jnp.asarray(cls_map, jnp.int8)
         sel = jnp.repeat(jnp.repeat(cmap, tile, 0), tile, 1)
         bufs = tuple(
-            fset.fmt(code).store(jnp.where(sel == code, wp, 0.0))
+            fset.fmt(code).to_buffer(jnp.where(sel == code, wp, 0.0),
+                                     tile=tile)
             for code in fset.codes)
         return cls(bufs, _HashableMap(cls_map), tile,
                    (w.shape[0], w.shape[1]), fset)
@@ -240,7 +241,7 @@ class CompactMPMatrix:
             idx = np.nonzero(flat_cls == code)[0]
             if len(idx) == 0:
                 return jnp.zeros((0, tile, tile), fmt.buffer_dtype)
-            return fmt.store(tiles[jnp.asarray(idx)])
+            return fmt.to_buffer(tiles[jnp.asarray(idx)], tile=tile)
 
         return cls(tuple(gather_class(code) for code in fset.codes),
                    _HashableMap(cls_map), _HashableMap(slot), tile,
@@ -267,8 +268,9 @@ class CompactMPMatrix:
         return MPMatrix.from_dense(dense, self.cls.arr, self.tile, self.fset)
 
     def storage_bytes(self) -> int:
-        return sum(buf.size * self.fset.bytes_of(code)
-                   for code, buf in enumerate(self.tiles))
+        return int(sum(buf.size * self.fset.bytes_of(code)
+                       + buf.shape[0] * self.fset.meta_bytes_of(code)
+                       for code, buf in enumerate(self.tiles)))
 
 
 # ---------------------------------------------------------------------------
@@ -352,7 +354,7 @@ class KSplitWeight:
             idx = parts[code]
             rows = (wp[jnp.asarray(idx)] if len(idx)
                     else jnp.zeros((0, n), jnp.float32))
-            bufs.append(fset.fmt(code).store(rows))
+            bufs.append(fset.fmt(code).to_buffer(rows, tile=tile))
         return cls(tuple(bufs), _HashableMap(k_cls), tile, (k, n), fset)
 
     def to_dense(self) -> jax.Array:
@@ -367,8 +369,12 @@ class KSplitWeight:
         return wp[:k, :n]
 
     def storage_bytes(self) -> int:
-        return sum(buf.size * self.fset.bytes_of(code)
-                   for code, buf in enumerate(self.bufs))
+        t = self.tile
+        return int(sum(
+            buf.size * self.fset.bytes_of(code)
+            + (buf.shape[0] // t) * (-(-buf.shape[1] // t))
+            * self.fset.meta_bytes_of(code)
+            for code, buf in enumerate(self.bufs)))
 
 
 # ---------------------------------------------------------------------------
@@ -433,7 +439,8 @@ class NSplitWeight:
         start = 0
         for code in fset.class_order:
             stop = start + cols[code]
-            bufs[code] = fset.fmt(code).store(wp[:, start:stop])
+            bufs[code] = fset.fmt(code).to_buffer(wp[:, start:stop],
+                                                  tile=tile)
             start = stop
         return cls(tuple(bufs), _HashableMap(n_cls), tile, (k, n), fset)
 
@@ -443,8 +450,12 @@ class NSplitWeight:
              for code in self.fset.class_order], axis=1)
 
     def storage_bytes(self) -> int:
-        return sum(buf.size * self.fset.bytes_of(code)
-                   for code, buf in enumerate(self.bufs))
+        t = self.tile
+        return int(sum(
+            buf.size * self.fset.bytes_of(code)
+            + (-(-buf.shape[0] // t)) * (buf.shape[1] // t)
+            * self.fset.meta_bytes_of(code)
+            for code, buf in enumerate(self.bufs)))
 
 
 #: reduce LOW-class row-parallel partial sums in the class's compute dtype

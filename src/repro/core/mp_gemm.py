@@ -100,9 +100,9 @@ def mp_gemm_tilewise_ref(a: MPMatrix, b: MPMatrix, c: MPMatrix,
                 bt_op = np.asarray(jnp.asarray(bt).astype(op), np.float32)
                 acc += at_op @ bt_op
             upd = alpha * acc + beta * cd[i * t:(i + 1) * t, j * t:(j + 1) * t]
-            # storage rounding of the C tile
+            # storage rounding of the C tile (one tile -> one scale block)
             out[i * t:(i + 1) * t, j * t:(j + 1) * t] = np.asarray(
-                fmt.quantize(jnp.asarray(upd)))
+                fmt.roundtrip(jnp.asarray(upd)))
     return jnp.asarray(out[: c.shape[0], : c.shape[1]])
 
 

@@ -95,8 +95,8 @@ def map_storage_bytes(cls_map: np.ndarray, tile: int,
     if bad:
         raise ValueError(
             f"class codes {bad} outside format set {fset.names}")
-    return sum(int((cls_map == c).sum()) * fset.bytes_of(c) * tile * tile
-               for c in classes)
+    return int(sum(int((cls_map == c).sum()) * fset.tile_bytes(c, tile)
+                   for c in classes))
 
 
 def _largest_remainder_percent(counts: list[int], total: int) -> list[int]:
@@ -275,8 +275,9 @@ def make_map(
 def quantize_tile(x: jax.Array, cls: int,
                   fset: FormatSet = DEFAULT_FORMATS) -> jax.Array:
     """Round-trip a tile through its storage precision (receiver-side
-    conversion produces exactly this value at the consumer)."""
-    return fset.fmt(int(cls)).quantize(x)
+    conversion produces exactly this value at the consumer).  ``x`` is one
+    tile: per-tile-scaled formats compute a single scale over it."""
+    return fset.fmt(int(cls)).roundtrip(x)
 
 
 # Convenience named policies matching the paper's sweep (Figs. 2-4).

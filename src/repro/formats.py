@@ -1,0 +1,42 @@
+"""repro.formats — public facade over the precision-format registry.
+
+Import surface for tools and CLIs::
+
+    from repro import formats
+    fset = formats.FormatSet.parse("d:s:int8_pt")
+    formats.register_format(my_fmt)
+
+The module itself imports without jax (like :mod:`repro.serve`); every
+attribute resolves lazily into :mod:`repro.core.formats` on first access,
+so ``import repro.formats`` stays cheap in config/tooling contexts.  The
+``repro.core.formats`` import path keeps working unchanged — this facade
+adds no second registry, it is a view of the same one.
+"""
+__all__ = [
+    "DEFAULT_FORMATS",
+    "FormatSet",
+    "IntFormat",
+    "PrecisionFormat",
+    "QuantizedTile",
+    "SPEC_ALIASES",
+    "SplitFormat",
+    "format_set",
+    "get_format",
+    "register_format",
+    "registered_formats",
+    "registry_signatures",
+]
+
+_CORE = "repro.core.formats"
+
+
+def __getattr__(name):
+    if name not in __all__:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(_CORE), name)
+
+
+def __dir__():
+    return sorted(__all__)

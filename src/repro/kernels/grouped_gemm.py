@@ -33,7 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.layout import CompactMPMatrix, _check_codes
-from repro.kernels.mp_gemm_tile import format_specs
+from repro.kernels.mp_gemm_tile import format_specs, quantize_block
 
 
 def _kernel(*refs, nf: int, kt: int, spec: tuple):
@@ -65,7 +65,12 @@ def _kernel(*refs, nf: int, kt: int, spec: tuple):
 
     @pl.when(k == kt - 1)
     def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        qmax = spec[3] if len(spec) > 3 else None
+        out = acc_ref[...]
+        if qmax is not None:
+            # the block is exactly one C tile -> one quantization scale
+            out = quantize_block(out, qmax)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 def _class_tables(cls_map: np.ndarray, slot_map: np.ndarray, want: int,
@@ -128,7 +133,7 @@ def grouped_mp_gemm(a: CompactMPMatrix, b: CompactMPMatrix,
     # zero tiles appended per format buffer
     a_bufs, b_bufs, a_slots, b_slots = [], [], [], []
     for code in fset.codes:
-        z = jnp.zeros((1, t, t), fset.storage_dtype(code))
+        z = jnp.zeros((1, t, t), fset.fmt(code).buffer_dtype)
         a_bufs.append(jnp.concatenate([a.tiles[code], z], 0))
         b_bufs.append(jnp.concatenate([b.tiles[code], z], 0))
         a_slots.append(jnp.asarray(_class_tables(
@@ -142,7 +147,7 @@ def grouped_mp_gemm(a: CompactMPMatrix, b: CompactMPMatrix,
         idx = np.argwhere(c_cls == code)
         if len(idx) == 0:
             out_buffers.append(
-                jnp.zeros((0, t, t), fset.storage_dtype(code)))
+                jnp.zeros((0, t, t), fset.fmt(code).buffer_dtype))
             continue
         ci = jnp.asarray(idx[:, 0].astype(np.int32))
         cj = jnp.asarray(idx[:, 1].astype(np.int32))

@@ -20,7 +20,11 @@ bm=bn=bk=128 → 128²·(4+4+4)·2(double-buffer) ≈ 400 KB VMEM; bump bm/bn to
 256/512 for large M on real hardware.  MXU wants every dim % 128 == 0.
 
 ``spec`` rows are the hashable (compute_dtype_name, dot_precision,
-storage_dtype_name) projection from ``mp_gemm_tile.format_specs``.
+buffer_dtype_name, qmax_or_None) projection from
+``mp_gemm_tile.format_specs`` — the kernel consumes only the compute
+dtype and dot precision (the fp32 output carries no storage rounding, so
+per-tile-scaled classes need no epilogue here; their quantization already
+lives in the weight buffers' dequantized mirrors).
 """
 from __future__ import annotations
 
@@ -31,8 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_F32_SPEC = ("float32", jax.lax.Precision.HIGHEST, "float32")
-_BF16_SPEC = ("bfloat16", jax.lax.Precision.DEFAULT, "bfloat16")
+_F32_SPEC = ("float32", jax.lax.Precision.HIGHEST, "float32", None)
+_BF16_SPEC = ("bfloat16", jax.lax.Precision.DEFAULT, "bfloat16", None)
 
 
 def _gemm_kernel(x_ref, w_ref, y_in_ref, y_ref, acc_ref, *,

@@ -21,8 +21,13 @@ inside the ~16 MB v5e VMEM with double buffering.  MXU alignment requires
 tile % 128 == 0 on real hardware (interpret mode accepts any).
 
 ``FormatSpec`` rows are ``(compute_dtype_name, dot_precision,
-storage_dtype_name)`` — a hashable, jit-static projection of the registered
-:class:`~repro.core.formats.PrecisionFormat` records (one per class code).
+buffer_dtype_name, qmax_or_None)`` — a hashable, jit-static projection of
+the registered :class:`~repro.core.formats.PrecisionFormat` records (one per
+class code).  ``qmax`` is set for per-tile-scaled integer formats: the
+storeback epilogue then folds symmetric absmax quantize-dequantize into the
+fp32 accumulator (one scale per C tile, bit-identical to the layout-side
+``encode``), so int C tiles leave the kernel already carrying their
+quantization rounding in the fp32 mirror buffer.
 """
 from __future__ import annotations
 
@@ -37,11 +42,22 @@ from repro.core.formats import DEFAULT_FORMATS, FormatSet
 
 
 def format_specs(fset: FormatSet) -> tuple:
-    """Hashable per-class (compute, precision, storage) rows for jit keys."""
+    """Hashable per-class (compute, precision, buffer, qmax) rows for jit
+    keys (``qmax`` is None except for per-tile-scaled integer formats)."""
     return tuple(
         (jnp.dtype(f.compute_dtype).name, f.dot_precision,
-         jnp.dtype(f.storage_dtype).name)
+         jnp.dtype(f.buffer_dtype).name,
+         int(f.qmax) if getattr(f, "per_tile_scaled", False) else None)
         for f in fset.formats())
+
+
+def quantize_block(x: jax.Array, qmax: int) -> jax.Array:
+    """Symmetric absmax quantize-dequantize of one accumulator block (the
+    kernel-epilogue twin of ``IntFormat.encode``/``decode`` on a single
+    tile — same fp32 ops, bitwise identical)."""
+    am = jnp.max(jnp.abs(x))
+    scale = jnp.where(am > 0, am / qmax, 1.0).astype(jnp.float32)
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
 
 
 def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
@@ -71,7 +87,7 @@ def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
     cls_c = pc_ref[i, j]
 
     def dot_at(spec):
-        compute, prec, _ = spec
+        compute, prec = spec[0], spec[1]
 
         def dot():
             op = jnp.dtype(compute)
@@ -93,7 +109,9 @@ def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
         c32 = upcast_sum(c_refs)
         out = alpha * acc_ref[...] + beta * c32
         for code, (o_ref, spec) in enumerate(zip(o_refs, specs)):
-            o_ref[...] = jnp.where(cls_c == code, out, 0.0).astype(
+            qmax = spec[3] if len(spec) > 3 else None
+            val = quantize_block(out, qmax) if qmax is not None else out
+            o_ref[...] = jnp.where(cls_c == code, val, 0.0).astype(
                 jnp.dtype(spec[2]))
 
 

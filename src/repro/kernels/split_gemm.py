@@ -27,6 +27,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import split_slices
+from repro.kernels.mp_gemm_tile import quantize_block
 from repro.split.recovery import slice_pair_order
 
 _GEMM_DIMS = (((1,), (0,)), ((), ()))
@@ -35,7 +36,7 @@ _GEMM_DIMS = (((1,), (0,)), ((), ()))
 def _spec_dot(a32, b32, spec):
     """One C-class tile dot: plain for slices=1, slice-pair expansion
     accumulated in ``slice_pair_order`` for split compound formats."""
-    compute, prec, _, slices, slice_dt = spec
+    compute, prec, _, slices, slice_dt = spec[:5]
     op = jnp.dtype(compute)
     if slices == 1:
         return jax.lax.dot_general(
@@ -92,7 +93,8 @@ def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
         c32 = upcast_sum(c_refs)
         out = alpha * acc_ref[...] + beta * c32
         for code, (o_ref, spec) in enumerate(zip(o_refs, specs)):
-            _, _, buf_dt, slices, slice_dt = spec
+            _, _, buf_dt, slices, slice_dt = spec[:5]
+            qmax = spec[5] if len(spec) > 5 else None
             val = out
             if slices > 1:
                 # split storage semantics: the buffer mirrors the value a
@@ -101,6 +103,10 @@ def _kernel(pa_ref, pb_ref, pc_ref,            # scalar prefetch (SMEM)
                 val = parts[0].astype(jnp.float32)
                 for s in parts[1:]:
                     val = val + s.astype(jnp.float32)
+            elif qmax is not None:
+                # per-tile-scaled int storage: fold symmetric absmax
+                # quantize-dequantize into the storeback (one scale per tile)
+                val = quantize_block(out, qmax)
             o_ref[...] = jnp.where(cls_c == code, val, 0.0).astype(
                 jnp.dtype(buf_dt))
 

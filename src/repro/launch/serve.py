@@ -62,6 +62,19 @@ def main():
     ap.add_argument("--request-seed", type=int, default=0,
                     help="base seed for per-request sampling streams "
                          "(request i uses request-seed + i)")
+    ap.add_argument("--formats", default="",
+                    help="override the arch's mixed-precision format set, "
+                         "e.g. fp8_e4m3+bf16+fp32 or the short form "
+                         "q:s:d (aliases: d=fp32 s=bf16 q=fp8_e4m3 "
+                         "int8=int8_pt int4=int4_pt)")
+    ap.add_argument("--quantize", default="",
+                    help="serve every request through an activation-aware "
+                         "quantized weight variant under this format-set "
+                         "spec (e.g. int8:d or int4:int8:d); loud tiles "
+                         "stay in the set's HIGH float format")
+    ap.add_argument("--quantize-ratio", type=float, default=0.25,
+                    help="fraction of K-blocks the calibrator keeps HIGH "
+                         "when --quantize is set")
     ap.add_argument("--stats", action="store_true",
                     help="print stats() JSON after serving")
     ap.add_argument("--trace", default="",
@@ -85,6 +98,12 @@ def main():
     cfg = get(args.arch)
     if args.smoke:
         cfg = reduced(cfg, tp=2)
+    if args.formats:
+        import dataclasses
+
+        from repro.core.formats import FormatSet
+        cfg = dataclasses.replace(
+            cfg, mp_formats=FormatSet.parse(args.formats).key())
     if cfg.encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
 
@@ -94,6 +113,20 @@ def main():
         restored, man = CK.restore(args.ckpt, {"params": params})
         params = restored["params"]
         print(f"loaded checkpoint step {man['step']}")
+
+    variants, req_tag = None, "default"
+    if args.quantize:
+        if args.replicas > 1:
+            raise SystemExit("--quantize serves through Engine weight "
+                             "variants; not supported with --replicas")
+        from repro.core.formats import FormatSet
+        from repro.quant import quantize_params
+        qset = FormatSet.parse(args.quantize)
+        req_tag = qset.key()
+        variants = {req_tag: quantize_params(
+            params, fset=qset, ratio_high=args.quantize_ratio)}
+        print(f"quantized variant {req_tag} "
+              f"(ratio_high={args.quantize_ratio})")
 
     sc = ServeConfig(
         buckets=(tuple(int(b) for b in args.buckets.split(","))
@@ -116,7 +149,7 @@ def main():
         print(f"cluster replicas={sc.replicas} mode={eng0.mode} buckets="
               f"{sorted(k.pad_len for k in eng0.scheduler.buckets)}")
     else:
-        server = eng0 = Engine(cfg, params, sc)
+        server = eng0 = Engine(cfg, params, sc, variants=variants)
         print(f"engine mode={eng0.mode} buckets="
               f"{sorted(k.pad_len for k in eng0.scheduler.buckets)} "
               f"refill={eng0.refill_enabled} "
@@ -133,6 +166,7 @@ def main():
                              np.int32),
                     max_new_tokens=args.max_new,
                     temperature=args.temperature,
+                    fset=req_tag,
                     seed=args.request_seed + i)
             for i, p in enumerate(args.prompts)]
     rejected = 0

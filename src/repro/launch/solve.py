@@ -45,7 +45,9 @@ def _parse():
                     help="starting precision map, e.g. 0D:100S or "
                          "0D:80S:20Q")
     ap.add_argument("--formats", default="",
-                    help="format-set key, e.g. fp8_e5m2+fp16+fp32")
+                    help="format-set spec, e.g. fp8_e5m2+fp16+fp32 or "
+                         "the short form d:s:q (aliases: d=fp32 s=bf16 "
+                         "q=fp8_e4m3 int8=int8_pt int4=int4_pt)")
     ap.add_argument("--method", default="lu", choices=["lu", "cg"])
     ap.add_argument("--tol", type=float, default=1.0)
     ap.add_argument("--max-sweeps", type=int, default=60)
@@ -84,7 +86,7 @@ def main() -> int:
     import numpy as np
 
     from repro import obs
-    from repro.core.formats import DEFAULT_FORMATS, format_set
+    from repro.core.formats import DEFAULT_FORMATS, FormatSet
     from repro.solve import (SolveConfig, diag_dominant, graded_spd,
                              rhs_for_solution, solve)
 
@@ -94,7 +96,7 @@ def main() -> int:
     grid = (tuple(int(v) for v in args.summa.lower().split("x"))
             if args.summa else None)
     hi, lo8 = _parse_ratio(args.ratio)
-    fset = (format_set(*args.formats.split("+")) if args.formats
+    fset = (FormatSet.parse(args.formats) if args.formats
             else DEFAULT_FORMATS)
     escalation = args.escalation or ("balanced" if grid else "tile")
 

@@ -27,6 +27,11 @@ def _parse():
     ap.add_argument("--summa", default="",
                     help="distributed-SUMMA self-check grid, e.g. 2x2 "
                          "(defaults to the arch's summa_grid)")
+    ap.add_argument("--formats", default="",
+                    help="override the arch's mixed-precision format set, "
+                         "e.g. fp8_e4m3+bf16+fp32 or the short form "
+                         "q:s:d (aliases: d=fp32 s=bf16 q=fp8_e4m3 "
+                         "int8=int8_pt int4=int4_pt)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--inject-fault", type=int, default=-1)
@@ -52,6 +57,12 @@ def main():
     cfg = get(args.arch)
     if args.smoke:
         cfg = reduced(cfg, tp=2)
+    if args.formats:
+        import dataclasses
+
+        from repro.core.formats import FormatSet
+        cfg = dataclasses.replace(
+            cfg, mp_formats=FormatSet.parse(args.formats).key())
 
     grid = (tuple(int(v) for v in args.summa.lower().split("x"))
             if args.summa else cfg.summa_grid)

@@ -1,0 +1,37 @@
+"""repro.quant — quantized-inference calibration over the format registry.
+
+Turns per-tile activation/weight absmax statistics into activation-aware
+precision maps for the integer formats (``int8_pt``/``int4_pt``)::
+
+    from repro.quant import ActStats, quantize_params
+    stats = ActStats()
+    stats.observe(batch_of_activations)          # online, any number
+    qparams = quantize_params(params, stats)     # loud tiles stay float
+    eng = Engine(cfg, params, variants={"int8": qparams})
+
+Imports lazily (jax-free at module import) like :mod:`repro.serve` and
+:mod:`repro.formats`.
+"""
+__all__ = [
+    "ActStats",
+    "activation_absmax",
+    "block_scores",
+    "calibrate_ksplit",
+    "calibrated_cls",
+    "map_report",
+    "quantize_params",
+]
+
+_MOD = "repro.quant.calibrate"
+
+
+def __getattr__(name):
+    if name not in __all__:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(_MOD), name)
+
+
+def __dir__():
+    return sorted(__all__)

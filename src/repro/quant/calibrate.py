@@ -1,0 +1,174 @@
+"""Activation-aware calibration: per-tile absmax statistics → class maps.
+
+The per-tile symmetric-absmax integer formats (``int8_pt``/``int4_pt``)
+spend one scale per tile, so their quantization error on a K-block of a
+weight is ``u_q · absmax(block)`` — *independent of the activations that
+multiply it*.  But the forward error it induces is not: a block whose
+input channels carry loud activations amplifies its weight rounding by
+the activation magnitude (the AWQ observation).  Calibration therefore
+scores each K-block by
+
+    score(block) = max_{k ∈ block}  act_absmax[k] · absmax(W[k, :])
+
+and assigns the top ``ratio_high`` fraction of blocks to the HIGH role
+(kept in the float format) while the quiet remainder drops to the integer
+low role.  The sort is a stable argsort over ``-scores``, so equal-score
+ties break by block index and the resulting map is a pure function of
+(weights, stats, ratio) — deterministic across processes, which keeps the
+plan-cache keys and serve warmup stable.
+
+Statistics are collected *online*: :class:`ActStats` folds per-channel
+absmax over any number of observed activation batches, keyed by channel
+dimension (every ksplit weight with ``K == dim`` consumes the same
+residual-stream statistics).  ``quantize_params`` then rebuilds every
+:class:`~repro.core.layout.KSplitWeight` leaf of a parameter tree under
+an int-containing :class:`~repro.core.formats.FormatSet` with the
+calibrated map — the output is an ordinary params pytree, served through
+``Engine(..., variants={tag: qparams})`` with zero extra machinery.
+
+NSplit weights fold data-driven column permutations into the *next*
+layer at init time, so re-mapping them post hoc would break that
+contract; they (and plain dense arrays) pass through unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import DEFAULT_FORMATS, FormatSet
+from repro.core.layout import KSplitWeight, NSplitWeight
+
+
+def activation_absmax(x) -> np.ndarray:
+    """Per-channel absmax of one activation batch ``[..., K] → [K]``."""
+    xa = np.abs(np.asarray(x, np.float32))
+    return xa.reshape(-1, xa.shape[-1]).max(axis=0)
+
+
+@dataclasses.dataclass
+class ActStats:
+    """Online per-channel activation absmax, keyed by channel dimension.
+
+    ``observe(x)`` folds a batch in (running elementwise max); ``get(k)``
+    returns the ``[k]`` absmax vector, or all-ones when dimension ``k``
+    was never observed (calibration then degrades to weight-only scores).
+    """
+
+    by_dim: dict = dataclasses.field(default_factory=dict)
+
+    def observe(self, x) -> "ActStats":
+        am = activation_absmax(x)
+        k = am.shape[0]
+        prev = self.by_dim.get(k)
+        self.by_dim[k] = am if prev is None else np.maximum(prev, am)
+        return self
+
+    def get(self, k: int) -> np.ndarray:
+        am = self.by_dim.get(k)
+        return np.ones(k, np.float32) if am is None else am
+
+
+def block_scores(w, act_amax: np.ndarray, tile: int) -> np.ndarray:
+    """Loudness score per K-block of ``W[K, N]``:
+    ``max_k act_absmax[k]·absmax(W[k,:])`` within each block (fp32)."""
+    wa = np.abs(np.asarray(w, np.float32))
+    k = wa.shape[0]
+    assert k % tile == 0, (k, tile)
+    row = wa.max(axis=1) * np.asarray(act_amax, np.float32)[:k]
+    return row.reshape(k // tile, tile).max(axis=1)
+
+
+def calibrated_cls(scores: np.ndarray, ratio_high: float,
+                   fset: FormatSet) -> np.ndarray:
+    """Class vector from block scores: top ``ratio_high`` fraction HIGH,
+    the rest the set's LOW role.  Stable argsort → deterministic map."""
+    nb = scores.shape[0]
+    n_hi = int(round(float(ratio_high) * nb))
+    cls = np.full(nb, fset.low, np.int8)
+    order = np.argsort(-np.asarray(scores, np.float64), kind="stable")
+    cls[order[:n_hi]] = fset.high
+    return cls
+
+
+def calibrate_ksplit(w: KSplitWeight, act_amax: np.ndarray,
+                     fset: FormatSet, ratio_high: float) -> KSplitWeight:
+    """Re-encode one ksplit weight under ``fset`` with the activation-aware
+    map.  The dense weight is reconstructed from the current buffers (so
+    calibration composes with whatever storage rounding already happened).
+
+    Scan-stacked weights (buffers carrying a leading layer dim, the aux
+    data shared) get ONE map for the whole stack — the class map is static
+    metadata every scanned layer must agree on — scored by the worst layer
+    per block (max over the stack)."""
+    stacked = max(b.ndim for b in w.bufs) == 3
+    layers = [w] if not stacked else [
+        KSplitWeight(tuple(b[layer] for b in w.bufs), w.k_cls, w.tile,
+                     w.shape, w.fset)
+        for layer in range(max(b.shape[0] for b in w.bufs if b.ndim == 3))]
+    denses = [lw.to_dense() for lw in layers]
+    scores = np.max([block_scores(d, act_amax, w.tile) for d in denses],
+                    axis=0)
+    cls = calibrated_cls(scores, ratio_high, fset)
+    rebuilt = [KSplitWeight.from_dense(d, cls, w.tile, fset) for d in denses]
+    if not stacked:
+        return rebuilt[0]
+    bufs = tuple(jnp.stack([r.bufs[code] for r in rebuilt])
+                 for code in fset.codes)
+    return KSplitWeight(bufs, rebuilt[0].k_cls, w.tile, w.shape, fset)
+
+
+def quantize_params(params, stats: ActStats | None = None, *,
+                    fset: FormatSet | None = None,
+                    ratio_high: float = 0.25):
+    """Activation-aware quantized variant of a parameter tree.
+
+    Every :class:`KSplitWeight` leaf is rebuilt under ``fset`` (default:
+    ``int8_pt`` replacing the LOW role of the repo default set) with the
+    calibrated class map; NSplit and dense leaves pass through unchanged.
+    Returns a params pytree suitable for ``Engine(variants={tag: ...})``.
+    """
+    from repro.core.formats import format_set
+    if fset is None:
+        fset = format_set("int8_pt", DEFAULT_FORMATS.names[-1])
+    stats = stats or ActStats()
+
+    def leaf(x):
+        if isinstance(x, KSplitWeight):
+            return calibrate_ksplit(x, stats.get(x.shape[0]), fset,
+                                    ratio_high)
+        return x
+
+    return jax.tree_util.tree_map(
+        leaf, params,
+        is_leaf=lambda x: isinstance(x, (KSplitWeight, NSplitWeight)))
+
+
+def map_report(w: KSplitWeight) -> dict:
+    """Bytes + class-mix summary of one calibrated weight.
+
+    Storage is derived from the class map (``tile_bytes`` per tile, scale
+    metadata included), which stays exact for scan-stacked weights where
+    the raw buffer shapes carry a leading layer dimension."""
+    k, n = w.shape
+    cls = np.asarray(w.k_cls.arr)
+    layers = max((b.shape[0] for b in w.bufs if b.ndim == 3), default=1)
+    per_layer = sum((int(n) // w.tile) * w.fset.tile_bytes(int(c), w.tile)
+                    for c in cls)
+    dense = layers * int(k) * int(n) * 4
+    return {
+        "shape": (int(k), int(n)),
+        "layers": int(layers),
+        "classes": {w.fset.names[c]: int((cls == c).sum())
+                    for c in np.unique(cls)},
+        "storage_bytes": int(layers * per_layer),
+        "bytes_vs_fp32": float(layers * per_layer) / dense,
+    }
+
+
+__all__ = [
+    "ActStats", "activation_absmax", "block_scores", "calibrate_ksplit",
+    "calibrated_cls", "map_report", "quantize_params",
+]

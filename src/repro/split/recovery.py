@@ -66,18 +66,22 @@ def split_dot_general(a32: jax.Array, b32: jax.Array, fmt: SplitFormat,
 
 def split_format_specs(fset: FormatSet) -> tuple:
     """Hashable per-class spec rows for the split-aware kernels:
-    ``(compute_dtype, dot_precision, buffer_dtype, slices, slice_dtype)``
-    — simple formats get ``slices=1`` and degenerate slice dtype."""
+    ``(compute_dtype, dot_precision, buffer_dtype, slices, slice_dtype,
+    qmax_or_None)`` — simple formats get ``slices=1`` and degenerate slice
+    dtype; per-tile-scaled integer formats carry their ``qmax`` so the
+    storeback epilogue folds absmax quantize-dequantize per C tile."""
     rows = []
     for f in fset.formats():
         if isinstance(f, SplitFormat):
             rows.append((jnp.dtype(f.compute_dtype).name, f.dot_precision,
                          jnp.dtype(f.buffer_dtype).name, int(f.slices),
-                         jnp.dtype(f.slice_dtype).name))
+                         jnp.dtype(f.slice_dtype).name, None))
         else:
+            qmax = (int(f.qmax)
+                    if getattr(f, "per_tile_scaled", False) else None)
             rows.append((jnp.dtype(f.compute_dtype).name, f.dot_precision,
-                         jnp.dtype(f.storage_dtype).name, 1,
-                         jnp.dtype(f.compute_dtype).name))
+                         jnp.dtype(f.buffer_dtype).name, 1,
+                         jnp.dtype(f.compute_dtype).name, qmax))
     return tuple(rows)
 
 
@@ -123,7 +127,7 @@ def split_gemm_ref(a, b, c, alpha: float = 1.0, beta: float = 0.0):
     for i in range(mt):
         for j in range(nt):
             cls_c = int(c.cls.arr[i, j])
-            compute, prec, _, slices, slice_dt = specs[cls_c]
+            compute, prec, _, slices, slice_dt = specs[cls_c][:5]
             op = jnp.dtype(compute)
             acc = jnp.zeros((t, t), jnp.float32)
             for k in range(kt):
@@ -148,11 +152,15 @@ def split_gemm_ref(a, b, c, alpha: float = 1.0, beta: float = 0.0):
             c32 = recombine([_tile(buf, i, j, t) for buf in c.bufs])
             out = alpha * acc + beta * c32
             for code, spec in enumerate(specs):
-                _, _, buf_dt, s_slices, s_sdt = spec
+                _, _, buf_dt, s_slices, s_sdt = spec[:5]
+                qmax = spec[5] if len(spec) > 5 else None
                 val = out
                 if s_slices > 1:
                     val = recombine(
                         split_slices(out, s_slices, jnp.dtype(s_sdt)))
+                elif qmax is not None:
+                    from repro.kernels.mp_gemm_tile import quantize_block
+                    val = quantize_block(out, qmax)
                 tile_val = jnp.where(cls_c == code, val, 0.0).astype(
                     jnp.dtype(buf_dt))
                 o_bufs[code] = jax.lax.dynamic_update_slice(

@@ -126,15 +126,27 @@ class GemmProblem:
             "".join(str(c) for c in self.c_classes)))
 
     # -- derived byte/pass facts (role fractions × registered formats) ------
+    def _elem_bytes(self, code: int) -> float:
+        """Storage bytes/elem of one class including amortized per-tile
+        metadata (e.g. the 4-byte fp32 scale of per-tile-scaled integer
+        formats, spread over tile² elements)."""
+        fset = self.fset
+        return (fset.bytes_of(code)
+                + fset.meta_bytes_of(code) / float(self.tile * self.tile))
+
     def bytes_per_elem(self, frac_high: float, frac_low8: float) -> float:
-        hb, lb, l8b = self.fset.role_bytes()
+        fset = self.fset
+        hb, lb = self._elem_bytes(fset.high), self._elem_bytes(fset.low)
+        l8b = (self._elem_bytes(fset.low8)
+               if fset.low8 is not None else 0.0)
         return (hb * frac_high + l8b * frac_low8
                 + lb * (1.0 - frac_high - frac_low8))
 
     def stream_bytes_per_elem(self) -> float:
         """Bytes/elem the dense multi-buffer (MPMatrix) layout streams: every
-        format's buffer travels, valid tile or not."""
-        return float(sum(self.fset.bytes_of(c) for c in self.fset.codes))
+        format's buffer travels, valid tile or not (per-tile scale metadata
+        amortized in; zero for plain float formats)."""
+        return float(sum(self._elem_bytes(c) for c in self.fset.codes))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -230,6 +230,81 @@ def test_oracle_rejects_split_misdispatch():
 
 
 # ---------------------------------------------------------------------------
+# per-tile-scaled integer formats (repro.quant)
+# ---------------------------------------------------------------------------
+
+INT_SETS = [format_set("int8_pt", "fp32"),
+            format_set("int4_pt", "bf16", "fp32"),
+            format_set("int4_pt", "int8_pt", "fp32")]
+
+
+@settings(max_examples=10, deadline=None)
+@given(size=st.sampled_from([32, 64]),
+       ratio=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+       path=st.sampled_from(["ref", "tile", "grouped"]),
+       which=st.integers(0, len(INT_SETS) - 1), seed=st.integers(0, 2))
+def test_int_paths_within_bound(size, ratio, path, which, seed):
+    """int8_pt/int4_pt classes meet the quantization-step bound (which
+    replaces mantissa roundoff, scaled to the per-tile absmax envelope)
+    on the general dispatch paths."""
+    fset = INT_SETS[which]
+    ratio8 = 0.25 if fset.low8 is not None else 0.0
+    _check_path(path, size, ratio, ratio8, seed, fset)
+
+
+@settings(max_examples=4, deadline=None)
+@given(size=st.sampled_from([32, 64]), ratio=st.sampled_from([0.0, 0.5]),
+       path=st.sampled_from(["ksplit_xla", "ksplit_pallas"]))
+def test_int_ksplit_paths_within_bound(size, ratio, path):
+    """The production serving layout: structured-K maps with int LOW
+    blocks stay inside the bound on both ksplit kernels."""
+    fset = format_set("int8_pt", "fp32")
+    a, b, A, B, C, maps = _ksplit_problem(size, ratio, 1, fset)
+    out = TD.execute_plan(GemmPlan(path=path, bm=T, bn=T, bk=T),
+                          A, B, C, alpha=1.0, beta=0.0)
+    rep = check_against_fp64(np.asarray(out.to_dense()), a, b,
+                             np.zeros((size, size)), *maps, T, fset)
+    assert rep["ok"], (path, size, ratio, rep["worst_ratio"])
+
+
+def test_oracle_rejects_int_misdispatch():
+    """Negative control: int8-class maps with A actually stored at int4
+    must violate the int8 quantization-step bound.  Random data lets
+    rounding errors random-walk inside the worst-case bound, so the
+    operand is adversarial: every payload element sits exactly on an
+    int4 half-step (3.5 under a per-tile scale of 1), making the int4
+    error coherent at the full half step across the contraction."""
+    fset = format_set("int8_pt", "fp32")
+    i4 = format_set("int4_pt", "fp32").fmt(0)
+    a = np.full((64, 64), 3.5, np.float32)
+    a[::T, ::T] = 7.0               # per-tile absmax → scale exactly 1.0
+    b = np.ones((64, 64), np.float32)
+    lo = np.full((8, 8), fset.low, np.int8)
+    a4 = np.asarray(i4.roundtrip(jnp.asarray(a), tile=T), np.float64)
+    assert np.abs(a4 - a).max() == pytest.approx(0.5)   # half of step 1
+    wrong = a4 @ np.asarray(b, np.float64)
+    rep = check_against_fp64(wrong, a, b, np.zeros_like(a),
+                             lo, lo, lo, T, fset)
+    assert not rep["ok"]
+    # the same product under the int4 bound (what actually ran) passes
+    ok = check_against_fp64(wrong, a, b, np.zeros_like(a), lo, lo, lo, T,
+                            format_set("int4_pt", "fp32"))
+    assert ok["ok"]
+
+
+def test_int_bound_tracks_quantization_step():
+    """The int class bounds are quantization-step-driven: int4's half step
+    (0.5/7) dominates int8's (0.5/127) by more than an order of
+    magnitude at the same K."""
+    s = format_set("int4_pt", "int8_pt", "fp32")
+    lo8 = np.full((4, 4), s.low8, np.int8)    # int4
+    lo = np.full((4, 4), s.low, np.int8)      # int8
+    b4 = class_error_bounds(lo8, lo8, lo8, k=64, fset=s)[s.low8]
+    b8 = class_error_bounds(lo, lo, lo, k=64, fset=s)[s.low]
+    assert b4 > 10.0 * b8
+
+
+# ---------------------------------------------------------------------------
 # distributed SUMMA stays inside the same bound
 # ---------------------------------------------------------------------------
 

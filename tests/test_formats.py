@@ -23,13 +23,18 @@ from repro.core.formats import (DEFAULT_FORMATS, FormatSet, PrecisionFormat,
 
 E5M2_SET = format_set("fp8_e5m2", "bf16", "fp32")
 FP16_SET = format_set("fp16", "fp32")
+INT8_SET = format_set("int8_pt", "fp32")
 ALL_SETS = [DEFAULT_FORMATS, E5M2_SET, FP16_SET,
             format_set("fp8_e5m2", "fp16", "fp32"),
             format_set("fp8_e4m3", "fp16", "fp32"),
             # split compound HIGH roles (repro.split)
             format_set("fp16", "split2_fp16"),
             format_set("fp8_e5m2", "fp16", "split2_fp16"),
-            format_set("fp16", "split3_e5m2")]
+            format_set("fp16", "split3_e5m2"),
+            # per-tile-scaled integer LOW roles (repro.quant)
+            INT8_SET,
+            format_set("int4_pt", "bf16", "fp32"),
+            format_set("int4_pt", "int8_pt", "fp32")]
 
 
 @pytest.fixture(autouse=True)
@@ -80,6 +85,17 @@ def test_format_set_roles_and_codes():
         format_set("fp4_imaginary", "fp32")
 
 
+def test_format_set_parse_aliases_and_ordering():
+    assert FormatSet.parse("q:s:d") == DEFAULT_FORMATS
+    assert FormatSet.parse("d:s:q") == DEFAULT_FORMATS       # order-free
+    assert FormatSet.parse("int8:d") == INT8_SET
+    assert FormatSet.parse("fp32,int4_pt") == format_set("int4_pt", "fp32")
+    # legacy "+"-joined plan-cache keys parse too
+    assert FormatSet.parse("fp8_e4m3+bf16+fp32") == DEFAULT_FORMATS
+    with pytest.raises(KeyError):
+        FormatSet.parse("d:fp4_imaginary")
+
+
 def test_device_pass_costs_come_from_registry():
     from repro.tune.device import DEVICE_TABLE
     v5e, a100 = DEVICE_TABLE["tpu-v5e"], DEVICE_TABLE["gpu-a100"]
@@ -125,9 +141,11 @@ def test_new_format_registered_once_works_end_to_end():
     assert "|bf16+tf32_sim|" in TS.plan_key(detect_device(), prob)
 
 
-@pytest.mark.parametrize("fs", [E5M2_SET, FP16_SET], ids=lambda f: f.key())
+@pytest.mark.parametrize("fs", [E5M2_SET, FP16_SET, INT8_SET],
+                         ids=lambda f: f.key())
 def test_new_formats_through_every_dispatch_path(fs):
-    """fp8_e5m2 / fp16 flow through ref, tile, grouped and ksplit paths."""
+    """fp8_e5m2 / fp16 / int8_pt flow through ref, tile, grouped and
+    ksplit paths."""
     from repro.tune import mp_matmul
     from repro.tune.costmodel import GemmPlan
     M, K, N, t = 16, 32, 16, 8
@@ -251,8 +269,43 @@ def test_roundtrip_matches_quantize_tile_ksplit(kt, seed, which):
     exp = _tilewise_quantized(
         w, np.repeat(k_cls[:, None], n // t, axis=1), t, fs)
     np.testing.assert_array_equal(np.asarray(ks.to_dense()), exp)
-    assert ks.storage_bytes() == sum(
-        t * n * fs.bytes_of(int(c)) for c in k_cls)
+    # meta-aware: each K-block row holds n/t tiles, each carrying its
+    # format's per-tile metadata (fp32 scale for the int formats, 0 else)
+    assert ks.storage_bytes() == int(sum(
+        (n // t) * fs.tile_bytes(int(c), t) for c in k_cls))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), t=st.sampled_from([8, 16]),
+       name=st.sampled_from(["int8_pt", "int4_pt"]),
+       scale_pow=st.sampled_from([-3.0, 0.0, 3.0]))
+def test_int_roundtrip_error_within_registry_step(seed, t, name, scale_pow):
+    """Per-tile symmetric-absmax round-trip: every element lands within
+    the registry-derived half step ``storage_roundoff()·absmax(tile)``,
+    at any magnitude (the scale is per tile), and re-encoding the decoded
+    mirror is bit-stable (idempotent)."""
+    fmt = get_format(name)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2 * t, 3 * t)).astype(np.float32)
+                    * 10.0 ** scale_pow)
+    qt = fmt.encode(x, tile=t)
+    assert qt.payload.dtype == jnp.int8
+    assert qt.meta.shape == (2, 3)          # one fp32 scale per tile
+    y = np.asarray(fmt.decode(qt), np.float64)
+    xa = np.asarray(x, np.float64)
+    step = fmt.storage_roundoff()           # 0.5 / qmax
+    for i in range(2):
+        for j in range(3):
+            blk = xa[i * t:(i + 1) * t, j * t:(j + 1) * t]
+            err = np.abs(y[i * t:(i + 1) * t, j * t:(j + 1) * t] - blk)
+            assert err.max() <= step * np.abs(blk).max() * (1 + 1e-5) + 1e-12
+    np.testing.assert_array_equal(
+        np.asarray(fmt.roundtrip(jnp.asarray(y, jnp.float32), tile=t)),
+        y.astype(np.float32))
+    # all-zero tiles survive (scale falls back to 1.0, no 0/0)
+    np.testing.assert_array_equal(
+        np.asarray(fmt.roundtrip(jnp.zeros((t, t)), tile=t)),
+        np.zeros((t, t), np.float32))
 
 
 def test_unknown_class_code_rejected_everywhere():

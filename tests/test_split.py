@@ -81,8 +81,8 @@ def test_split_roundtrip_error_scale_and_idempotence():
         scale = float(jnp.abs(x).max())
         err = float(jnp.abs(got - x).max()) / scale
         assert err <= slack * fmt.recovered_roundoff(), (fmt.name, err)
-        once = fmt.store(x)
-        np.testing.assert_array_equal(np.asarray(fmt.store(once)),
+        once = fmt.roundtrip(x)
+        np.testing.assert_array_equal(np.asarray(fmt.roundtrip(once)),
                                       np.asarray(once))
 
 
